@@ -1,0 +1,53 @@
+"""Benchmark harness utilities.
+
+CPU host runs 8 simulated devices; shapes are the paper's divided by SCALE so a
+call completes in ms on one core.  The reported quantity mirrors the paper's
+evaluation: *relative speedup of overlapped vs non-overlapping* (and vs
+host-dispatched decomposition).  Absolute TPU projections come from the
+dry-run roofline (EXPERIMENTS.md), not from CPU wall time.
+"""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=8 "
+    "--xla_disable_hlo_passes=all-reduce-promotion",
+)
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.compat import make_mesh
+
+SCALE = 8          # divide paper dims by this
+REPEATS = 5
+WARMUP = 2
+
+
+def mesh8():
+    return make_mesh((8,), ("model",))
+
+
+def mesh_tp(n=8):
+    return make_mesh((n,), ("model",))
+
+
+def time_fn(fn: Callable, *args, repeats=REPEATS, warmup=WARMUP) -> float:
+    """Median wall-time per call in microseconds (blocking on results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,57 @@
+"""Paper Fig. 10: sequence-parallel self-attention at growing sequence length —
+TileLink AG-KV overlap (ring, copy-engine mapping) vs non-overlap AllGather.
+
+Also prints the paper's overlap ratio
+  (comp_only + comm_only - overlapped) / comm_only
+measured from comm-only / compute-only decompositions.
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import overlap
+from repro.configs.paper import PAPER_ATTN
+from benchmarks.common import SCALE, mesh8, time_fn, row
+
+
+def main():
+    mesh = mesh8()
+    key = jax.random.PRNGKey(0)
+    for name, (heads, hd, seqs) in PAPER_ATTN.items():
+        h = max(heads // SCALE, 2)
+        for s in seqs[:2]:  # 16k, 32k (scaled)
+            s_ = s // SCALE
+            q = jax.device_put(
+                jax.random.normal(key, (1, h, s_, hd), jnp.float32),
+                NamedSharding(mesh, P(None, None, "model", None)))
+            k = jax.device_put(
+                jax.random.normal(key, (1, h, s_, hd), jnp.float32),
+                NamedSharding(mesh, P(None, None, "model", None)))
+            v = jax.device_put(
+                jax.random.normal(key, (1, h, s_, hd), jnp.float32),
+                NamedSharding(mesh, P(None, None, "model", None)))
+            specs = (P(None, None, "model", None),) * 3
+
+            ring = jax.jit(shard_map(
+                lambda *a: overlap.ring_attention(*a, axis="model", causal=True),
+                mesh, in_specs=specs, out_specs=P(None, None, "model", None)))
+            base = jax.jit(shard_map(
+                lambda *a: overlap.ag_attention_baseline(*a, axis="model",
+                                                         causal=True),
+                mesh, in_specs=specs, out_specs=P(None, None, "model", None)))
+            comm_only = jax.jit(shard_map(
+                lambda kk: jax.lax.all_gather(kk, "model", axis=2, tiled=True),
+                mesh, in_specs=specs[:1], out_specs=P(None, None, None, None)))
+
+            tb = time_fn(base, q, k, v)
+            tt = time_fn(ring, q, k, v)
+            tc = time_fn(comm_only, k) * 2  # K and V
+            ratio = max(0.0, min(1.0, (tb - tt) / max(tc, 1e-9)))
+            row(f"fig10/{name}/S={s}/non-overlap", tb, "1.00x")
+            row(f"fig10/{name}/S={s}/tilelink", tt,
+                f"{tb/tt:.2f}x;overlap_ratio={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 11: end-to-end LM train-step time, TileLink overlap vs
+operator-centric baseline, across model families (reduced configs on the
+8-device CPU mesh; the relative speedup is the paper's reported quantity)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import make_mesh
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.launch.specs import model_module
+from repro.launch.train import reduce_config
+from repro.parallel.context import ParallelContext
+from repro.parallel.sharding import place
+from repro.training import AdamWConfig, init_opt_state, make_train_step
+from benchmarks.common import time_fn, row
+
+MODELS = ["smollm-360m", "qwen2-72b", "starcoder2-7b", "gemma3-27b",
+          "granite-moe-3b-a800m", "deepseek-moe-16b"]
+
+
+def bench_model(arch: str, mesh, mode: str) -> float:
+    cfg = reduce_config(get_config(arch), d_model=128, vocab=512)
+    pc = ParallelContext(mesh=mesh, mode=mode)
+    mod = model_module(cfg)
+    params = place(mod.init(jax.random.PRNGKey(0), cfg, pc, jnp.float32),
+                   mesh, mod.specs(cfg, pc))
+    opt = init_opt_state(params)
+    step = make_train_step(mod, cfg, pc, AdamWConfig(total_steps=10),
+                           donate=False)
+    pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128, global_batch=4)
+    batch = pipe.host_batch()
+    return time_fn(lambda: step(params, opt, batch)[2]["loss"], repeats=3)
+
+
+def main():
+    mesh = make_mesh((1, 2, 4), ("pod", "data", "model"))
+    for arch in MODELS:
+        tb = bench_model(arch, mesh, "baseline")
+        tt = bench_model(arch, mesh, "overlap")
+        row(f"fig11/{arch}/non-overlap", tb, "1.00x")
+        row(f"fig11/{arch}/tilelink", tt, f"{tb/tt:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

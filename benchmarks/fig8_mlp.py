@@ -1,0 +1,51 @@
+"""Paper Fig. 8: six TP-MLP shapes — AG+GEMM, GEMM+RS, and the full MLP
+(AG+GEMM -> SiLU-Mul -> GEMM+RS), overlap vs non-overlap."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import overlap
+from repro.configs.paper import PAPER_MLP
+from benchmarks.common import SCALE, mesh8, time_fn, row
+
+
+def full_mlp(mode):
+    def f(x, w1, w2):
+        if mode == "overlap":
+            h = overlap.ag_matmul(x, w1, axis="model")
+            f_loc = h.shape[-1] // 2
+            a = jax.nn.silu(h[..., :f_loc]) * h[..., f_loc:]
+            return overlap.matmul_rs(a, w2, axis="model")
+        h = overlap.ag_matmul_baseline(x, w1, axis="model")
+        f_loc = h.shape[-1] // 2
+        a = jax.nn.silu(h[..., :f_loc]) * h[..., f_loc:]
+        return overlap.matmul_rs_baseline(a, w2, axis="model")
+    return f
+
+
+def main():
+    mesh = mesh8()
+    key = jax.random.PRNGKey(0)
+    for name, (s, h, i, src) in PAPER_MLP.items():
+        s_, h_, i_ = s // SCALE, h // SCALE, (i // SCALE // 16) * 16
+        x = jax.device_put(jax.random.normal(key, (s_, h_), jnp.float32),
+                           NamedSharding(mesh, P("model", None)))
+        w1 = jax.device_put(jax.random.normal(key, (h_, 2 * i_), jnp.float32),
+                            NamedSharding(mesh, P(None, "model")))
+        w2 = jax.device_put(jax.random.normal(key, (i_, h_), jnp.float32),
+                            NamedSharding(mesh, P("model", None)))
+        specs = ((P("model", None), P(None, "model"), P("model", None)),
+                 P("model", None))
+        base = jax.jit(shard_map(full_mlp("baseline"), mesh,
+                                 in_specs=specs[0], out_specs=specs[1]))
+        tl = jax.jit(shard_map(full_mlp("overlap"), mesh,
+                               in_specs=specs[0], out_specs=specs[1]))
+        tb = time_fn(base, x, w1, w2)
+        tt = time_fn(tl, x, w1, w2)
+        row(f"fig8/{name}({src})/non-overlap", tb, "1.00x")
+        row(f"fig8/{name}({src})/tilelink", tt, f"{tb/tt:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

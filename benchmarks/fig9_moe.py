@@ -1,0 +1,49 @@
+"""Paper Fig. 9: six MoE shapes — AG + GroupGEMM + TopkReduce + RS
+(double ring) vs non-overlapping AllGather/ReduceScatter."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.moe_overlap import ag_moe, ag_moe_baseline, moe_router
+from repro.configs.paper import PAPER_MOE
+from benchmarks.common import SCALE, mesh8, time_fn, row
+
+
+def main():
+    mesh = mesh8()
+    key = jax.random.PRNGKey(0)
+    for name, (s, h, i, e, topk) in PAPER_MOE.items():
+        s_, h_, i_ = s // SCALE, h // SCALE, (i // SCALE // 8) * 8
+        e = max(e, 8)
+        x = jax.device_put(jax.random.normal(key, (s_, h_), jnp.float32),
+                           NamedSharding(mesh, P("model", None)))
+        wr = jax.random.normal(key, (h_, e), jnp.float32)
+        wgu = jax.device_put(
+            jax.random.normal(key, (e, h_, 2 * i_), jnp.float32) * 0.1,
+            NamedSharding(mesh, P("model", None, None)))
+        wdn = jax.device_put(
+            jax.random.normal(key, (e, i_, h_), jnp.float32) * 0.1,
+            NamedSharding(mesh, P("model", None, None)))
+
+        def make(overlapped):
+            def f(xs, wgu_, wdn_):
+                ids, wts, _ = moe_router(xs, wr, num_experts=e, top_k=topk)
+                g = ag_moe if overlapped else ag_moe_baseline
+                return g(xs, ids, wts, wgu_, wdn_, axis="model")
+            return jax.jit(shard_map(
+                f, mesh,
+                in_specs=(P("model", None), P("model", None, None),
+                          P("model", None, None)),
+                out_specs=P("model", None)))
+
+        tb = time_fn(make(False), x, wgu, wdn)
+        tt = time_fn(make(True), x, wgu, wdn)
+        row(f"fig9/{name}(E={e},k={topk})/non-overlap", tb, "1.00x")
+        row(f"fig9/{name}(E={e},k={topk})/tilelink", tt, f"{tb/tt:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

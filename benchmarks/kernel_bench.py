@@ -1,0 +1,37 @@
+"""Decoupled design-space sweep (paper §3.1): comm tile count (channels, f_C)
+and tile order (ring vs bidirectional) for AG+GEMM — the paper's argument that
+communication and computation must tune independently."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import overlap, BlockChannel, CommSpec
+from benchmarks.common import mesh8, time_fn, row
+
+
+def main():
+    mesh = mesh8()
+    key = jax.random.PRNGKey(0)
+    s, h, i = 2048, 512, 1408
+    x = jax.device_put(jax.random.normal(key, (s, h), jnp.float32),
+                       NamedSharding(mesh, P("model", None)))
+    w = jax.device_put(jax.random.normal(key, (h, i), jnp.float32),
+                       NamedSharding(mesh, P(None, "model")))
+    base = None
+    for channels in (1, 2, 4):
+        for order in ("ring", "bidir_ring"):
+            ch = BlockChannel(axis="model", num_channels=channels,
+                              comm=CommSpec(order=order))
+            fn = jax.jit(shard_map(
+                lambda a, b: overlap.ag_matmul(a, b, axis="model", channel=ch),
+                mesh, in_specs=(P("model", None), P(None, "model")),
+                out_specs=P(None, "model")))
+            t = time_fn(fn, x, w)
+            if base is None:
+                base = t
+            row(f"kernel/ag_gemm/C={channels}/{order}", t, f"{base/t:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

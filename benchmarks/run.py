@@ -1,0 +1,44 @@
+"""Benchmark harness entry — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  CPU relative speedups mirror the
+paper's evaluation axis; absolute roofline projections live in EXPERIMENTS.md.
+"""
+import sys
+import traceback
+
+# common must be imported first: it pins the simulated device count
+from benchmarks import common  # noqa: F401
+
+from benchmarks import (
+    tab2_motivational, fig8_mlp, fig9_moe, fig10_attention, fig11_e2e,
+    kernel_bench,
+)
+
+TABLES = [
+    ("tab2", tab2_motivational),
+    ("fig8", fig8_mlp),
+    ("fig9", fig9_moe),
+    ("fig10", fig10_attention),
+    ("fig11", fig11_e2e),
+    ("kernel", kernel_bench),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in TABLES:
+        if only and only != name:
+            continue
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == '__main__':
+    main()

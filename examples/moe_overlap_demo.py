@@ -1,0 +1,50 @@
+"""Dynamic-mapping demo: the paper's AG+MoE double ring (Fig. 5).
+
+Routes tokens with a real top-k router (dynamic mapping tables travel with the
+data around the ring), runs the overlapped AG -> GroupGEMM -> TopkReduce -> RS
+chain, and checks it against a dense per-expert oracle.
+
+Run:  PYTHONPATH=src python examples/moe_overlap_demo.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map, make_mesh
+from repro.core.moe_overlap import ag_moe, moe_router
+
+E, TOPK, D, F, TOK = 16, 2, 64, 128, 512
+mesh = make_mesh((8,), ("model",))
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (TOK, D)) * 0.5
+wr = jax.random.normal(jax.random.PRNGKey(1), (D, E))
+wgu = jax.random.normal(jax.random.PRNGKey(2), (E, D, 2 * F)) * 0.1
+wdn = jax.random.normal(jax.random.PRNGKey(3), (E, F, D)) * 0.1
+
+def moe(xs, wgu_, wdn_):
+    ids, wts, aux = moe_router(xs, wr, num_experts=E, top_k=TOPK)
+    return ag_moe(xs, ids, wts, wgu_, wdn_, axis="model", capacity_factor=8.0)
+
+f = jax.jit(shard_map(
+    moe, mesh,
+    in_specs=(P("model", None), P("model", None, None), P("model", None, None)),
+    out_specs=P("model", None)))
+y = f(x, jax.device_put(wgu, NamedSharding(mesh, P("model", None, None))),
+      jax.device_put(wdn, NamedSharding(mesh, P("model", None, None))))
+
+# dense oracle
+probs = jax.nn.softmax(x @ wr, -1)
+topw, topi = jax.lax.top_k(probs, TOPK)
+topw = topw / topw.sum(-1, keepdims=True)
+dense = jnp.zeros_like(x)
+for e in range(E):
+    h = x @ wgu[e]
+    hh = jax.nn.silu(h[:, :F]) * h[:, F:]
+    dense += (((topi == e) * topw).sum(-1))[:, None] * (hh @ wdn[e])
+np.testing.assert_allclose(np.asarray(y), np.asarray(dense), atol=1e-4)
+print(f"AG+MoE double ring over 8 ranks == dense oracle "
+      f"(E={E}, top-{TOPK}, {TOK} tokens): OK")

@@ -1,0 +1,47 @@
+"""Quickstart: TileLink tile-centric overlap in 60 lines.
+
+Builds an 8-device mesh, runs the paper's motivating TP-MLP both ways
+(operator-centric non-overlap vs TileLink ring overlap), verifies they agree,
+and shows the collective schedule difference in the compiled HLO.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map, make_mesh
+from repro.core import compile_overlap, BlockChannel, CommSpec
+
+mesh = make_mesh((8,), ("model",))
+channel = BlockChannel(axis="model", num_channels=2,
+                       comm=CommSpec(order="ring", resource="dma"))
+
+# frontend: compile tile programs for both resource mappings
+ag_gemm = compile_overlap("ag_matmul", channel, overlapped=True)
+ag_gemm_base = compile_overlap("ag_matmul", channel, overlapped=False)
+
+S, H, I = 1024, 512, 1408
+key = jax.random.PRNGKey(0)
+x = jax.device_put(jax.random.normal(key, (S, H)), NamedSharding(mesh, P("model", None)))
+w = jax.device_put(jax.random.normal(key, (H, I)), NamedSharding(mesh, P(None, "model")))
+
+specs = dict(in_specs=(P("model", None), P(None, "model")), out_specs=P(None, "model"))
+f_tl = jax.jit(shard_map(ag_gemm, mesh, **specs))
+f_nb = jax.jit(shard_map(ag_gemm_base, mesh, **specs))
+
+y1, y2 = f_tl(x, w), f_nb(x, w)
+np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3)
+print("TileLink overlap == non-overlap baseline: OK")
+
+for name, f in [("tilelink", f_tl), ("non-overlap", f_nb)]:
+    hlo = f.lower(x, w).compile().as_text()
+    counts = {op: hlo.count(f" {op}(") for op in
+              ("all-gather", "collective-permute", "all-reduce")}
+    print(f"{name:12s} collective schedule: {counts}")
+print("note: tilelink decomposes the AllGather into ring permutes that XLA "
+      "overlaps with the per-tile GEMMs (copy-engine resource mapping)")

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill-into-cache + jit'd decode loop.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.argv = [sys.argv[0], "--arch", "smollm-360m", "--reduce",
+            "--batch", "4", "--prompt-len", "16", "--new-tokens", "24"] + sys.argv[1:]
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Assigned architecture configs (10) + paper benchmark shapes."""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, Shape, SHAPES, get_config
+
+from repro.configs import (  # noqa: F401 — registration side effects
+    granite_moe_3b_a800m,
+    deepseek_moe_16b,
+    paligemma_3b,
+    zamba2_2p7b,
+    qwen2_72b,
+    smollm_360m,
+    starcoder2_7b,
+    gemma3_27b,
+    mamba2_2p7b,
+    seamless_m4t_medium,
+)
+from repro.configs.base import _REGISTRY as REGISTRY
+
+ARCH_NAMES = sorted(REGISTRY)
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "Shape", "SHAPES",
+           "get_config", "REGISTRY", "ARCH_NAMES"]

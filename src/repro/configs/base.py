@@ -1,0 +1,156 @@
+"""Architecture configuration schema + input-shape registry.
+
+One ``ArchConfig`` per assigned architecture lives in ``repro/configs/<id>.py``.
+``SHAPES`` is the assignment's per-arch input-shape set (LM-family: shared).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "Shape", "SHAPES", "get_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int                 # routed experts (pre-padding)
+    top_k: int
+    d_expert: int                    # expert intermediate size
+    num_shared: int = 0              # shared experts (DeepSeek-style)
+    first_k_dense: int = 0           # leading layers that use a dense MLP
+    dense_d_ff: int = 0              # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int                     # N
+    headdim: int = 64                # P
+    n_groups: int = 1                # G (B/C groups)
+    d_conv: int = 4
+    expand: int = 2                  # d_inner = expand * d_model
+    chunk: int = 64                  # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rope_theta_local: float = 1e4           # theta for attn_local layers (gemma3)
+    local_window: Optional[int] = None      # sliding-window size for local layers
+    pattern: Tuple[str, ...] = ("attn",)    # layer-kind pattern, tiled over depth
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder_layers: int = 0          # >0 -> encoder-decoder
+    frontend: Optional[str] = None   # "vision" | "audio" stub frontends
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    tie_embeddings: bool = False
+    sub_quadratic: bool = False      # eligible for long_500k decode
+    # serving defaults
+    enc_len: int = 4096              # stub encoder length for enc-dec decode
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(1, self.n_heads))
+
+    def layer_kind(self, i: int) -> str:
+        if self.moe and i < self.moe.first_k_dense:
+            return "attn_dense"      # leading dense-MLP layers (DeepSeek)
+        return self.pattern[i % len(self.pattern)]
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND model-FLOPs accounting)."""
+        d, l = self.d_model, self.n_layers
+        hd = self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for i in range(l):
+            kind = self.layer_kind(i)
+            if kind in ("attn", "attn_local", "attn_dense", "shared_attn"):
+                total += attn
+            if kind == "mamba" and self.ssm is not None:
+                di = self.ssm.expand * d
+                h = di // self.ssm.headdim
+                total += d * (2 * di + h + 2 * self.ssm.n_groups * self.ssm.d_state)
+                total += di * d + self.ssm.d_conv * di
+            if self.moe is not None and kind != "mamba":
+                if kind == "attn_dense":
+                    total += 3 * d * self.moe.dense_d_ff
+                else:
+                    e = self.moe.num_experts + self.moe.num_shared
+                    total += e * 3 * d * self.moe.d_expert + d * self.moe.num_experts
+            elif kind in ("attn", "attn_local", "shared_attn") and self.d_ff:
+                total += 3 * d * self.d_ff
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + 3 * d * self.d_ff + attn)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        e_all = self.moe.num_experts + self.moe.num_shared
+        e_act = self.moe.top_k + self.moe.num_shared
+        n_moe_layers = sum(
+            1 for i in range(self.n_layers)
+            if self.layer_kind(i) not in ("attn_dense", "mamba")
+        )
+        inactive = n_moe_layers * (e_all - e_act) * 3 * d * self.moe.d_expert
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+_REGISTRY = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        from repro import configs as _c  # populates registry
+
+        del _c
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs():
+    get_config.__wrapped__ = None  # ensure registry import side effect
+    if not _REGISTRY:
+        from repro import configs as _c
+
+        del _c
+    return dict(_REGISTRY)

@@ -1,0 +1,21 @@
+"""deepseek-moe-16b [moe] — 28L d=2048 16H (GQA kv=16) expert d_ff=1408,
+vocab 102400; 2 shared + 64 routed top-6, fine-grained; first layer dense.
+[arXiv:2401.06066]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    vocab_size=102400,
+    head_dim=128,
+    rope_theta=1e4,
+    pattern=("attn",),
+    moe=MoEConfig(num_experts=64, top_k=6, d_expert=1408, num_shared=2,
+                  first_k_dense=1, dense_d_ff=10944),
+    act="silu",
+))

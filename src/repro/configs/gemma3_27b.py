@@ -1,0 +1,23 @@
+"""gemma3-27b [dense] — 62L d=5376 32H (GQA kv=16) d_ff=21504 vocab 262144;
+5:1 local(sliding-1024):global attention, 128k context. [hf:google/gemma-3]
+sub_quadratic: local layers keep O(window) KV -> eligible for long_500k."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    d_ff=21504,
+    vocab_size=262144,
+    head_dim=128,
+    rope_theta=1e6,
+    rope_theta_local=1e4,
+    local_window=1024,
+    pattern=("attn_local",) * 5 + ("attn",),
+    act="gelu",
+    tie_embeddings=True,
+    sub_quadratic=True,
+))

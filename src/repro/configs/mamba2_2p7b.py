@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm] — 64L d=2560 attn-free, ssm_state=128, SSD.
+[arXiv:2405.21060]  AG-KV overlap inapplicable (no attention) — the paper's
+technique applies to in/out projections; see DESIGN.md §Arch-applicability."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    pattern=("mamba",),
+    ssm=SSMConfig(d_state=128, headdim=64, n_groups=1, d_conv=4, expand=2),
+    act="silu",
+    tie_embeddings=True,
+    sub_quadratic=True,
+))

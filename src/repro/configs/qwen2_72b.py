@@ -1,0 +1,19 @@
+"""qwen2-72b [dense] — 80L d=8192 64H (GQA kv=8) d_ff=29568 vocab 152064;
+GQA with QKV bias. [arXiv:2407.10671]  (Paper Table 4's MLP-6 shape.)"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    pattern=("attn",),
+    act="silu",
+))

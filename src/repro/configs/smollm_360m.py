@@ -1,0 +1,20 @@
+"""smollm-360m [dense] — 32L d=960 15H (GQA kv=5) d_ff=2560 vocab 49152;
+llama-arch small. [hf:HuggingFaceTB]  Awkward 15q/5kv GQA on TP=16 is realized
+via GQALayout padding (16q/8kv with grad-masked zero pads) — see DESIGN.md."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    head_dim=64,
+    rope_theta=1e4,
+    pattern=("attn",),
+    act="silu",
+    tie_embeddings=True,
+))

@@ -1,0 +1,11 @@
+"""TileLink core: tile-centric primitives, mappings, schedules, overlap compiler."""
+from repro.core.channels import BlockChannel, CommSpec, CompSpec
+from repro.core.mapping import StaticTileMapping, DynamicTileMapping, build_moe_dynamic_mapping
+from repro.core.compiler import compile_overlap
+from repro.core import overlap, schedules, moe_overlap
+
+__all__ = [
+    "BlockChannel", "CommSpec", "CompSpec",
+    "StaticTileMapping", "DynamicTileMapping", "build_moe_dynamic_mapping",
+    "compile_overlap", "overlap", "schedules", "moe_overlap",
+]

@@ -1,0 +1,64 @@
+"""BlockChannel — the tile-centric mapping context (paper §6).
+
+The paper threads a special ``BlockChannel`` parameter through generated kernels;
+it "encapsulates distributed mapping metadata including current process rank,
+total world size, synchronization barrier configurations, and producer/consumer
+block relationships".  Here it is an explicit dataclass consumed by both overlap
+backends (XLA shard_map schedules and fused Pallas kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["BlockChannel", "CommSpec", "CompSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Communication half of the decoupled design space (paper §3.1).
+
+    tile:     communication tile size along the sharded dim (paper's Tm_p).
+    order:    tile order — "ring" | "bidir_ring" | "all2all" (paper Fig. 2b).
+    resource: "dma" maps transfers to the async DMA/ICI engine (copy-engine
+              mapping); "core" issues copies from the compute core (paper Fig 2c).
+    mode:     "push" | "pull" (paper §3.2.2); on TPU ICI RDMA is push-native, so
+              pull is realized SPMD-symmetrically (each rank pushes its shard).
+    """
+
+    tile: int = 128
+    order: str = "ring"
+    resource: str = "dma"
+    mode: str = "push"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompSpec:
+    """Computation half of the decoupled design space.
+
+    tile: (tm, tn, tk) MXU tile for the consumer compute kernel — chosen
+    independently from CommSpec.tile (the core decoupling of the paper).
+    """
+
+    tile: Tuple[int, int, int] = (128, 128, 128)
+    accum_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockChannel:
+    """Tile-centric mapping context shared by producer and consumer.
+
+    axis:          mesh axis name the collective runs over (e.g. "model").
+    num_channels:  barrier channels per rank (paper's C; controls f_C granularity
+                   and == number of outstanding DMA chunks per rank here).
+    comm/comp:     the two independent halves of the design space.
+    """
+
+    axis: str
+    num_channels: int = 1
+    comm: CommSpec = CommSpec()
+    comp: CompSpec = CompSpec()
+    name: Optional[str] = None
+
+    def with_(self, **kw) -> "BlockChannel":
+        return dataclasses.replace(self, **kw)

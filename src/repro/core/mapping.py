@@ -1,0 +1,215 @@
+"""Tile-centric mappings (paper §4.1).
+
+TileLink's backend links communication and computation through three mappings:
+
+  f_S : tile_id -> shape range  (which slice of the global tensor a tile covers)
+  f_R : tile_id -> rank         (which device owns / produces the tile)
+  f_C : tile_id -> channel      (which barrier/semaphore channel guards the tile)
+
+Mappings come in two flavors:
+
+  * **Static** (affine, decidable at compile/trace time) — used for fixed sharding
+    such as tensor-parallel MLP and sequence-parallel attention.  Implemented with
+    the exact affine formulas of the paper:
+
+        M_per_rank    = ceil(M / R)
+        M_per_channel = ceil(M / (R * C))
+        range_M       = [tile_id * Tm, tile_id * Tm + Tm)
+        src_rank      = floor(tile_id / floor(M_per_rank / Tm))
+        channel       = floor(tile_id / floor(M_per_channel / Tm))
+
+  * **Dynamic** (lookup tables filled at runtime) — required when the sharding is
+    data-dependent (MoE routing).  The *access pattern* to the tables is fixed at
+    trace time; the table *values* are runtime tensors.
+
+Every function exists in two forms: a Python-int form (used while building static
+schedules at trace time) and a traced ``jnp`` form (used inside kernels / jitted
+code, including Pallas kernel bodies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["StaticTileMapping", "DynamicTileMapping", "cdiv"]
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division (host-side)."""
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticTileMapping:
+    """Affine tile-centric mapping over a 1-D sharded dimension of extent ``dim``.
+
+    Args:
+      dim:          global extent of the sharded dimension (paper's M).
+      tile:         producer tile size along the dimension (paper's Tm_p).
+      world_size:   number of ranks R.
+      num_channels: barrier channels per rank C (paper's channel mapping).
+    """
+
+    dim: int
+    tile: int
+    world_size: int
+    num_channels: int = 1
+
+    # ---- derived (host ints) -------------------------------------------------
+    @property
+    def per_rank(self) -> int:
+        return cdiv(self.dim, self.world_size)
+
+    @property
+    def per_channel(self) -> int:
+        return cdiv(self.dim, self.world_size * self.num_channels)
+
+    @property
+    def tiles_per_rank(self) -> int:
+        return max(1, self.per_rank // self.tile)
+
+    @property
+    def tiles_per_channel(self) -> int:
+        return max(1, self.per_channel // self.tile)
+
+    @property
+    def num_tiles(self) -> int:
+        return cdiv(self.dim, self.tile)
+
+    # ---- f_S / f_R / f_C : host-side -----------------------------------------
+    def shape_range(self, tile_id: int) -> Tuple[int, int]:
+        """f_S — [lo, hi) slice of the global dimension covered by ``tile_id``."""
+        lo = tile_id * self.tile
+        return lo, min(lo + self.tile, self.dim)
+
+    def rank(self, tile_id: int) -> int:
+        """f_R — source rank of ``tile_id`` (paper's src_rank formula)."""
+        return tile_id // self.tiles_per_rank
+
+    def channel(self, tile_id: int) -> int:
+        """f_C — global channel index of ``tile_id`` (paper's channel formula)."""
+        return tile_id // self.tiles_per_channel
+
+    def channel_in_rank(self, tile_id: int) -> int:
+        """Channel index local to the owning rank (0..C-1)."""
+        return self.channel(tile_id) % self.num_channels
+
+    def tiles_of_rank(self, rank: int) -> range:
+        """Inverse of f_R: tile ids produced by ``rank``."""
+        return range(rank * self.tiles_per_rank, (rank + 1) * self.tiles_per_rank)
+
+    # ---- f_S / f_R / f_C : traced (usable inside jit / Pallas) ---------------
+    def shape_range_t(self, tile_id):
+        lo = tile_id * self.tile
+        return lo, jnp.minimum(lo + self.tile, self.dim)
+
+    def rank_t(self, tile_id):
+        return tile_id // self.tiles_per_rank
+
+    def channel_t(self, tile_id):
+        return tile_id // self.tiles_per_channel
+
+    def validate(self) -> None:
+        if self.dim % self.tile:
+            raise ValueError(f"tile {self.tile} must divide dim {self.dim}")
+        if self.per_rank % self.tile:
+            raise ValueError(
+                f"tile {self.tile} must divide per-rank extent {self.per_rank}"
+            )
+        if self.tiles_per_rank % self.num_channels:
+            # the paper's affine f_C assumes channels evenly tile a rank's tiles
+            raise ValueError(
+                f"num_channels {self.num_channels} must divide tiles-per-rank "
+                f"{self.tiles_per_rank}"
+            )
+
+
+@dataclasses.dataclass
+class DynamicTileMapping:
+    """Lookup-table mapping (paper §4.1, dynamic mapping).
+
+    ``f_S_low/f_S_high/f_R/f_C`` are runtime integer arrays indexed by tile_id.
+    The values are produced by dynamic logic (e.g. MoE routing); the *access*
+    (a gather at ``tile_id``) is fixed at trace time — exactly the paper's design.
+    """
+
+    f_S_low: jnp.ndarray   # [num_tiles] int32 — inclusive low of shape range
+    f_S_high: jnp.ndarray  # [num_tiles] int32 — exclusive high
+    f_R: jnp.ndarray       # [num_tiles] int32 — owning rank
+    f_C: jnp.ndarray       # [num_tiles] int32 — channel
+
+    def shape_range_t(self, tile_id):
+        return self.f_S_low[tile_id], self.f_S_high[tile_id]
+
+    def rank_t(self, tile_id):
+        return self.f_R[tile_id]
+
+    def channel_t(self, tile_id):
+        return self.f_C[tile_id]
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.f_S_low.shape[0])
+
+    @staticmethod
+    def from_group_sizes(group_sizes: jnp.ndarray, tile: int, experts_per_rank: int):
+        """Build the MoE dynamic mapping from per-expert token counts.
+
+        Given ``group_sizes[e]`` = number of tokens routed to expert ``e`` (already
+        aligned/padded to ``tile``), returns a mapping whose tile ``t`` covers rows
+        ``[f_S_low[t], f_S_high[t])`` of the expert-sorted token buffer, owned by
+        rank ``f_R[t] = e // experts_per_rank``.
+
+        All shapes are static (max tiles); empty tiles have low == high.
+        """
+        num_experts = group_sizes.shape[0]
+        offsets = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes.astype(jnp.int32))]
+        )
+        # static upper bound on tiles per expert
+        total = offsets[-1]
+        del total  # traced; tiles laid out per-expert with static max below
+        max_tiles_per_expert = None  # computed by caller via static capacity
+        raise NotImplementedError(
+            "Use moe.build_dynamic_mapping (capacity-static version); "
+            "kept here as documentation of the table layout."
+        )
+
+
+def build_moe_dynamic_mapping(
+    group_offsets: jnp.ndarray,
+    tiles_per_expert: int,
+    tile: int,
+    experts_per_rank: int,
+) -> DynamicTileMapping:
+    """Capacity-static MoE dynamic mapping.
+
+    Args:
+      group_offsets: [E+1] int32 prefix sums of (tile-aligned) per-expert rows in
+        the expert-sorted token buffer.
+      tiles_per_expert: static max tiles each expert may occupy (capacity / tile).
+      tile: row-tile size.
+      experts_per_rank: experts hosted per rank (EP layout) — defines f_R.
+
+    Returns a DynamicTileMapping with ``E * tiles_per_expert`` tiles; tile ``t``
+    belongs to expert ``t // tiles_per_expert``; tiles past an expert's actual row
+    count are empty (low == high) and consumers skip them.
+    """
+    num_experts = group_offsets.shape[0] - 1
+    e_ids = jnp.repeat(jnp.arange(num_experts, dtype=jnp.int32), tiles_per_expert)
+    t_in_e = jnp.tile(jnp.arange(tiles_per_expert, dtype=jnp.int32), num_experts)
+    base = group_offsets[e_ids]
+    end = group_offsets[e_ids + 1]
+    low = jnp.minimum(base + t_in_e * tile, end)
+    high = jnp.minimum(low + tile, end)
+    ranks = e_ids // experts_per_rank
+    channels = e_ids  # one channel per expert
+    return DynamicTileMapping(
+        f_S_low=low.astype(jnp.int32),
+        f_S_high=high.astype(jnp.int32),
+        f_R=ranks.astype(jnp.int32),
+        f_C=channels.astype(jnp.int32),
+    )

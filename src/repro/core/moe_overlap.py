@@ -1,0 +1,160 @@
+"""AG + MoE overlap (paper Fig. 5) — dynamic mapping, XLA backend.
+
+The paper's hardest case: AllGather + Gather + GroupGEMM + TopkReduce +
+ReduceScatter with *dynamic* tile mappings (token routing known only at
+runtime).  Here it is lowered as a fused **double ring** inside shard_map:
+
+  * an all-gather ring rotates token chunks (+ their routing tables) around the
+    EP axis — the dynamic mapping tables f_R/f_S travel with the data exactly as
+    the paper's lookup tables do;
+  * a reduce-scatter ring accumulates combined expert outputs, consuming each
+    token chunk one hop after it arrives.
+
+Stage ``s`` of the RS ring computes the local-expert FFN for the chunk that the
+AG ring delivered at stage ``s`` while both rings' permutes are in flight — an
+extended producer-consumer chain (AG -> GroupGEMM -> TopkReduce -> RS) matching
+the paper's §7.2 MoE kernel, with the ICI DMA engine as the copy resource.
+
+Expert dispatch inside a chunk uses capacity-based one-hot dispatch (GShard
+style) — the XLA-friendly realization of the paper's Gather/Scatter fusion; the
+Pallas backend (kernels/grouped_matmul.py) implements the sorted-token
+group-GEMM with explicit dynamic mapping tables instead.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ag_moe", "ag_moe_baseline", "local_expert_ffn", "moe_router"]
+
+
+def moe_router(x, w_router, *, num_experts: int, top_k: int, valid_experts: Optional[int] = None):
+    """Top-k softmax router. Returns (topk_ids i32 [m,k], topk_w f32 [m,k], aux_loss).
+
+    ``valid_experts`` masks padding experts (EP divisibility padding) with -inf
+    logits so they are never selected.
+    """
+    logits = jnp.einsum("md,de->me", x.astype(jnp.float32), w_router.astype(jnp.float32))
+    if valid_experts is not None and valid_experts < num_experts:
+        pad_mask = jnp.arange(num_experts) >= valid_experts
+        logits = jnp.where(pad_mask[None, :], -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_ids = lax.top_k(probs, top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    ne = valid_experts or num_experts
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((num_experts,), jnp.float32).at[topk_ids.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = ne * jnp.sum(me * ce)
+    return topk_ids.astype(jnp.int32), topk_w, aux
+
+
+def _dispatch_tables(local_ids, valid, e_loc: int, cap: int, dtype):
+    """Capacity dispatch [m, E_loc, cap] from per-(token,k) local expert ids."""
+    m, k = local_ids.shape
+    onehot = jax.nn.one_hot(local_ids, e_loc, dtype=jnp.float32) * valid[..., None]
+    flat = onehot.reshape(m * k, e_loc)
+    pos = jnp.cumsum(flat, axis=0) - flat  # position within expert, per (t,k)
+    keep = (pos < cap) * flat
+    disp = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) * keep[..., None]
+    return disp.reshape(m, k, e_loc, cap).astype(dtype)
+
+
+def local_expert_ffn(
+    x, topk_ids, topk_w, w_gu, w_down, *, e_lo: int, cap: int, act=jax.nn.silu
+):
+    """FFN through the experts hosted locally; zeros for foreign-routed tokens.
+
+    x: [m, d]; topk_ids/topk_w: [m, k]; w_gu: [E_loc, d, 2f] fused gate+up;
+    w_down: [E_loc, f, d].  Returns [m, d] partial combined output.
+    """
+    e_loc = w_gu.shape[0]
+    local = topk_ids - e_lo
+    valid = ((local >= 0) & (local < e_loc)).astype(jnp.float32)
+    local = jnp.where(valid > 0, local, 0).astype(jnp.int32)
+
+    disp_mkec = _dispatch_tables(local, valid, e_loc, cap, x.dtype)  # [m,k,E,c]
+    disp = disp_mkec.sum(axis=1)  # [m, E, c] — 0/1 (slots unique per (t,k))
+    comb = jnp.einsum("mkec,mk->mec", disp_mkec, topk_w.astype(x.dtype))
+
+    x_e = jnp.einsum("mec,md->ecd", disp, x)  # gather to [E_loc, cap, d]
+    f = w_down.shape[1]
+    h = jnp.einsum("ecd,edf->ecf", x_e, w_gu, preferred_element_type=jnp.float32)
+    h = (act(h[..., :f]) * h[..., f:]).astype(x.dtype)
+    y_e = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32)
+    return jnp.einsum("mec,ecd->md", comb, y_e.astype(x.dtype))
+
+
+def ag_moe(
+    x, topk_ids, topk_w, w_gu, w_down, *, axis: str, capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+):
+    """Overlapped AG + MoE + RS double ring (see module docstring).
+
+    Per-shard: x [m_loc, d] (token chunk, sharded over ``axis``), expert weights
+    local to the rank (EP).  Returns [m_loc, d] combined outputs for the local
+    token chunk.
+    """
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    m_loc, d = x.shape
+    k = topk_ids.shape[1]
+    e_loc = w_gu.shape[0]
+    e_total = e_loc * r_axis
+    cap = _capacity(m_loc, k, e_total, capacity_factor)
+
+    to_left = [(j, (j - 1) % r_axis) for j in range(r_axis)]
+    e_lo = rank * e_loc
+
+    cur, cur_ids, cur_w = x, topk_ids, topk_w
+    acc = None
+    for s in range(r_axis):
+        if s < r_axis - 1:
+            nxt = lax.ppermute(cur, axis, to_left)       # tile_push_data (tokens)
+            nxt_ids = lax.ppermute(cur_ids, axis, to_left)  # dynamic f_R table travels
+            nxt_w = lax.ppermute(cur_w, axis, to_left)
+        part = local_expert_ffn(
+            cur, cur_ids, cur_w, w_gu, w_down, e_lo=e_lo, cap=cap, act=act
+        )
+        acc = part if s == 0 else lax.ppermute(acc, axis, to_left) + part
+        if s < r_axis - 1:
+            cur, cur_ids, cur_w = nxt, nxt_ids, nxt_w
+    # acc at rank r holds segment (r-1): one final hop aligns segments to ranks
+    return lax.ppermute(acc, axis, to_left)
+
+
+def ag_moe_baseline(
+    x, topk_ids, topk_w, w_gu, w_down, *, axis: str, capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+):
+    """Non-overlapping reference: AllGather tokens+tables, GroupGEMM, ReduceScatter."""
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    m_loc, _ = x.shape
+    k = topk_ids.shape[1]
+    e_loc = w_gu.shape[0]
+    e_total = e_loc * r_axis
+    cap = _capacity(m_loc, k, e_total, capacity_factor)  # per-chunk capacity
+
+    xg = lax.all_gather(x, axis, axis=0, tiled=False)          # [R, m_loc, d]
+    idg = lax.all_gather(topk_ids, axis, axis=0, tiled=False)
+    wg = lax.all_gather(topk_w, axis, axis=0, tiled=False)
+    e_lo = rank * e_loc
+
+    # chunk-wise expert FFN keeps capacity semantics identical to the ring path
+    part = jax.vmap(
+        lambda xc, ic, wc: local_expert_ffn(
+            xc, ic, wc, w_gu, w_down, e_lo=e_lo, cap=cap, act=act
+        )
+    )(xg, idg, wg)  # [R, m_loc, d]
+    out = lax.psum_scatter(part, axis, scatter_dimension=0, tiled=False)
+    return out.reshape(m_loc, -1)
+
+
+def _capacity(m: int, k: int, e_total: int, factor: float) -> int:
+    cap = int(m * k / e_total * factor) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to multiple of 8

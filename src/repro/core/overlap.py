@@ -1,0 +1,339 @@
+"""XLA overlap backend — tile-granular compute/communication overlap in shard_map.
+
+This module lowers TileLink tile programs to JAX/XLA:TPU primitives.  The paper's
+resource-mapping choice "communication on the copy engine" is realized by
+expressing the producer/consumer tile graph as SSA dataflow over
+``lax.ppermute`` steps: XLA:TPU's latency-hiding scheduler issues each
+``collective-permute-start`` on the ICI DMA engines and overlaps it with the MXU
+compute of the previously received tile.  The paper's barriers become SSA data
+dependencies — release/acquire consistency is structural (a tile's matmul
+consumes exactly the permuted value, so it can never be hoisted above the
+"wait"), which satisfies §4.2 of the paper by construction.
+
+Every function here is a *per-shard* function: call it inside ``shard_map`` (the
+model layers do), or through the ``shard_mapped`` convenience wrapper.
+
+Functions come in paper-faithful pairs:
+
+  non-overlapping baseline            overlapped (TileLink)
+  ----------------------------------  -------------------------------------
+  ag_matmul_baseline                  ag_matmul          (AG + GEMM)
+  matmul_rs_baseline                  matmul_rs          (GEMM + ring RS, Fig. 4)
+  ag_attention_baseline               ring_attention     (AG-KV + attn, Fig. 6)
+  ag_moe_baseline                     ag_moe             (AG + MoE, Fig. 5)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.channels import BlockChannel
+
+__all__ = [
+    "ag_matmul", "ag_matmul_baseline",
+    "matmul_rs", "matmul_rs_baseline",
+    "ring_attention", "ag_attention_baseline",
+    "psum_scatter_ring",
+]
+
+
+def _dot(a, b, accum=jnp.float32):
+    """MXU-friendly contraction of the last dim of a with first dim of b."""
+    return lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=accum
+    )
+
+
+def _row_update(out, part, row):
+    """dynamic_update_slice of ``part`` into dim -2 of ``out`` at ``row``."""
+    idx = (0,) * (out.ndim - 2) + (row, 0)
+    return lax.dynamic_update_slice(out, part, idx)
+
+
+def _row_slice(x, row, m):
+    """dynamic_slice of ``m`` rows from dim -2 at ``row``."""
+    idx = (0,) * (x.ndim - 2) + (row, 0)
+    sizes = x.shape[:-2] + (m, x.shape[-1])
+    return lax.dynamic_slice(x, idx, sizes)
+
+
+# -----------------------------------------------------------------------------
+# AG + GEMM  (column-parallel producer/consumer pair)
+# -----------------------------------------------------------------------------
+
+def ag_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    axis: str,
+    channel: Optional[BlockChannel] = None,
+    out_dtype=None,
+):
+    """Overlapped AllGather(x) @ w.
+
+    Per-shard shapes: ``x``: [..., m_loc, K] (sharded along M over ``axis``),
+    ``w``: [K, n_loc].  Returns [..., R * m_loc, n_loc].
+
+    Ring schedule: at step ``s`` the chunk that originated at rank ``(r - s) % R``
+    is multiplied while the next chunk is in flight on the ICI ring
+    (``lax.ppermute`` to the right neighbour).  With ``channel.num_channels = C``
+    the local shard is split into C sub-chunks ringed independently — C in-flight
+    DMAs, the paper's channel mapping f_C.  ``comm.order == "bidir_ring"`` splits
+    chunks into two counter-rotating rings, halving ring latency.
+    """
+    channel = channel or BlockChannel(axis=axis)
+    out_dtype = out_dtype or x.dtype
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+
+    m_loc, k_dim = x.shape[-2], x.shape[-1]
+    n_loc = w.shape[-1]
+
+    num_ch = max(1, channel.num_channels)
+    bidir = channel.comm.order == "bidir_ring" and r_axis > 2
+    if bidir and num_ch % 2:
+        num_ch *= 2
+    if m_loc % num_ch:
+        num_ch = 1  # fall back: indivisible chunking
+        bidir = False
+    m_sub = m_loc // num_ch
+
+    fwd = [(j, (j + 1) % r_axis) for j in range(r_axis)]
+    bwd = [(j, (j - 1) % r_axis) for j in range(r_axis)]
+
+    out = jnp.zeros(x.shape[:-2] + (r_axis * m_loc, n_loc), dtype=out_dtype)
+    # chunks[c] currently held sub-chunk of channel c (leading dims preserved
+    # so DP/FSDP-sharded batch dims partition cleanly)
+    chunks = [_row_slice(x, c * m_sub, m_sub) for c in range(num_ch)]
+    # direction per channel: bidir splits channels across the two rings
+    dirs = [(-1 if (bidir and c % 2) else 1) for c in range(num_ch)]
+
+    for s in range(r_axis):
+        nxt = []
+        if s < r_axis - 1:
+            # producer: issue all channel DMAs for step s+1 (tile_push_data)
+            for c in range(num_ch):
+                nxt.append(lax.ppermute(chunks[c], axis, fwd if dirs[c] > 0 else bwd))
+        # consumer: compute on the tiles received at step s (consumer_tile_wait is
+        # the SSA dependence on chunks[c])
+        for c in range(num_ch):
+            src = (rank - s * dirs[c]) % r_axis  # f_R^{-1} of the held tile
+            part = _dot(chunks[c], w).astype(out_dtype)
+            out = _row_update(out, part, src * m_loc + c * m_sub)
+        if s < r_axis - 1:
+            chunks = nxt
+
+    return out
+
+
+def ag_matmul_baseline(x, w, *, axis: str, out_dtype=None):
+    """Non-overlapping reference: operator-centric AllGather then GEMM."""
+    out_dtype = out_dtype or x.dtype
+    xg = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+    return _dot(xg, w).astype(out_dtype)
+
+
+# -----------------------------------------------------------------------------
+# GEMM + ring ReduceScatter  (paper Fig. 4)
+# -----------------------------------------------------------------------------
+
+def matmul_rs(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    axis: str,
+    channel: Optional[BlockChannel] = None,
+    out_dtype=None,
+):
+    """Overlapped (x @ w) reduce-scattered along M over ``axis``.
+
+    Per-shard shapes: ``x``: [..., M, k_loc], ``w``: [k_loc, N];
+    returns [..., M / R, N].
+
+    Faithful port of the paper's Fig. 4 ring: at stage ``s`` rank ``r`` computes
+    the GEMM tile for segment ``(r + s + 1) % R`` (schedules.ring_rs_segment),
+    adds the partial accumulator arriving from rank ``r + 1``, and forwards the
+    sum to rank ``r - 1`` — the stage-s GEMM overlaps the in-flight permute of
+    the stage-(s-1) accumulator.  After R stages the accumulator at rank ``r``
+    holds the fully reduced segment ``r``.
+    """
+    channel = channel or BlockChannel(axis=axis)
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    out_dtype = out_dtype or x.dtype
+
+    m_glob, k_loc = x.shape[-2], x.shape[-1]
+    assert m_glob % r_axis == 0, (m_glob, r_axis)
+    m_loc = m_glob // r_axis
+
+    to_left = [(j, (j - 1) % r_axis) for j in range(r_axis)]  # paper: to_rank = r-1
+
+    # flow dtype of the ring partials: fp32 (default, reduction-exact) or bf16
+    # (halves ring bytes — §Perf optimization).  The partial dot must PRODUCE
+    # the flow dtype natively (preferred_element_type): a separate convert is
+    # commuted past the permute by XLA's algebraic simplifier, leaving fp32 on
+    # the wire.
+    flow = jnp.dtype(channel.comp.accum_dtype)
+
+    acc = None
+    for s in range(r_axis):
+        seg = (rank + s + 1) % r_axis
+        xs = _row_slice(x, seg * m_loc, m_loc)
+        part = lax.dot_general(
+            xs, w, (((xs.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=flow)
+        if acc is None:
+            acc = part
+        else:
+            acc = lax.ppermute(acc, axis, to_left) + part  # peer_tile_wait/notify
+    return acc.astype(out_dtype)
+
+
+def matmul_rs_baseline(x, w, *, axis: str, out_dtype=None):
+    """Non-overlapping reference: GEMM then operator-centric ReduceScatter."""
+    out_dtype = out_dtype or x.dtype
+    part = _dot(x, w)
+    out = lax.psum_scatter(part, axis, scatter_dimension=part.ndim - 2, tiled=True)
+    return out.astype(out_dtype)
+
+
+def psum_scatter_ring(x, *, axis: str):
+    """Ring reduce-scatter of a precomputed partial (no fused GEMM).
+
+    Used for epilogue reductions (e.g. MoE combine) where the partials already
+    exist; still overlaps the adds with the permutes.
+    """
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    m_glob = x.shape[-2]
+    m_loc = m_glob // r_axis
+    to_left = [(j, (j - 1) % r_axis) for j in range(r_axis)]
+    acc = None
+    for s in range(r_axis):
+        seg = (rank + s + 1) % r_axis
+        part = _row_slice(x, seg * m_loc, m_loc)
+        acc = part if acc is None else lax.ppermute(acc, axis, to_left) + part
+    return acc
+
+
+# -----------------------------------------------------------------------------
+# AG-KV + self-attention  (paper Fig. 6) — sequence parallel
+# -----------------------------------------------------------------------------
+
+def ring_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    axis: str,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+):
+    """Overlapped sequence-parallel attention with online softmax.
+
+    Per-shard shapes: ``q``: [B, H, s_loc, D], ``k``/``v``: [B, Hkv, s_loc, D]
+    (sequence sharded over ``axis``).  KV chunks rotate around the ring while
+    flash-style online softmax consumes each arrived chunk — the TileLink AG-KV
+    + flash-attention kernel with the AG mapped to the ICI DMA engine.
+
+    ``causal`` masks with *global* positions (rank-offset aware).
+    ``window`` (sliding-window attention) skips ring steps entirely outside the
+    window — chunks whose global key range cannot attend are never computed.
+    """
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    b, h, s_loc, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    fwd = [(j, (j + 1) % r_axis) for j in range(r_axis)]
+
+    q32 = (q * scale).astype(jnp.float32)
+    m_i = jnp.full((b, h, s_loc, 1), -jnp.inf, jnp.float32)
+    l_i = jnp.zeros((b, h, s_loc, 1), jnp.float32)
+    o_i = jnp.zeros((b, h, s_loc, d), jnp.float32)
+
+    q_pos = rank * s_loc + jnp.arange(s_loc)  # global query positions
+
+    kc, vc = k, v
+    for s in range(r_axis):
+        src = (rank - s) % r_axis
+        if s < r_axis - 1:
+            k_nxt = lax.ppermute(kc, axis, fwd)
+            v_nxt = lax.ppermute(vc, axis, fwd)
+        k_pos = src * s_loc + jnp.arange(s_loc)
+
+        kr = jnp.repeat(kc, rep, axis=1) if rep > 1 else kc
+        vr = jnp.repeat(vc, rep, axis=1) if rep > 1 else vc
+        scores = jnp.einsum(
+            "bhqd,bhkd->bhqk", q32, kr.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        mask = None
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            wmask = (q_pos[:, None] - k_pos[None, :]) < window
+            mask = wmask if mask is None else (mask & wmask)
+        if mask is not None:
+            scores = jnp.where(mask[None, None], scores, -jnp.inf)
+
+        m_new = jnp.maximum(m_i, scores.max(axis=-1, keepdims=True))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(jnp.isfinite(scores), scores - m_safe, -jnp.inf))
+        alpha = jnp.exp(jnp.where(jnp.isfinite(m_i), m_i - m_safe, -jnp.inf))
+        l_i = l_i * alpha + p.sum(axis=-1, keepdims=True)
+        o_i = o_i * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vr.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        m_i = m_new
+        if s < r_axis - 1:
+            kc, vc = k_nxt, v_nxt
+
+    out = o_i / jnp.maximum(l_i, 1e-30)
+    return out.astype(q.dtype)
+
+
+def ag_attention_baseline(q, k, v, *, axis: str, causal: bool = False,
+                          scale: Optional[float] = None, window: Optional[int] = None):
+    """Non-overlapping reference: AllGather full KV, then one dense attention."""
+    r_axis = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    b, h, s_loc, d = q.shape
+    kg = lax.all_gather(k, axis, axis=2, tiled=True)
+    vg = lax.all_gather(v, axis, axis=2, tiled=True)
+    rep = h // kg.shape[1]
+    if rep > 1:
+        kg = jnp.repeat(kg, rep, axis=1)
+        vg = jnp.repeat(vg, rep, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", (q * scale).astype(jnp.float32), kg.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    s_glob = kg.shape[2]
+    q_pos = rank * s_loc + jnp.arange(s_loc)
+    k_pos = jnp.arange(s_glob)
+    mask = None
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        wmask = (q_pos[:, None] - k_pos[None, :]) < window
+        mask = wmask if mask is None else (mask & wmask)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    m = scores.max(axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vg.astype(jnp.float32)) / jnp.maximum(
+        p.sum(axis=-1, keepdims=True), 1e-30
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,73 @@
+"""Tile orders (paper §3.1, Fig. 2b).
+
+A schedule decides, for every rank and every step, which *peer's* tile is
+communicated/consumed.  Communication and computation may follow different
+orders; the mapping (f_R) reconciles them.
+
+All schedules are expressed two ways:
+  * ``peer(rank, step)`` — host ints, for building unrolled shard_map programs;
+  * ``peer_t(rank, step)`` — traced, for use inside kernels/fori_loops.
+
+Conventions (match the paper's Fig. 4 pseudo-code):
+  ring       : at step s, rank r handles the segment of rank (r + s + 1) % R
+               (reduce-scatter direction: partial results flow to rank r-1).
+  ring_ag    : all-gather direction — at step s rank r holds the chunk that
+               originated at rank (r + s) % R (chunks flow to rank r+1).
+  all2all    : full-mesh — step s pairs rank r with (r ^ s) when R is a power of
+               two (bandwidth-optimal pairwise exchange), else (r + s) % R.
+  bidir_ring : even steps move clockwise, odd steps counter-clockwise, halving
+               ring latency when both link directions are available.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "ring_rs_segment",
+    "ring_ag_source",
+    "all2all_peer",
+    "bidir_ring_source",
+    "SCHEDULES",
+]
+
+
+def ring_rs_segment(rank: int, step: int, world: int) -> int:
+    """Segment handled by ``rank`` at ``step`` of a ring reduce-scatter."""
+    return (rank + step + 1) % world
+
+
+def ring_ag_source(rank: int, step: int, world: int) -> int:
+    """Origin rank of the chunk held by ``rank`` after ``step`` ring hops (AG)."""
+    return (rank + step) % world
+
+
+def all2all_peer(rank: int, step: int, world: int) -> int:
+    """Full-mesh pairwise peer (XOR schedule when world is a power of two)."""
+    if world & (world - 1) == 0:
+        return rank ^ step
+    return (rank + step) % world
+
+
+def bidir_ring_source(rank: int, step: int, world: int) -> int:
+    """Bidirectional ring: alternate direction per step, covering ±ceil(s/2)."""
+    hop = (step + 1) // 2
+    if step % 2 == 1:
+        return (rank + hop) % world
+    return (rank - hop) % world
+
+
+# traced variants -------------------------------------------------------------
+
+def ring_rs_segment_t(rank, step, world):
+    return jnp.remainder(rank + step + 1, world)
+
+
+def ring_ag_source_t(rank, step, world):
+    return jnp.remainder(rank + step, world)
+
+
+SCHEDULES = {
+    "ring": ring_ag_source,
+    "bidir_ring": bidir_ring_source,
+    "all2all": all2all_peer,
+}

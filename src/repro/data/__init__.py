@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, MemmapTokens, make_pipeline
+
+__all__ = ["SyntheticLM", "MemmapTokens", "make_pipeline"]

@@ -1,0 +1,146 @@
+"""Fused AllGather + GEMM Pallas kernel (paper §5, AG+GEMM; push mode, ring).
+
+One kernel per device (launched under shard_map over the TP axis) both
+*communicates* and *computes*:
+
+  * ring step ``s``: the chunk that originated at rank ``(my - s) % R`` is
+    forwarded to the right neighbour with ``tile_push_data``
+    (``pltpu.make_async_remote_copy`` on the ICI DMA engine) while the MXU
+    computes GEMM tiles on the chunk that arrived at step ``s`` — communication
+    and computation tiles are *decoupled*: the comm tile is the whole
+    [m_loc, K] shard, the compute tile is (m_loc, bn) (CompSpec), iterated in
+    the inner grid dimension;
+  * ``consumer_tile_wait`` is the ``wait_recv`` on the per-step DMA semaphore —
+    acquire semantics; loads of the gathered chunk are emitted only after it
+    (paper §4.2's strict-dependency rule, enforced by construction).
+
+Slot-per-origin gather buffer (``buf[src]``) makes the schedule race-free
+without credit counters: each slot is written exactly once per ring pass.
+
+Validated on CPU via ``pltpu.InterpretParams`` (TPU interpret mode simulates
+the inter-device DMAs + semaphores); on real TPU the same code lowers to
+Mosaic with ICI RDMA.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.channels import BlockChannel
+
+__all__ = ["ag_gemm_shard"]
+
+
+def _ag_gemm_kernel(x_ref, w_ref, o_ref, buf, x_vmem, acc, out_tile, copy_sem,
+                    send_sem, recv_sems, out_sem, *, axis: str, world: int,
+                    n_tiles: int, m_loc: int, bn: int):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    my = lax.axis_index(axis)
+    right = lax.rem(my + 1, world)
+    src = lax.rem((my - s) + world, world)
+
+    @pl.when(jnp.logical_and(s == 0, j == 0))
+    def _local_seed():
+        # stage own shard into the gather buffer (producer tile 'my')
+        c = pltpu.make_async_copy(x_ref, buf.at[my], copy_sem)
+        c.start()
+        c.wait()
+
+    def _fwd_rdma(step, src_slot):
+        # forward from the VMEM staging copy (x_vmem) to the right neighbour's
+        # gather slot — src and dst must not alias for the DMA engine
+        return pltpu.make_async_remote_copy(
+            src_ref=x_vmem,
+            dst_ref=buf.at[src_slot],
+            send_sem=send_sem,
+            recv_sem=recv_sems.at[step],
+            device_id=(right,),
+            device_id_type=pltpu.DeviceIdType.MESH,
+        )
+
+    @pl.when(j == 0)
+    def _comm():
+        # consumer_tile_wait + bring chunk to VMEM for the MXU
+        c = pltpu.make_async_copy(buf.at[src], x_vmem, copy_sem)
+        c.start()
+        c.wait()
+
+        # tile_push_data: forward the current chunk around the ring (overlaps
+        # with this step's GEMM tiles below)
+        @pl.when(s < world - 1)
+        def _():
+            _fwd_rdma(s, src).start()
+
+    # compute tile j of the consumer GEMM (CompSpec tile)
+    acc[...] = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=jnp.float32)
+    out_tile[...] = acc[...].astype(out_tile.dtype)
+    oc = pltpu.make_async_copy(
+        out_tile, o_ref.at[pl.ds(src * m_loc, m_loc), pl.ds(j * bn, bn)], out_sem
+    )
+    oc.start()
+    oc.wait()
+
+    @pl.when(jnp.logical_and(j == n_tiles - 1, s < world - 1))
+    def _finish_comm():
+        # wait_send: our buffer slot is drained; wait_recv: next chunk arrived
+        _fwd_rdma(s, src).wait()
+
+
+def ag_gemm_shard(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    channel: Optional[BlockChannel] = None,
+    world_size: int,
+    bn: int = 128,
+    interpret: bool = True,
+):
+    """Per-shard fused AG+GEMM. x: [m_loc, K], w: [K, n_loc] -> [R*m_loc, n_loc].
+
+    Call inside shard_map over ``channel.axis``.  ``interpret=True`` runs the
+    TPU interpret mode (CPU validation); False lowers to Mosaic for real TPUs.
+    """
+    channel = channel or BlockChannel(axis="model")
+    axis = channel.axis
+    m_loc, k = x.shape
+    _, n_loc = w.shape
+    bn = min(bn, n_loc)
+    assert n_loc % bn == 0
+    n_tiles = n_loc // bn
+
+    kern = functools.partial(
+        _ag_gemm_kernel, axis=axis, world=world_size, n_tiles=n_tiles,
+        m_loc=m_loc, bn=bn,
+    )
+    interp = pltpu.InterpretParams() if interpret else False
+    return pl.pallas_call(
+        kern,
+        grid=(world_size, n_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((k, bn), lambda s, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((world_size * m_loc, n_loc), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((world_size, m_loc, k), x.dtype),   # gather buffer
+            pltpu.VMEM((m_loc, k), x.dtype),               # current chunk
+            pltpu.VMEM((m_loc, bn), jnp.float32),          # accumulator
+            pltpu.VMEM((m_loc, bn), x.dtype),              # cast staging tile
+            pltpu.SemaphoreType.DMA,                       # local copies
+            pltpu.SemaphoreType.DMA,                       # sends
+            pltpu.SemaphoreType.DMA((world_size,)),        # per-step recv
+            pltpu.SemaphoreType.DMA,                       # out stores
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+        interpret=interp,
+    )(x, w)

@@ -1,0 +1,160 @@
+"""Fused GEMM + ring ReduceScatter Pallas kernel — faithful port of paper Fig. 4.
+
+Stage ``s`` at rank ``r``:
+  1. ``consumer_tile_wait``   — wait for the partial accumulator pushed by rank
+     ``r+1`` at its stage ``s-1`` (``wait_recv`` on the per-stage DMA semaphore);
+  2. compute the GEMM tile for segment ``(r + s + 1) % R``
+     (``schedules.ring_rs_segment`` — the paper's ``seg = (rank+stage+1) % W``)
+     while the *next* incoming partial is still in flight;
+  3. add the received partial (TopK-reduce-style epilogue fusion);
+  4. ``tile_push_data`` + ``peer_tile_notify`` — push the new partial to rank
+     ``r-1`` (paper line 11: ``to_rank = (rank - 1 + WORLD_SIZE) % WORLD_SIZE``).
+
+After R stages the accumulator holds the fully reduced segment ``r`` and is
+stored to the local output (paper lines 22-23).
+
+Race-freedom: receive buffers are slot-per-stage (written exactly once per ring
+pass — no credit counters needed); the outgoing staging buffer is reused across
+stages, guarded by ``wait_send`` (release, §4.2) before each overwrite.
+Partials flow in fp32 for reduction fidelity.
+
+VMEM budget: the flowing accumulator is [m_loc, N] resident in VMEM; pick
+m_loc * N * 4B ≲ 4 MiB per call (the TP shard sizes used by the models obey
+this; larger N is tiled by the caller over column blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.channels import BlockChannel
+
+__all__ = ["gemm_rs_shard"]
+
+
+def _gemm_rs_kernel(x_ref, w_ref, o_ref, x_vmem, acc, prev, out_stage, out_cast,
+                    copy_sem, send_sem, recv_sems, rbuf, *, axis: str,
+                    world: int, n_tiles: int, m_loc: int, bn: int):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    my = lax.axis_index(axis)
+    left = lax.rem((my - 1) + world, world)
+    seg = lax.rem(my + s + 1, world)
+
+    def _push_rdma(stage):
+        # identical descriptor on sender & receiver (SPMD) — sender start()s,
+        # receiver wait_recv()s, sender wait_send()s before staging reuse
+        return pltpu.make_async_remote_copy(
+            src_ref=out_stage,
+            dst_ref=rbuf.at[stage],
+            send_sem=send_sem,
+            recv_sem=recv_sems.at[stage],
+            device_id=(left,),
+            device_id_type=pltpu.DeviceIdType.MESH,
+        )
+
+    @pl.when(j == 0)
+    def _stage_setup():
+        # shape mapping f_S: bring segment `seg` of x into VMEM
+        c = pltpu.make_async_copy(
+            x_ref.at[pl.ds(seg * m_loc, m_loc), :], x_vmem, copy_sem
+        )
+        c.start()
+        c.wait()
+
+        @pl.when(s > 0)
+        def _recv_prev():
+            # consumer_tile_wait (acquire): partial from rank r+1, stage s-1
+            _push_rdma(s - 1).wait_recv()
+            c2 = pltpu.make_async_copy(rbuf.at[s - 1], prev, copy_sem)
+            c2.start()
+            c2.wait()
+            # release: our stage s-1 push drained before out_stage is reused
+            _push_rdma(s - 1).wait_send()
+
+    # GEMM tile j for segment `seg` (+ fused reduction of the incoming partial)
+    part = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(s > 0)
+    def _add_prev():
+        acc[:, pl.ds(j * bn, bn)] = part + prev[:, pl.ds(j * bn, bn)]
+
+    @pl.when(s == 0)
+    def _no_prev():
+        acc[:, pl.ds(j * bn, bn)] = part
+
+    @pl.when(j == n_tiles - 1)
+    def _stage_finish():
+        @pl.when(s < world - 1)
+        def _push():
+            out_stage[...] = acc[...]
+            _push_rdma(s).start()  # tile_push_data + peer_tile_notify
+
+        @pl.when(s == world - 1)
+        def _store():
+            # paper lines 22-23: final stage stores the reduced segment (== my)
+            out_cast[...] = acc[...].astype(out_cast.dtype)
+            c = pltpu.make_async_copy(out_cast, o_ref, copy_sem)
+            c.start()
+            c.wait()
+
+
+def gemm_rs_shard(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    channel: Optional[BlockChannel] = None,
+    world_size: int,
+    bn: int = 128,
+    interpret: bool = True,
+):
+    """Per-shard fused GEMM+RS. x: [M, k_loc], w: [k_loc, N] -> [M/R, N].
+
+    Call inside shard_map over ``channel.axis``; partials accumulate in fp32.
+    """
+    channel = channel or BlockChannel(axis="model")
+    axis = channel.axis
+    m_glob, k_loc = x.shape
+    _, n = w.shape
+    assert m_glob % world_size == 0
+    m_loc = m_glob // world_size
+    bn = min(bn, n)
+    assert n % bn == 0
+    n_tiles = n // bn
+
+    kern = functools.partial(
+        _gemm_rs_kernel, axis=axis, world=world_size, n_tiles=n_tiles,
+        m_loc=m_loc, bn=bn,
+    )
+    interp = pltpu.InterpretParams() if interpret else False
+    return pl.pallas_call(
+        kern,
+        grid=(world_size, n_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((k_loc, bn), lambda s, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((m_loc, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m_loc, k_loc), x.dtype),          # x segment
+            pltpu.VMEM((m_loc, n), jnp.float32),           # stage accumulator
+            pltpu.VMEM((m_loc, n), jnp.float32),           # received partial
+            pltpu.VMEM((m_loc, n), jnp.float32),           # staged outgoing
+            pltpu.VMEM((m_loc, n), x.dtype),               # final cast
+            pltpu.SemaphoreType.DMA,                       # local copies
+            pltpu.SemaphoreType.DMA,                       # sends
+            pltpu.SemaphoreType.DMA((world_size,)),        # per-stage recv
+            pltpu.VMEM((world_size, m_loc, n), jnp.float32),  # slot-per-stage rbuf
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        ),
+        interpret=interp,
+    )(x, w)

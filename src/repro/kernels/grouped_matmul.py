@@ -1,0 +1,75 @@
+"""Grouped (MoE) matmul Pallas kernel driven by *dynamic mapping tables*.
+
+The paper's dynamic tile-centric mapping (§4.1): tile -> expert assignment is a
+runtime lookup table (f_R), filled by the router; only the *access pattern* is
+compiled.  Here the table is a scalar-prefetch operand — Mosaic reads
+``tile_expert[tile_id]`` inside the BlockSpec index_map to choose which
+expert's weight block to DMA into VMEM.  This is the TPU-native equivalent of
+the paper's table-driven Triton codegen (Fig. 5).
+
+x rows are expert-sorted and tile-aligned (build_moe_dynamic_mapping pads each
+group to the row-tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_matmul"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "out_dtype", "interpret")
+)
+def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None,
+                   interpret=False):
+    """x: [M, K] (expert-sorted), w: [E, K, N], tile_expert: [M // bm] i32.
+
+    Returns [M, N] with rows of tile t multiplied by w[tile_expert[t]].
+    """
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    _, k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = (min(tile[0], m), min(tile[1], n), min(tile[2], k))
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert tile_expert.shape == (m // bm,), (tile_expert.shape, m, bm)
+    n_k = k // bk
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, expert: (i, kk)),
+            # dynamic mapping f_R: the runtime table chooses the weight block
+            pl.BlockSpec((1, bk, bn), lambda i, j, kk, expert: (expert[i], kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, expert: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+
+    def _kernel(expert_ref, x_ref, w_ref, o_ref, acc_ref):
+        del expert_ref  # consumed by the index_maps above
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+        )
+        @pl.when(pl.program_id(2) == n_k - 1)
+        def _store():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tile_expert, x, w)

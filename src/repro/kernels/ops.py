@@ -1,0 +1,26 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: True when no TPU is present (CPU validation via
+the TPU interpret mode), False on real TPUs (Mosaic lowering).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.matmul import matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.ag_gemm import ag_gemm_shard
+from repro.kernels.gemm_rs import gemm_rs_shard
+from repro.kernels.mamba_ssd import ssd_chunked, ssd_intra_chunk
+
+__all__ = [
+    "matmul", "flash_attention", "grouped_matmul",
+    "ag_gemm_shard", "gemm_rs_shard", "ssd_chunked", "ssd_intra_chunk",
+    "auto_interpret",
+]
+
+
+def auto_interpret() -> bool:
+    """True when running without a TPU (kernels execute in interpret mode)."""
+    return jax.default_backend() != "tpu"

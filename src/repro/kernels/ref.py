@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "matmul_ref", "flash_attention_ref", "grouped_matmul_ref",
+    "ag_gemm_ref", "gemm_rs_ref", "ssd_ref",
+]
+
+
+def matmul_ref(x, w, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=False, window: Optional[int] = None,
+                        scale: Optional[float] = None):
+    """q: [BH, Sq, D], k/v: [BHkv, Sk, D] with BH % BHkv == 0 (GQA)."""
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    rep = bh // bhkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=0)
+        v = jnp.repeat(v, rep, axis=0)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", (q * scale).astype(jnp.float32),
+                   k.astype(jnp.float32))
+    qp = jnp.arange(sq)
+    kp = jnp.arange(sk)
+    mask = None
+    if causal:
+        # align ends: query i attends keys <= i + (sk - sq)
+        mask = (qp[:, None] + (sk - sq)) >= kp[None, :]
+    if window is not None:
+        wmask = (qp[:, None] + (sk - sq) - kp[None, :]) < window
+        mask = wmask if mask is None else mask & wmask
+    if mask is not None:
+        s = jnp.where(mask[None], s, -jnp.inf)
+    m = s.max(-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return (o / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)).astype(q.dtype)
+
+
+def grouped_matmul_ref(x, w, tile_expert, tile_m: int, out_dtype=None):
+    """x: [M, K] expert-sorted rows; w: [E, K, N]; tile_expert: [M // tile_m].
+
+    Row i belongs to expert tile_expert[i // tile_m] (tile-aligned groups —
+    the dynamic shape mapping f_R of the paper).
+    """
+    out_dtype = out_dtype or x.dtype
+    row_expert = jnp.repeat(tile_expert, tile_m)
+    wx = w[row_expert]  # [M, K, N]
+    return jnp.einsum(
+        "mk,mkn->mn", x.astype(jnp.float32), wx.astype(jnp.float32)
+    ).astype(out_dtype)
+
+
+def ag_gemm_ref(x_shards, w_shards):
+    """Global oracle: x_shards [R, m_loc, K], w_shards [R, K, n_loc] ->
+    per-rank outputs [R, R*m_loc, n_loc] (every rank holds AG(x) @ its w)."""
+    xg = x_shards.reshape(-1, x_shards.shape[-1]).astype(jnp.float32)
+    return jnp.stack([xg @ w.astype(jnp.float32) for w in w_shards]).astype(
+        x_shards.dtype
+    )
+
+
+def gemm_rs_ref(x_shards, w_shards):
+    """Global oracle for GEMM + reduce-scatter.
+
+    x_shards: [R, M, k_loc] (k-sharded input), w_shards: [R, k_loc, N].
+    Returns [R, M // R, N]: rank r's segment of sum_r(x_r @ w_r).
+    """
+    r, m, _ = x_shards.shape
+    full = sum(
+        x_shards[i].astype(jnp.float32) @ w_shards[i].astype(jnp.float32)
+        for i in range(r)
+    )
+    return full.reshape(r, m // r, -1).astype(x_shards.dtype)
+
+
+def ssd_ref(x, dt, a_log, b, c, *, chunk: int = 64, d_init=None):
+    """Mamba-2 SSD (state-space duality) reference — sequential scan.
+
+    x:  [B, L, H, P]   inputs per head
+    dt: [B, L, H]      softplus-activated step sizes (already positive)
+    a_log: [H]         log of -A (A = -exp(a_log) < 0)
+    b:  [B, L, G, N]   input projections (G groups, N state dim)
+    c:  [B, L, G, N]   output projections
+    Returns y: [B, L, H, P].  h_t = h_{t-1} * exp(dt*A) + dt * B_t x_t ;
+    y_t = C_t . h_t  (einsum over N).
+    """
+    bsz, length, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H]
+    bx = jnp.repeat(b, rep, axis=2)  # [B, L, H, N]
+    cx = jnp.repeat(c, rep, axis=2)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(dtt * a[None, :])  # [B,H]
+        hnew = hprev * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt * dtt[..., None], xt
+        )
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32) if d_init is None else d_init
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(bx.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(cx.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

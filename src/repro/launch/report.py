@@ -1,0 +1,89 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(dirname):
+    cells = {}
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        r = json.load(open(f))
+        key = (r["arch"], r["shape"], "mp" if r["multi_pod"] else "sp",
+               r.get("mode", "overlap"))
+        cells[key] = r
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mode", default="overlap")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    archs = sorted({k[0] for k in cells})
+
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful-FLOPs | mem/dev | mp-512 |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = 0
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            sp = cells.get((arch, shape, "sp", args.mode))
+            mp = cells.get((arch, shape, "mp", args.mode))
+            if sp is None:
+                continue
+            if sp["status"] == "skipped":
+                n_skip += 1
+                print(f"| {arch} | {shape} | — | — | — | skipped "
+                      f"({sp['reason'][:40]}…) | — | — | "
+                      f"{'skip' if mp and mp['status']=='skipped' else '?'} |")
+                continue
+            n_ok += 1
+            r = dict(sp["roofline"])
+            # uniform accounting across all cells: total per-kind byte sums
+            # (per-direction refinement only stored for later cells)
+            r["collective_s"] = sum(sp.get("collective_kinds", {}).values()) / 50e9
+            mem = sp.get("memory") or {}
+            # temp is whole-program on the CPU backend; /chips for per-device
+            per_dev = None
+            if mem.get("temp_size_in_bytes") is not None:
+                per_dev = (mem["temp_size_in_bytes"] / sp["n_chips"]
+                           + (mem.get("argument_size_in_bytes") or 0))
+            mp_s = "-"
+            if mp is not None:
+                mp_s = "ok" if mp["status"] == "ok" else mp["status"]
+            print(f"| {arch} | {shape} | {fmt_t(r['compute_s'])} | "
+                  f"{fmt_t(r['memory_s'])} | {fmt_t(r['collective_s'])} | "
+                  f"{sp['dominant'].replace('_s','')} | "
+                  f"{sp['useful_flops_ratio']:.2f} | {fmt_b(per_dev)} | {mp_s} |")
+    print(f"\n{n_ok} baselined cells, {n_skip} skipped "
+          f"(long_500k on pure full-attention archs).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Abstract input/param/cache specs per (arch × shape) — no device allocation.
+
+Everything here returns ShapeDtypeStruct pytrees (via jax.eval_shape) plus the
+matching PartitionSpec trees, so the dry-run can ``jit(...).lower(...)`` the
+production step functions for any mesh without touching memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, Shape
+from repro.models import lm, encdec, frontends
+from repro.parallel.context import ParallelContext
+from repro.training.optimizer import init_opt_state
+
+__all__ = ["model_module", "abstract_params", "input_specs", "batch_pspec",
+           "cell_is_applicable"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def model_module(cfg: ArchConfig):
+    return encdec if cfg.encoder_layers else lm
+
+
+def cell_is_applicable(cfg: ArchConfig, shape: Shape) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skip: pure full-attention arch — long_500k requires "
+                       "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def abstract_params(cfg: ArchConfig, pc: ParallelContext, dtype=jnp.bfloat16):
+    """(param ShapeDtypeStructs, param specs) without allocation."""
+    mod = model_module(cfg)
+    shapes = jax.eval_shape(
+        lambda k: mod.init(k, cfg, pc, dtype), jax.random.PRNGKey(0))
+    return shapes, mod.specs(cfg, pc)
+
+
+def abstract_opt_state(param_shapes, param_specs):
+    opt = jax.eval_shape(init_opt_state, param_shapes)
+    specs = {
+        "mu": param_specs,
+        "nu": jax.tree_util.tree_map(lambda s: s, param_specs,
+                                     is_leaf=lambda v: isinstance(v, P)),
+        "step": P(),
+    }
+    return opt, specs
+
+
+def batch_pspec(batch: int, pc: ParallelContext) -> Any:
+    """Shard the batch over DP axes only when divisible (long_500k has B=1)."""
+    dp = pc.dp_spec()
+    n = pc.dp
+    return dp if (dp is not None and batch % n == 0 and batch >= n) else None
+
+
+def input_specs(cfg: ArchConfig, shape: Shape, pc: ParallelContext,
+                dtype=jnp.bfloat16):
+    """Returns (inputs SDS-tree, inputs specs-tree) for the cell's step fn.
+
+    train:   {"inputs","labels"[, "embeds"]}
+    prefill: {"tokens"[, "embeds"]}
+    decode:  {"tokens", "caches", "cache_len"}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    bspec = batch_pspec(b, pc)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        tree: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        n_text = s
+        if cfg.frontend == "vision":
+            n_img = frontends.vision_prefix_len(s)
+            n_text = s - n_img
+            tree["embeds"] = SDS((b, n_img, cfg.d_model), dtype)
+            specs["embeds"] = P(bspec, None, None)
+        elif cfg.frontend == "audio":
+            n_enc = min(cfg.enc_len, frontends.audio_frames_len(s) * 8)
+            tree["embeds"] = SDS((b, n_enc, cfg.d_model), dtype)
+            specs["embeds"] = P(bspec, None, None)
+        key = "inputs" if shape.kind == "train" else "tokens"
+        tree[key] = SDS((b, n_text), i32)
+        specs[key] = P(bspec, None)
+        if shape.kind == "train":
+            tree["labels"] = SDS((b, s), i32)
+            specs["labels"] = P(bspec, None)
+        return tree, specs
+
+    # decode: one new token + caches of length seq_len
+    mod = model_module(cfg)
+    caches = jax.eval_shape(
+        lambda: mod.init_caches(cfg, pc, b, s, dtype))
+    cspecs = mod.cache_specs(cfg, pc)
+    # batch dim of caches may not shard when b < dp: drop DP axes, keep model
+    if bspec is None:
+        from repro.parallel.context import manual_only
+
+        cspecs = jax.tree_util.tree_map(
+            lambda sp: manual_only(sp, ("model",)), cspecs,
+            is_leaf=lambda v: isinstance(v, P))
+    tree = {"tokens": SDS((b, 1), i32), "caches": caches,
+            "cache_len": SDS((), i32)}
+    specs = {"tokens": P(bspec, None), "caches": cspecs, "cache_len": P()}
+    return tree, specs

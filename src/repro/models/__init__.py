@@ -1,0 +1,3 @@
+from repro.models import lm, encdec, frontends
+
+__all__ = ["lm", "encdec", "frontends"]

@@ -1,0 +1,36 @@
+"""Stub modality frontends (assignment rule: [vlm]/[audio] backbones only).
+
+``input_specs()`` for these archs provides *precomputed* patch/frame embeddings;
+these helpers generate matching synthetic embeddings for smoke tests and
+examples, and define the prefix lengths used by the shape registry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["vision_prefix_len", "audio_frames_len", "stub_patch_embeddings",
+           "stub_frame_embeddings"]
+
+VISION_PATCHES = 256      # SigLIP 16x16 grid stub
+AUDIO_FRAME_STRIDE = 8    # speech frames per text token (stub ratio)
+
+
+def vision_prefix_len(seq_len: int) -> int:
+    """Image patches occupy a fixed prefix of the sequence."""
+    return min(VISION_PATCHES, seq_len // 2)
+
+
+def audio_frames_len(seq_len: int) -> int:
+    return min(4096, max(64, seq_len // AUDIO_FRAME_STRIDE))
+
+
+def stub_patch_embeddings(key, batch: int, seq_len: int, d_model: int,
+                          dtype=jnp.bfloat16):
+    n = vision_prefix_len(seq_len)
+    return (jax.random.normal(key, (batch, n, d_model)) * 0.02).astype(dtype)
+
+
+def stub_frame_embeddings(key, batch: int, enc_len: int, d_model: int,
+                          dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (batch, enc_len, d_model)) * 0.02).astype(dtype)

@@ -1,0 +1,3 @@
+from repro.nn import layers, attention, ffn, moe, mamba
+
+__all__ = ["layers", "attention", "ffn", "moe", "mamba"]

@@ -1,0 +1,368 @@
+"""GQA attention block — TP over heads, sequence-parallel residual stream.
+
+Train/prefill path (``apply_seq``): the AG+GEMM producer gathers the
+sequence-sharded residual stream while projecting to this rank's heads (the
+paper's AG+GEMM), attention runs locally on the head shard with a
+memory-efficient chunked online-softmax (differentiable), and the output
+projection is the GEMM+RS consumer (paper Fig. 4).
+
+Decode path (``apply_decode``): activations are replicated over the TP axis;
+projections are local column/row-parallel matmuls with a psum epilogue, and the
+KV cache is sharded over heads.
+
+Awkward GQA head counts (kv < tp, non-dividing heads) are handled by the
+GQALayout padding/replication scheme in nn/layers.py; padded weights are
+grad-masked so semantics match the unpadded architecture exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.layers import (
+    rms_norm, rope, he_init, gqa_layout, GQALayout,
+)
+
+__all__ = [
+    "init", "specs", "grad_masks", "apply_seq", "apply_decode", "init_cache",
+    "chunked_attention",
+]
+
+
+def _lay(cfg, tp) -> GQALayout:
+    return gqa_layout(cfg.n_heads, cfg.n_kv_heads, tp)
+
+
+def init(key, cfg, tp: int, dtype=jnp.bfloat16):
+    lay = _lay(cfg, tp)
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    # orig-shaped kv weights, expanded with `rep` identical copies
+    wkv_orig = he_init(ks[1], (d, lay.kv_pad, 2 * hd), dtype, fan_in=d)
+    # zero the padded kv heads (stay zero via grad masks)
+    kv_mask = (jnp.arange(lay.kv_pad) < cfg.n_kv_heads)[None, :, None]
+    wkv_orig = wkv_orig * kv_mask
+    wkv = jnp.repeat(wkv_orig, lay.rep, axis=1).reshape(d, lay.kv_store * 2 * hd)
+
+    head_active = jnp.arange(lay.h_pad) < cfg.n_heads
+    wq = he_init(ks[0], (d, lay.h_pad, hd), dtype, fan_in=d)
+    wq = (wq * head_active[None, :, None]).reshape(d, lay.h_pad * hd)
+
+    wo = he_init(ks[2], (lay.h_pad, hd, d), dtype, fan_in=lay.h_pad * hd)
+    wo = (wo * head_active[:, None, None]).reshape(lay.h_pad * hd, d)
+    p = {"ln": jnp.zeros((d,), dtype), "wq": wq, "wkv": wkv, "wo": wo}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((lay.h_pad * hd,), dtype)
+        p["bkv"] = jnp.zeros((lay.kv_store * 2 * hd,), dtype)
+    return p
+
+
+def specs(cfg, tp: int, dp) -> dict:
+    s = {
+        "ln": P(None),
+        "wq": P(dp, "model"),
+        "wkv": P(dp, "model"),
+        "wo": P("model", dp),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P("model")
+        s["bkv"] = P("model")
+    return s
+
+
+def grad_masks(cfg, tp: int):
+    """0/1 masks keeping padded heads at zero. None entries = no mask."""
+    lay = _lay(cfg, tp)
+    hd = cfg.hd
+    if lay.h_pad == cfg.n_heads and lay.kv_pad == cfg.n_kv_heads:
+        return None
+    qm = jnp.repeat((jnp.arange(lay.h_pad) < cfg.n_heads), hd).astype(jnp.float32)
+    kv_head_active = jnp.arange(lay.kv_store) // lay.rep < cfg.n_kv_heads
+    kvm = jnp.repeat(kv_head_active, 2 * hd).astype(jnp.float32)
+    m = {
+        "ln": None,
+        "wq": qm[None, :],
+        "wkv": kvm[None, :],
+        "wo": qm[:, None],
+    }
+    if cfg.qkv_bias:
+        m["bq"] = qm
+        m["bkv"] = kvm
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                      chunk: int = 1024, q_offset=0, scale: Optional[float] = None,
+                      p_bf16: bool = False):
+    """Memory-efficient online-softmax attention (differentiable).
+
+    q: [B, H, Sq, hd]; k/v: [B, Hkv, Sk, hd] with H % Hkv == 0.
+    Scans KV chunks with a rematerialized per-chunk body: O(Sq * chunk) live
+    memory forward and backward.
+    """
+    b, h, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0
+    nc = sk // chunk
+
+    q32 = (q * scale).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, hkv, nc, chunk, hd)
+    vc = v.reshape(b, hkv, nc, chunk, hd)
+
+    @jax.checkpoint
+    def body(carry, kj, vj, cidx):
+        m_i, l_i, o_i = carry
+        if rep > 1:
+            kj = jnp.repeat(kj, rep, axis=1)
+            vj = jnp.repeat(vj, rep, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, kj.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        mask = None
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            wm = (q_pos[:, None] - k_pos[None, :]) < window
+            mask = wm if mask is None else mask & wm
+        if mask is not None:
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m_i, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(-1, keepdims=True)
+        if p_bf16:
+            # §Perf: P in bf16 halves the attention matmul's HBM reads; the
+            # P@V product still accumulates in fp32 on the MXU
+            pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(jnp.bfloat16),
+                            vj.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bhqk,bhkd->bhqd", p, vj.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        o_new = o_i * alpha + pv
+        return (m_new, l_new, o_new)
+
+    # python (unrolled) chunk loop: per-chunk rematerialized bodies; unrolled
+    # (rather than lax.scan) so per-chunk compute is visible to HLO cost
+    # analysis (while bodies are counted once regardless of trip count) and so
+    # fully-masked chunks can be skipped statically (causal/sliding-window).
+    m_i = jnp.full((b, h, sq, 1), -1e30, jnp.float32)
+    l_i = jnp.zeros((b, h, sq, 1), jnp.float32)
+    o_i = jnp.zeros((b, h, sq, hd), jnp.float32)
+    carry = (m_i, l_i, o_i)
+    q_lo = int(q_offset) if isinstance(q_offset, int) else None
+    for ci in range(nc):
+        if q_lo is not None:
+            k_lo, k_hi = ci * chunk, (ci + 1) * chunk - 1
+            if causal and k_lo > q_lo + sq - 1:
+                continue  # chunk entirely in the future
+            if window is not None and (q_lo - k_hi) >= window:
+                continue  # chunk entirely outside the window
+        carry = body(carry, kc[:, :, ci], vc[:, :, ci], ci)
+    m_f, l_f, o_f = carry
+    return (o_f / jnp.maximum(l_f, 1e-30)).astype(q.dtype)
+
+
+def _project_qkv(params, h, pc, lay, hd):
+    """Shared AG+GEMM producer for q and kv projections.
+
+    h: [B, s_loc, D] -> q/k/v as [B, S, n, hd] (full gathered sequence)."""
+    w = jnp.concatenate([params["wq"], params["wkv"]], axis=1)
+    qkv = pc.ag_matmul(h, w)  # [B, S, (h_loc + 2*kv_loc)*hd]
+    if "bq" in params:
+        bias = jnp.concatenate([params["bq"], params["bkv"]])
+        qkv = qkv + bias
+    b, s_glob = qkv.shape[0], qkv.shape[1]
+    qkv = qkv.reshape(b, s_glob, lay.h_loc + 2 * lay.kv_loc, hd)
+    q = qkv[:, :, : lay.h_loc]
+    k = qkv[:, :, lay.h_loc: lay.h_loc + lay.kv_loc]
+    v = qkv[:, :, lay.h_loc + lay.kv_loc:]
+    return q, k, v, s_glob
+
+
+def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
+              rope_theta=None, attn_chunk=1024, return_kv=False):
+    """Full-sequence attention block body (call inside pc.smap manual region).
+
+    x: [B, s_loc, D] sequence-sharded. Returns [B, s_loc, D] (residual added);
+    with ``return_kv``, also the per-shard KV in cache layout
+    [B, kv_loc, S, hd] (prefill-into-cache).
+    """
+    lay = _lay(cfg, pc.tp)
+    hd = cfg.hd
+    b = x.shape[0]
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    q, k, v, s_glob = _project_qkv(params, h, pc, lay, hd)
+
+    positions = jnp.arange(s_glob)
+    q, k = rope(q, k, positions,
+                rope_theta if rope_theta is not None else cfg.rope_theta)
+    # [b, S, n, hd] -> [b, n, S, hd]
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          chunk=min(attn_chunk, s_glob), p_bf16=pc.attn_p_bf16)
+    o_flat = o.transpose(0, 2, 1, 3).reshape(b, s_glob, lay.h_loc * hd)
+    out = pc.matmul_rs(o_flat, params["wo"])  # [B, s_loc, D]
+    y = x + out
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def apply_cross_seq(params, x, enc, pc, cfg):
+    """Cross-attention (enc-dec): queries from x, keys/values from enc.
+
+    x: [B, s_loc, D] (dec seq-sharded), enc: [B, se_loc, D] (enc seq-sharded).
+    No rope, non-causal. Inside manual region.
+    """
+    lay = _lay(cfg, pc.tp)
+    hd = cfg.hd
+    b = x.shape[0]
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+
+    q = pc.ag_matmul(h, params["wq"])        # [B, Sd, h_loc*hd]
+    kv = pc.ag_matmul(enc, params["wkv"])    # [B, Se, kv_loc*2hd]
+    if "bq" in params:
+        q = q + params["bq"]
+        kv = kv + params["bkv"]
+    sd, se = q.shape[1], kv.shape[1]
+    q = q.reshape(b, sd, lay.h_loc, hd).transpose(0, 2, 1, 3)
+    kv = kv.reshape(b, se, 2 * lay.kv_loc, hd)
+    k = kv[:, :, : lay.kv_loc].transpose(0, 2, 1, 3)
+    v = kv[:, :, lay.kv_loc:].transpose(0, 2, 1, 3)
+
+    o = chunked_attention(q, k, v, causal=False, chunk=min(1024, se))
+    o_flat = o.transpose(0, 2, 1, 3).reshape(b, sd, lay.h_loc * hd)
+    out = pc.matmul_rs(o_flat, params["wo"])
+    return x + out
+
+
+def build_cross_cache(params, enc, pc, cfg):
+    """Precompute cross-attention K/V from the encoder output (decode path).
+
+    enc: [B, se_loc, D] (enc seq-sharded). Returns per-shard k/v
+    [B, kv_loc, Se, hd].
+    """
+    lay = _lay(cfg, pc.tp)
+    hd = cfg.hd
+    b = enc.shape[0]
+    kv = pc.ag_matmul(enc, params["wkv"])
+    if "bkv" in params:
+        kv = kv + params["bkv"]
+    se = kv.shape[1]
+    kv = kv.reshape(b, se, 2 * lay.kv_loc, hd)
+    k = kv[:, :, : lay.kv_loc].transpose(0, 2, 1, 3)
+    v = kv[:, :, lay.kv_loc:].transpose(0, 2, 1, 3)
+    return {"k": k, "v": v}
+
+
+def apply_cross_decode(params, x, cross, pc, cfg):
+    """Decode-time cross attention. x: [B, 1, D] replicated; cross: per-shard
+    k/v [B, kv_loc, Se, hd]."""
+    lay = _lay(cfg, pc.tp)
+    hd = cfg.hd
+    b = x.shape[0]
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dn->bsn", h, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    qh = q.reshape(b, 1, lay.h_loc, hd).transpose(0, 2, 1, 3)
+    rep = lay.h_loc // lay.kv_loc
+    kk = jnp.repeat(cross["k"], rep, axis=1) if rep > 1 else cross["k"]
+    vv = jnp.repeat(cross["v"], rep, axis=1) if rep > 1 else cross["v"]
+    s = jnp.einsum("bhqd,bhkd->bhqk", (qh * hd ** -0.5).astype(jnp.float32),
+                   kk.astype(jnp.float32))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, lay.h_loc * hd)
+    out = pc.psum(jnp.einsum("bsn,nd->bsd", o, params["wo"]))
+    return x + out
+
+
+def init_cache(cfg, tp: int, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window: Optional[int] = None):
+    """Global KV cache arrays (head dim sharded over model).
+
+    Sliding-window layers allocate a *ring buffer* of ``window`` slots instead
+    of ``max_len`` — the sub-quadratic memory that makes long-context decode
+    (gemma3 long_500k) fit HBM.  Slot ``p % window`` holds position ``p``.
+    """
+    lay = _lay(cfg, tp)
+    length = min(max_len, window) if window is not None else max_len
+    shape = (batch, tp * lay.kv_loc, length, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def cache_specs(dp):
+    return {"k": P(dp, "model", None, None), "v": P(dp, "model", None, None)}
+
+
+def apply_decode(params, x, cache, cache_len, pc, cfg, *, window=None,
+                 rope_theta=None):
+    """Single-token decode body (inside manual region).
+
+    x: [B, 1, D] replicated over model; cache k/v: [B, kv_loc, S_max, hd]
+    per-shard.  Returns (x_out, new_cache).
+    """
+    lay = _lay(cfg, pc.tp)
+    hd = cfg.hd
+    b = x.shape[0]
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    w = jnp.concatenate([params["wq"], params["wkv"]], axis=1)
+    qkv = jnp.einsum("bsd,dn->bsn", h, w)
+    if "bq" in params:
+        qkv = qkv + jnp.concatenate([params["bq"], params["bkv"]])
+    qkv = qkv.reshape(b, 1, lay.h_loc + 2 * lay.kv_loc, hd)
+    q = qkv[:, :, : lay.h_loc]
+    k = qkv[:, :, lay.h_loc: lay.h_loc + lay.kv_loc]
+    v = qkv[:, :, lay.h_loc + lay.kv_loc:]
+
+    pos = jnp.full((1, 1), cache_len)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    q, k = rope(q, k, pos, theta)
+
+    cache_size = cache["k"].shape[2]
+    ring = window is not None and cache_size <= window
+    write_pos = jnp.remainder(cache_len, cache_size) if ring else cache_len
+    ck = lax.dynamic_update_slice(cache["k"], k.transpose(0, 2, 1, 3),
+                                  (0, 0, write_pos, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v.transpose(0, 2, 1, 3),
+                                  (0, 0, write_pos, 0))
+
+    qh = q.transpose(0, 2, 1, 3)  # [b, h_loc, 1, hd]
+    rep = lay.h_loc // lay.kv_loc
+    kk = jnp.repeat(ck, rep, axis=1) if rep > 1 else ck
+    vv = jnp.repeat(cv, rep, axis=1) if rep > 1 else cv
+    s = jnp.einsum("bhqd,bhkd->bhqk", (qh * hd ** -0.5).astype(jnp.float32),
+                   kk.astype(jnp.float32))
+    j = jnp.arange(s.shape[-1])
+    if ring:
+        # slot j holds position p_j = cache_len - ((cache_len - j) mod size)
+        p_j = cache_len - jnp.remainder(cache_len - j, cache_size)
+        mask = (p_j >= 0) & (p_j <= cache_len) & ((cache_len - p_j) < window)
+    else:
+        mask = j <= cache_len
+        if window is not None:
+            mask = mask & ((cache_len - j) < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, lay.h_loc * hd)
+    out = pc.psum(jnp.einsum("bsn,nd->bsd", o, params["wo"]))
+    return x + out, {"k": ck, "v": cv}

@@ -1,0 +1,58 @@
+"""Dense (gated) MLP block — the paper's motivational workload.
+
+Forward = AG+GEMM (gate/up fused, column-parallel) -> activation ->
+GEMM+RS (down, row-parallel): exactly the tensor-parallel MLP of paper Fig. 1,
+with both collectives replaced by TileLink ring schedules in overlap mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.layers import rms_norm, he_init, ACTS
+
+__all__ = ["init", "specs", "apply_seq", "apply_decode"]
+
+
+def init(key, cfg, tp: int, dtype=jnp.bfloat16, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_gu": he_init(k1, (d, 2 * f), dtype, fan_in=d),
+        "w_down": he_init(k2, (f, d), dtype, fan_in=f),
+    }
+
+
+def specs(cfg, tp: int, dp) -> dict:
+    return {"ln": P(None), "w_gu": P(dp, "model"), "w_down": P("model", dp)}
+
+
+def _act(cfg):
+    return ACTS[cfg.act]
+
+
+def apply_seq(params, x, pc, cfg):
+    """x: [B, s_loc, D] -> [B, s_loc, D] (+residual). Inside manual region.
+
+    Per-shard w_gu is [D, 2*f_loc] with gate|up halves interleaved per shard
+    (column-parallel), so the activation is local.
+    """
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    gu = pc.ag_matmul(h, params["w_gu"])           # AG + GEMM  [B, S, 2*f_loc]
+    f_loc = gu.shape[-1] // 2
+    a = _act(cfg)(gu[..., :f_loc]) * gu[..., f_loc:]
+    out = pc.matmul_rs(a.astype(x.dtype), params["w_down"])  # GEMM + RS
+    return x + out
+
+
+def apply_decode(params, x, pc, cfg):
+    """x: [B, 1, D] replicated over model. Local matmuls + psum epilogue."""
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    gu = jnp.einsum("bsd,df->bsf", h, params["w_gu"])
+    f_loc = gu.shape[-1] // 2
+    a = _act(cfg)(gu[..., :f_loc]) * gu[..., f_loc:]
+    out = pc.psum(jnp.einsum("bsf,fd->bsd", a.astype(x.dtype), params["w_down"]))
+    return x + out

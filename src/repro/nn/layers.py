@@ -1,0 +1,135 @@
+"""Primitive layers (pure JAX, params-as-pytrees) + TP layout helpers."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "seq_flat", "seq_unflat",
+    "he_init", "emb_init", "GQALayout", "gqa_layout", "cdiv", "ACTS",
+]
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def rope(q, k, positions, theta: float = 1e4):
+    """Rotary embedding. q/k: [..., S, n_heads, hd]; positions: [S] or [B, S]."""
+    hd = q.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over heads: [..., S, 1, hd/2]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+
+    def rot(x):
+        x1, x2 = x[..., ::2], x[..., 1::2]
+        xr = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+        return xr.reshape(x.shape).astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+def seq_flat(x):
+    """[B, s, D] -> [s*B, D] (sequence-major rows, so ring AG/RS chunks are
+    contiguous global-sequence segments)."""
+    b, s, d = x.shape
+    return x.transpose(1, 0, 2).reshape(s * b, d)
+
+
+def seq_unflat(x, b: int):
+    """[S*B, N] -> [B, S, N]."""
+    sb, n = x.shape
+    s = sb // b
+    return x.reshape(s, b, n).transpose(1, 0, 2)
+
+
+def he_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in or shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape) * (1.0 / math.sqrt(fan))).astype(dtype)
+
+
+def emb_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class GQALayout:
+    """TP layout for (possibly awkward) GQA head counts on a fixed TP degree.
+
+    h_pad:    q heads padded to a multiple of tp (pad heads grad-masked to 0)
+    h_loc:    q heads per rank
+    kv_pad:   kv heads padded to a divisor-or-multiple alignment of tp
+    kv_loc:   kv heads per rank
+    rep:      ranks sharing one kv head (kv weights stored expanded with `rep`
+              identical copies; gradients group-averaged to keep them in sync)
+    kv_store: stored kv head count (= kv_pad * 1 if rep == 1 else tp)
+    """
+
+    n_heads: int
+    n_kv: int
+    tp: int
+    h_pad: int
+    h_loc: int
+    kv_pad: int
+    kv_loc: int
+    rep: int
+    kv_store: int
+
+
+def gqa_layout(n_heads: int, n_kv: int, tp: int) -> GQALayout:
+    if n_kv >= tp:
+        # pad kv up to a multiple of tp
+        kv_pad = cdiv(n_kv, tp) * tp
+        kv_loc = kv_pad // tp
+        rep = 1
+        kv_store = kv_pad
+    else:
+        # smallest divisor of tp that is >= n_kv
+        kv_pad = next(d for d in range(n_kv, tp + 1) if tp % d == 0)
+        rep = tp // kv_pad
+        kv_loc = 1
+        kv_store = tp  # expanded: rep identical copies per kv head
+    # pad q heads so every rank's heads align to whole local kv groups
+    h_pad = cdiv(n_heads, tp * kv_loc) * tp * kv_loc
+    h_loc = h_pad // tp
+    return GQALayout(n_heads, n_kv, tp, h_pad, h_loc, kv_pad, kv_loc, rep, kv_store)
+
+
+def sync_kv_grad(g, layout: GQALayout, axis: int = -1):
+    """Average the `rep` expanded copies of each kv head's gradient (global)."""
+    if layout.rep == 1:
+        return g
+    shape = g.shape
+    hd2 = shape[axis] // layout.kv_store
+    g = jnp.moveaxis(g, axis, -1)
+    lead = g.shape[:-1]
+    g = g.reshape(*lead, layout.kv_pad, layout.rep, hd2)
+    g = jnp.broadcast_to(g.mean(axis=-2, keepdims=True), g.shape)
+    g = g.reshape(*lead, layout.kv_store * hd2)
+    return jnp.moveaxis(g, -1, axis)

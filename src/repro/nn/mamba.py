@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD) block — heads sharded over the model axis.
+
+The attention-free mixer: TileLink's AG-KV overlap is inapplicable here (see
+DESIGN.md §Arch-applicability), but the paper's AG+GEMM / GEMM+RS pattern still
+covers the in/out projections, which dominate the block's FLOPs.  The SSD scan
+itself runs locally on each rank's head shard over the full (gathered)
+sequence.
+
+Layout per rank: d_inner_loc = d_inner / tp channels, h_loc = heads / tp.
+B/C projections are head-group (G) global and small -> computed replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.mamba_ssd import ssd_chunked
+from repro.nn.layers import rms_norm, he_init
+
+__all__ = ["init", "specs", "apply_seq", "apply_decode", "init_cache", "cache_specs"]
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    return d_inner, n_heads
+
+
+def init(key, cfg, tp: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    assert d_inner % tp == 0 and n_heads % tp == 0, (d_inner, n_heads, tp)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        # x and z (gate) projections — column parallel [D, 2*d_inner]
+        "w_xz": he_init(ks[0], (d, 2 * d_inner), dtype, fan_in=d),
+        # dt projection — per head, column parallel
+        "w_dt": he_init(ks[1], (d, n_heads), dtype, fan_in=d),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        # B and C projections — small, replicated
+        "w_bc": he_init(ks[2], (d, 2 * s.n_groups * s.d_state), dtype, fan_in=d),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        # depthwise conv over sequence (x part only)
+        "conv": he_init(ks[3], (s.d_conv, d_inner), dtype, fan_in=s.d_conv),
+        "w_out": he_init(ks[4], (d_inner, d), dtype, fan_in=d_inner),
+    }
+
+
+def specs(cfg, tp: int, dp) -> dict:
+    return {
+        "ln": P(None),
+        "w_xz": P(dp, "model"),
+        "w_dt": P(None, "model"),
+        "dt_bias": P("model"),
+        "w_bc": P(dp, None),
+        "a_log": P("model"),
+        "d_skip": P("model"),
+        "conv": P(None, "model"),
+        "w_out": P("model", dp),
+    }
+
+
+def _conv1d(x, w):
+    """Causal depthwise conv. x: [B, S, C], w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: xp.shape[1] - (k - 1 - i), :] * w[i] for i in range(k))
+    return out
+
+
+def apply_seq(params, x, pc, cfg, return_state: bool = False):
+    """x: [B, s_loc, D] -> [B, s_loc, D] (+residual). Inside manual region.
+
+    ``return_state`` additionally returns the decode cache (final SSM state +
+    conv tail) for prefill-into-cache."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+
+    # AG + GEMM: gather sequence, project to local channels (x | z | dt)
+    w = jnp.concatenate([params["w_xz"], params["w_dt"].astype(params["w_xz"].dtype)],
+                        axis=1)
+    xzdt = pc.ag_matmul(h, w)                       # [B, S, 2*di_loc + h_loc]
+    di_loc = params["w_xz"].shape[1] // 2
+    h_loc = params["w_dt"].shape[1]
+    s_glob = xzdt.shape[1]
+
+    xin = xzdt[..., :di_loc]
+    z = xzdt[..., di_loc: 2 * di_loc]
+    dt = jax.nn.softplus(
+        xzdt[..., 2 * di_loc:].astype(jnp.float32) + params["dt_bias"]
+    )
+
+    # B/C: replicated small projection on the gathered sequence
+    hfull = pc.all_gather_seq(h, 1)                 # [B, S, D]
+    bc = jnp.einsum("bsd,dn->bsn", hfull, params["w_bc"])
+    gn = s_cfg.n_groups * s_cfg.d_state
+    b_mat = bc[..., :gn].reshape(b, s_glob, s_cfg.n_groups, s_cfg.d_state)
+    c_mat = bc[..., gn:].reshape(b, s_glob, s_cfg.n_groups, s_cfg.d_state)
+
+    # causal depthwise conv on local channels (full sequence — no halo needed;
+    # params["conv"] is already the per-shard [K, di_loc] slice in here)
+    xin = jax.nn.silu(_conv1d(xin, params["conv"]))
+
+    xh = xin.reshape(b, s_glob, h_loc, s_cfg.headdim)
+    y = ssd_chunked(xh, dt, params["a_log"], b_mat, c_mat, chunk=s_cfg.chunk,
+                    return_state=return_state)
+    if return_state:
+        y, h_last = y
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, s_glob, di_loc) * jax.nn.silu(z)
+
+    # GEMM + RS back to the sequence-sharded residual stream
+    out = pc.matmul_rs(y.astype(x.dtype), params["w_out"])
+    res = x + out
+    if return_state:
+        # conv tail: last (d_conv - 1) pre-conv inputs of the local channels
+        k = s_cfg.d_conv - 1
+        tail = xzdt[:, -k:, :di_loc]
+        return res, {"ssm": h_last, "conv": tail.astype(x.dtype)}
+    return res
+
+
+def init_cache(cfg, tp: int, batch: int, dtype=jnp.bfloat16):
+    """Decode state: SSM state [B, H, N, P] + conv tail [B, d_conv-1, d_inner]."""
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.d_state, s.headdim), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+    }
+
+
+def cache_specs(dp):
+    return {"ssm": P(dp, "model", None, None), "conv": P(dp, None, "model")}
+
+
+def apply_decode(params, x, cache, pc, cfg):
+    """Single-token recurrent step. x: [B, 1, D] replicated over model."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    h = rms_norm(x, params["ln"], cfg.norm_eps)[:, 0]  # [B, D]
+    di_loc = params["w_xz"].shape[1] // 2
+    h_loc = params["w_dt"].shape[1]
+
+    xz = jnp.einsum("bd,dn->bn", h, params["w_xz"])
+    xin, z = xz[:, :di_loc], xz[:, di_loc:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dn->bn", h, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # [B, h_loc]
+    bc = jnp.einsum("bd,dn->bn", h, params["w_bc"])
+    gn = s_cfg.n_groups * s_cfg.d_state
+    b_mat = bc[:, :gn].reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    c_mat = bc[:, gn:].reshape(b, s_cfg.n_groups, s_cfg.d_state)
+
+    # conv step: cache holds the last (d_conv - 1) x inputs (local channels)
+    conv_tail = cache["conv"]                       # [B, K-1, di_loc]
+    xcat = jnp.concatenate([conv_tail, xin[:, None, :]], axis=1)
+    wconv = params["conv"]
+    xc = jax.nn.silu((xcat * wconv.astype(xcat.dtype)).sum(axis=1))
+    new_conv = xcat[:, 1:]
+
+    # recurrence: h_t = h_{t-1} * exp(dt*A) + dt * B x ; y = C . h + D x
+    a = -jnp.exp(params["a_log"])                   # [h_loc]
+    xh = xc.reshape(b, h_loc, s_cfg.headdim).astype(jnp.float32)
+    rep = h_loc // s_cfg.n_groups if s_cfg.n_groups <= h_loc else 1
+    bh = jnp.repeat(b_mat, rep, axis=1)[:, :h_loc].astype(jnp.float32)
+    ch = jnp.repeat(c_mat, rep, axis=1)[:, :h_loc].astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                # [B, h_loc]
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, xh)
+    new_ssm = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_ssm)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = (y.reshape(b, di_loc) * jax.nn.silu(z)).astype(x.dtype)
+
+    out = pc.psum(jnp.einsum("bn,nd->bd", y, params["w_out"]))
+    return x + out[:, None, :], {"ssm": new_ssm, "conv": new_conv}

@@ -1,0 +1,4 @@
+from repro.parallel.context import ParallelContext
+from repro.parallel import sharding
+
+__all__ = ["ParallelContext", "sharding"]

@@ -1,0 +1,139 @@
+"""ParallelContext — distribution configuration threaded through the model.
+
+Carries the mesh, axis roles, and the overlap mode:
+
+  mode="overlap"   TileLink ring schedules (core/overlap.py) — the paper
+  mode="baseline"  operator-centric AG/RS collectives — the non-overlap baseline
+  (both run inside partial-auto shard_map, manual over the TP axis only;
+   FSDP/DP axes stay under XLA's automatic partitioner)
+
+Layers call ``pc.ag_matmul`` / ``pc.matmul_rs`` / ``pc.psum`` on *per-shard*
+values while inside a manual region entered via ``pc.smap``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import overlap
+from repro.core.channels import BlockChannel
+
+__all__ = ["ParallelContext", "manual_only"]
+
+
+def manual_only(spec: P, manual_axes: Tuple[str, ...]) -> P:
+    """Strip a full PartitionSpec down to its manual-axis entries.
+
+    P(('pod','data'), 'model') with manual=('model',) -> P(None, 'model').
+    Used to derive shard_map in_specs from the global sharding table.
+    """
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in manual_axes)
+            return kept[0] if len(kept) == 1 else (kept if kept else None)
+        return entry if entry in manual_axes else None
+
+    return P(*(keep(e) for e in spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Any                               # jax Mesh
+    axis: str = "model"                     # TP / SP / EP axis
+    dp_axes: Tuple[str, ...] = ("pod", "data")
+    mode: str = "overlap"                   # "overlap" | "baseline"
+    channel: BlockChannel = None
+    seq_shard: bool = True                  # sequence-parallel residual stream
+    attn_p_bf16: bool = False               # cast softmax P to bf16 before P@V
+                                            # (halves attention HBM traffic)
+    moe_decode_stream: bool = False         # stream local experts once over all
+                                            # tokens in decode (bytes-optimal)
+
+    def __post_init__(self):
+        if self.channel is None:
+            object.__setattr__(self, "channel", BlockChannel(axis=self.axis))
+
+    # ---- static topology -----------------------------------------------------
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @property
+    def dp(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            if a in self.mesh.shape:
+                n *= self.mesh.shape[a]
+        return n
+
+    def dp_spec(self):
+        present = tuple(a for a in self.dp_axes if a in self.mesh.shape)
+        return present if len(present) > 1 else (present[0] if present else None)
+
+    # ---- ZeRO-3 use-time gather -------------------------------------------------
+    def use_gather(self, tree, spec_tree):
+        """Constrain parameters to drop DP/FSDP-axis sharding at use time.
+
+        Storage keeps params sharded over (dp x model); this constraint makes
+        XLA all-gather each layer's weights over the dp axes right before use
+        (ZeRO-3), instead of contraction-partitioning the matmuls over dp
+        (which would all-reduce activations — far more bytes).  The transpose
+        of the gather reduce-scatters the gradients back to dp shards.
+        """
+        def one(a, s):
+            return jax.lax.with_sharding_constraint(
+                a, jax.sharding.NamedSharding(
+                    self.mesh, manual_only(s, (self.axis,))))
+
+        return jax.tree_util.tree_map(
+            one, tree, spec_tree, is_leaf=lambda v: isinstance(v, P))
+
+    # ---- manual-region entry ---------------------------------------------------
+    def smap(self, fn: Callable, in_specs, out_specs) -> Callable:
+        """Partial-auto shard_map, manual over the TP axis only."""
+        return compat.shard_map(
+            fn, self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False, axis_names={self.axis},
+        )
+
+    def manual(self, spec: P) -> P:
+        return manual_only(spec, (self.axis,))
+
+    # ---- per-shard collective ops (call inside smap) ---------------------------
+    def ag_matmul(self, x, w, **kw):
+        if self.mode == "overlap":
+            return overlap.ag_matmul(x, w, axis=self.axis, channel=self.channel, **kw)
+        return overlap.ag_matmul_baseline(x, w, axis=self.axis, **kw)
+
+    def matmul_rs(self, x, w, **kw):
+        if self.mode == "overlap":
+            return overlap.matmul_rs(x, w, axis=self.axis, channel=self.channel, **kw)
+        return overlap.matmul_rs_baseline(x, w, axis=self.axis, **kw)
+
+    def ring_attention(self, q, k, v, **kw):
+        if self.mode == "overlap":
+            return overlap.ring_attention(q, k, v, axis=self.axis, **kw)
+        return overlap.ag_attention_baseline(q, k, v, axis=self.axis, **kw)
+
+    def ag_moe(self, x, ids, wts, w_gu, w_down, **kw):
+        from repro.core import moe_overlap
+
+        fn = moe_overlap.ag_moe if self.mode == "overlap" else moe_overlap.ag_moe_baseline
+        return fn(x, ids, wts, w_gu, w_down, axis=self.axis, **kw)
+
+    def psum(self, x):
+        return lax.psum(x, self.axis)
+
+    def axis_index(self):
+        return lax.axis_index(self.axis)
+
+    def all_gather_seq(self, x, dim: int):
+        return lax.all_gather(x, self.axis, axis=dim, tiled=True)

@@ -1,0 +1,31 @@
+"""Sharding utilities: placing pytrees, named shardings, spec manipulation."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["named", "place", "shardings_of", "is_spec"]
+
+
+def is_spec(v) -> bool:
+    return isinstance(v, P)
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def shardings_of(mesh, spec_tree):
+    """Map a pytree of PartitionSpec to NamedSharding."""
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=is_spec)
+
+
+def place(tree, mesh, spec_tree):
+    """device_put a pytree according to a matching spec pytree."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        tree, spec_tree, is_leaf=lambda v: is_spec(v) or v is None,
+    )

@@ -1,0 +1,3 @@
+from repro.runtime.resilience import StepWatchdog, ElasticMesh, run_resilient
+
+__all__ = ["StepWatchdog", "ElasticMesh", "run_resilient"]

@@ -1,0 +1,104 @@
+"""Fault tolerance & straggler mitigation for long-running jobs.
+
+Three cooperating pieces:
+
+  * ``StepWatchdog`` — tracks per-step wall time; flags a straggler when a step
+    exceeds ``threshold x`` the running median.  At fleet scale the same logic
+    runs per host against the heartbeat stream; a persistent straggler is
+    reported for eviction (triggering an elastic remesh).
+  * ``ElasticMesh`` — picks the best (pod, data, model) factorization for the
+    devices that are actually alive, preferring to shrink the data axis first
+    (keeps TP intact so checkpoints re-place without resharding weight math).
+  * ``run_resilient`` — the restart loop: run the train loop, on failure
+    restore the latest checkpoint (mesh-agnostic) and continue with a freshly
+    built mesh.  Tests drive it with injected failures.
+
+The data pipeline's global cursor (data/pipeline.py) guarantees exactly-once
+sample delivery across remeshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["StepWatchdog", "ElasticMesh", "run_resilient"]
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    threshold: float = 3.0
+    window: int = 32
+    min_samples: int = 5
+    _times: List[float] = dataclasses.field(default_factory=list)
+    _last_start: Optional[float] = None
+    stragglers: int = 0
+
+    def start(self):
+        self._last_start = time.monotonic()
+
+    def stop(self) -> bool:
+        """Record the step; True if this step was a straggler."""
+        dt = time.monotonic() - self._last_start
+        flagged = False
+        if len(self._times) >= self.min_samples:
+            med = float(np.median(self._times[-self.window:]))
+            if dt > self.threshold * med:
+                self.stragglers += 1
+                flagged = True
+        self._times.append(dt)
+        return flagged
+
+    def median(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+class ElasticMesh:
+    """Factorize a (possibly reduced) device count into mesh axes."""
+
+    def __init__(self, target_model: int = 16, axis_names=("pod", "data", "model")):
+        self.target_model = target_model
+        self.axis_names = axis_names
+
+    def plan(self, n_devices: int):
+        """Largest usable (pod, data, model) with model as close to target as
+        possible (shrinks data first, then model by powers of two)."""
+        model = self.target_model
+        while model > 1 and n_devices % model:
+            model //= 2
+        rest = n_devices // model
+        # pods only if rest splits evenly in 2 (multi-pod); else single pod
+        pod = 2 if rest % 2 == 0 and rest >= 2 else 1
+        data = rest // pod
+        return {"pod": pod, "data": data, "model": model}
+
+    def build(self, n_devices: Optional[int] = None):
+        import jax
+        from repro.compat import make_mesh
+
+        n = n_devices or len(jax.devices())
+        p = self.plan(n)
+        usable = p["pod"] * p["data"] * p["model"]
+        return make_mesh((p["pod"], p["data"], p["model"]), self.axis_names), usable
+
+
+def run_resilient(make_state: Callable, run: Callable, *, max_failures: int = 3,
+                  on_failure: Optional[Callable] = None):
+    """Restart loop.
+
+    make_state() -> state   (builds mesh, restores latest checkpoint)
+    run(state)   -> result  (train loop; raises on simulated/real failure)
+    """
+    failures = 0
+    while True:
+        state = make_state()
+        try:
+            return run(state)
+        except Exception as e:  # noqa: BLE001 — any device/host failure
+            failures += 1
+            if failures > max_failures:
+                raise
+            if on_failure is not None:
+                on_failure(e, failures)

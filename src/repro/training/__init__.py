@@ -1,0 +1,6 @@
+from repro.training.optimizer import AdamWConfig, init_opt_state, apply_update
+from repro.training.steps import make_train_step, softmax_xent
+from repro.training import compression
+
+__all__ = ["AdamWConfig", "init_opt_state", "apply_update", "make_train_step",
+           "softmax_xent", "compression"]

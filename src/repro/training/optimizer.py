@@ -1,0 +1,90 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, grad masks.
+
+Optimizer state is fp32 and sharded exactly like the parameters (ZeRO-style:
+the same PartitionSpec tree applies, so per-device optimizer bytes scale 1/N).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "apply_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_update(params, grads, state, cfg: AdamWConfig,
+                 grad_masks: Optional[Any] = None):
+    """One AdamW step. Returns (params, state, metrics)."""
+    if grad_masks is not None:
+        grads = jax.tree_util.tree_map(
+            lambda g, m: g if m is None else g * m.astype(g.dtype),
+            grads, grad_masks,
+            is_leaf=lambda v: v is None or isinstance(v, jnp.ndarray),
+        )
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    new = [upd(p, g, mu, nu) for p, g, mu, nu in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([n[0] for n in new])
+    new_mu = tdef.unflatten([n[1] for n in new])
+    new_nu = tdef.unflatten([n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

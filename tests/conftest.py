@@ -1,0 +1,36 @@
+"""Test harness configuration.
+
+Tests exercise the distributed machinery, so we simulate a SMALL device pool
+(8 CPU devices — NOT the dry-run's 512; launch/dryrun.py sets its own count
+process-locally).  Must run before jax initializes.
+"""
+import os
+import sys
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=8 "
+    "--xla_disable_hlo_passes=all-reduce-promotion",
+)
+sys.path.insert(0, os.path.dirname(__file__))  # `import utils` from tests/
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.compat import make_mesh  # noqa: E402
+from repro.parallel.context import ParallelContext  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return make_mesh((1, 2, 4), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def pc8(mesh8):
+    return ParallelContext(mesh=mesh8, mode="overlap")
+
+
+@pytest.fixture(scope="session")
+def pc8_baseline(mesh8):
+    return ParallelContext(mesh=mesh8, mode="baseline")

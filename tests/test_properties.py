@@ -1,0 +1,142 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapping import StaticTileMapping, build_moe_dynamic_mapping, cdiv
+from repro.core import schedules
+from repro.core.moe_overlap import _dispatch_tables, _capacity
+from repro.nn.layers import gqa_layout
+from repro.training.compression import compress_with_feedback, dequantize_int8
+
+SET = settings(max_examples=40, deadline=None)
+
+
+# ---- static tile mapping (paper §4.1 affine formulas) ------------------------
+
+@SET
+@given(
+    tiles_per_rank=st.integers(1, 8),
+    world=st.sampled_from([2, 4, 8, 16]),
+    channels=st.integers(1, 4),
+    tile=st.sampled_from([16, 64, 128]),
+)
+def test_static_mapping_invariants(tiles_per_rank, world, channels, tile):
+    dim = tiles_per_rank * world * tile
+    # paper's affine f_C requires channels | tiles_per_rank (see validate())
+    channels = next(c for c in range(min(channels, tiles_per_rank), 0, -1)
+                    if tiles_per_rank % c == 0)
+    m = StaticTileMapping(dim=dim, tile=tile, world_size=world,
+                          num_channels=channels)
+    m.validate()
+    seen_rows = 0
+    for t in range(m.num_tiles):
+        lo, hi = m.shape_range(t)
+        assert 0 <= lo < hi <= dim            # f_S in range
+        seen_rows += hi - lo
+        r = m.rank(t)
+        assert 0 <= r < world                 # f_R in range
+        assert t in m.tiles_of_rank(r)        # f_R inverse consistent
+        c = m.channel(t)
+        # channel refines rank: all tiles of one channel live on one rank
+        assert m.rank(t) == c // max(1, m.num_channels)
+    assert seen_rows == dim                   # f_S covers the tensor exactly
+
+    # traced forms agree with host forms
+    t_ids = jnp.arange(m.num_tiles)
+    np.testing.assert_array_equal(
+        np.asarray(m.rank_t(t_ids)), [m.rank(t) for t in range(m.num_tiles)])
+
+
+@SET
+@given(
+    e=st.integers(2, 8),
+    tiles_per_expert=st.integers(1, 4),
+    tile=st.sampled_from([8, 16]),
+)
+def test_dynamic_mapping_tables(e, tiles_per_expert, tile):
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(0, tiles_per_expert * tile + 1, size=e)
+    sizes = (sizes // tile) * tile            # tile-aligned groups
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+    m = build_moe_dynamic_mapping(offsets, tiles_per_expert, tile,
+                                  experts_per_rank=1)
+    lows, highs = np.asarray(m.f_S_low), np.asarray(m.f_S_high)
+    ranks = np.asarray(m.f_R)
+    covered = {ei: 0 for ei in range(e)}
+    for t in range(m.num_tiles):
+        ei = t // tiles_per_expert
+        assert ranks[t] == ei                 # f_R = expert rank
+        assert lows[t] <= highs[t]
+        assert highs[t] - lows[t] <= tile
+        covered[ei] += int(highs[t] - lows[t])
+    for ei in range(e):
+        assert covered[ei] == sizes[ei]       # tiles tile the group exactly
+
+
+# ---- schedules ---------------------------------------------------------------
+
+@SET
+@given(world=st.sampled_from([2, 4, 8, 16]))
+def test_schedules_are_permutations(world):
+    for rank in range(world):
+        for fn in (schedules.ring_rs_segment, schedules.ring_ag_source,
+                   schedules.bidir_ring_source, schedules.all2all_peer):
+            seen = [fn(rank, s, world) for s in range(world)]
+            assert sorted(seen) == list(range(world)), (fn.__name__, rank)
+
+
+# ---- MoE capacity dispatch ---------------------------------------------------
+
+@SET
+@given(m=st.integers(4, 64), k=st.integers(1, 4), e=st.sampled_from([2, 4, 8]))
+def test_dispatch_slots_unique_and_bounded(m, k, e):
+    rng = np.random.default_rng(1)
+    ids = jnp.asarray(rng.integers(0, e, size=(m, k)), jnp.int32)
+    valid = jnp.ones((m, k), jnp.float32)
+    cap = _capacity(m, k, e, 1.0)
+    disp = _dispatch_tables(ids, valid, e, cap, jnp.float32)  # [m,k,e,c]
+    d = np.asarray(disp)
+    # each (token, k) occupies at most one (expert, slot)
+    assert (d.sum(axis=(2, 3)) <= 1 + 1e-6).all()
+    # each (expert, slot) holds at most one (token, k)
+    assert (d.sum(axis=(0, 1)) <= 1 + 1e-6).all()
+    # nothing beyond capacity
+    assert d.shape[-1] == cap
+
+
+# ---- GQA layout --------------------------------------------------------------
+
+@SET
+@given(kv=st.integers(1, 32), group=st.integers(1, 8),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+def test_gqa_layout_invariants(kv, group, tp):
+    h = kv * group  # valid GQA: kv heads evenly divide q heads
+    lay = gqa_layout(h, kv, tp)
+    assert lay.h_pad >= h and lay.h_pad % tp == 0
+    assert lay.h_loc * tp == lay.h_pad
+    assert lay.kv_loc * tp == lay.kv_store * (tp // (lay.kv_store // max(1, lay.kv_loc))) \
+        or lay.kv_store in (lay.kv_pad, tp)
+    # every rank's q heads map to exactly one local kv group
+    assert lay.h_loc % lay.kv_loc == 0
+    if lay.rep > 1:
+        assert lay.kv_store == tp and lay.kv_loc == 1
+        assert lay.kv_pad * lay.rep == tp
+
+
+# ---- gradient compression ------------------------------------------------------
+
+@SET
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(4, 256))
+def test_error_feedback_contract(scale, n):
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    err0 = jnp.zeros_like(g)
+    q, s, err1 = compress_with_feedback(g, err0)
+    # exact identity: g + err0 == deq(q) + err1
+    np.testing.assert_allclose(np.asarray(g + err0),
+                               np.asarray(dequantize_int8(q, s) + err1),
+                               rtol=1e-5, atol=1e-5 * float(scale))
+    # bounded quantization error per element
+    assert np.abs(np.asarray(err1)).max() <= float(s) * 0.5 + 1e-6

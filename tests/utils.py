@@ -1,0 +1,19 @@
+"""Shared test helpers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.train import reduce_config  # re-export
+
+__all__ = ["reduce_config", "allclose", "tree_finite"]
+
+
+def allclose(a, b, atol=2e-4, rtol=2e-3):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+def tree_finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(tree))
