@@ -1,0 +1,90 @@
+"""Version-adaptive backend: tile-centric primitives -> the installed JAX.
+
+TileLink's design keeps primitives *tile-centric* and pushes every
+platform/toolchain quirk into a backend that lowers them to whatever the
+target actually supports.  This package is that backend for the JAX/Pallas
+port: the single point where kernels, tile primitives, and the mesh layer
+touch version-sensitive JAX API.  Nothing outside ``repro.backend`` may
+import ``jax.experimental.pallas.tpu`` (enforced by tests/test_backend.py).
+
+Supported-JAX policy
+--------------------
+Feature-detected at import (``hasattr`` probes, see ``features.py``), not
+version-gated.  Exercised in CI against:
+
+  * jax 0.4.3x  — ``pltpu.TPUCompilerParams``, experimental ``shard_map``
+    (``check_rep``/``auto``), no ``AxisType``, no TPU interpreter class
+    (plain ``interpret=True`` + discharge rules; remote DMAs need scalar
+    LOGICAL device ids, remote semaphore_signal unsupported);
+  * jax >= 0.6/0.7 — ``pltpu.CompilerParams``, public ``jax.shard_map``
+    (``check_vma``/``axis_names``), ``AxisType`` mesh types,
+    ``pltpu.InterpretParams`` TPU interpreter.
+
+Anything in between resolves by probe.  New drift belongs HERE, never in
+kernels.
+
+Targets
+-------
+``target()`` returns "tpu" (Mosaic lowering, ICI remote DMAs) or "emulated"
+(forced ``interpret`` execution so the full suite and benchmarks run on any
+CPU-only host).  Override with ``REPRO_BACKEND=tpu|emulated|auto``.
+
+Surface
+-------
+  mesh / manual regions:   make_mesh, shard_map
+  kernel launch:           pallas_call, compiler_params, prefetch_grid_spec,
+                           pl (stable pallas frontend handle), ANY
+  allocation:              vmem_scratch, smem_scratch, dma_semaphore,
+                           regular_semaphore
+  tile data movement:      make_async_copy, make_async_remote_copy (by
+                           logical rank), semaphore_signal, semaphore_wait
+  target control:          target, is_emulated, resolve_interpret,
+                           default_interpret, describe
+"""
+from repro.backend.features import describe
+from repro.backend.target import (
+    target,
+    is_emulated,
+    resolve_interpret,
+    default_interpret,
+)
+from repro.backend.mesh import make_mesh, shard_map, axis_size
+from repro.backend.lowering import (
+    pl,
+    ANY,
+    compiler_params,
+    pallas_call,
+    prefetch_grid_spec,
+    vmem_scratch,
+    smem_scratch,
+    dma_semaphore,
+    regular_semaphore,
+    make_async_copy,
+    make_async_remote_copy,
+    semaphore_signal,
+    semaphore_wait,
+)
+
+__all__ = [
+    "describe",
+    "target",
+    "is_emulated",
+    "resolve_interpret",
+    "default_interpret",
+    "make_mesh",
+    "shard_map",
+    "axis_size",
+    "pl",
+    "ANY",
+    "compiler_params",
+    "pallas_call",
+    "prefetch_grid_spec",
+    "vmem_scratch",
+    "smem_scratch",
+    "dma_semaphore",
+    "regular_semaphore",
+    "make_async_copy",
+    "make_async_remote_copy",
+    "semaphore_signal",
+    "semaphore_wait",
+]

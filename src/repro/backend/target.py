@@ -1,0 +1,70 @@
+"""Backend target selection: real TPU lowering vs. emulated (interpret) CPU.
+
+Targets:
+
+  "tpu"       lower Pallas kernels to Mosaic; remote DMAs ride the ICI.
+  "emulated"  force ``interpret`` execution so every kernel — including the
+              fused communication kernels — runs on any host with no TPU,
+              using XLA's forced-host-device pool for the mesh axes.
+
+Resolution order: the ``REPRO_BACKEND`` environment variable ("tpu",
+"emulated", or "auto"), else "tpu" iff ``jax.default_backend() == "tpu"``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.backend import features as _f
+
+__all__ = ["target", "is_emulated", "resolve_interpret", "default_interpret"]
+
+_ENV = "REPRO_BACKEND"
+_VALID = ("auto", "tpu", "emulated")
+
+
+def target() -> str:
+    """The active lowering target: "tpu" or "emulated"."""
+    choice = os.environ.get(_ENV, "auto").strip().lower()
+    if choice not in _VALID:
+        raise ValueError(
+            f"{_ENV}={choice!r}: expected one of {_VALID}"
+        )
+    if choice != "auto":
+        return choice
+    return "tpu" if jax.default_backend() == "tpu" else "emulated"
+
+
+def is_emulated() -> bool:
+    return target() == "emulated"
+
+
+def resolve_interpret(interpret=None):
+    """Normalize an ``interpret`` request into what pallas_call accepts here.
+
+    ``None`` means "whatever the target needs" (emulated -> interpret).  On
+    JAX with the dedicated TPU interpreter, interpreting returns an
+    ``InterpretParams`` instance (it simulates inter-device DMAs); on older
+    JAX it returns plain ``True`` (the generic interpreter's discharge rules
+    cover local and single-axis remote DMAs).
+    """
+    if interpret is None:
+        interpret = is_emulated()
+    if isinstance(interpret, bool):
+        if not interpret:
+            # The emulated target has no Mosaic compiler to fall back to:
+            # compiling is not an option, so interpret anyway.
+            if is_emulated():
+                interpret = True
+            else:
+                return False
+        if _f.INTERPRET_PARAMS_CLS is not None:
+            return _f.INTERPRET_PARAMS_CLS()
+        return True
+    return interpret  # already an InterpretParams-like object
+
+
+def default_interpret() -> bool:
+    """Plain-bool view of the target, for jit-static ``interpret`` args."""
+    return is_emulated()

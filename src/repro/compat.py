@@ -1,46 +1,18 @@
-"""Compatibility shims for JAX API drift (0.6 -> 0.8).
+"""Legacy compatibility surface — thin re-export of ``repro.backend``.
 
-Centralizes every version-sensitive import so the rest of the codebase
-targets a single stable surface.
+Historically this module held the JAX version shims; they now live in the
+``repro.backend`` package (single point of version adaptation).  Kept so
+existing imports (``from repro.compat import shard_map, make_mesh``) keep
+working; new code should import ``repro.backend`` directly.
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "make_mesh", "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten"]
+from repro.backend import make_mesh, shard_map  # noqa: F401
 
-
-def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = False,
-              axis_names=None):
-    """Version-stable shard_map wrapper (check_rep/check_vma naming drift).
-
-    ``axis_names``: when given, a partial-auto shard_map — only those mesh axes
-    are manual; the rest stay under the automatic partitioner.
-    """
-    try:
-        # jax >= 0.7 public API
-        kw = {}
-        if axis_names is not None:
-            kw["axis_names"] = frozenset(axis_names)
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=check_rep, **kw,
-        )
-    except (AttributeError, TypeError):
-        from jax.experimental.shard_map import shard_map as _sm
-
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_rep)
-
-
-def make_mesh(shape, axis_names):
-    """Mesh constructor pinned to Auto axis types (we use in_shardings/constraints)."""
-    try:
-        return jax.make_mesh(
-            shape, axis_names, axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names)
-        )
-    except TypeError:
-        return jax.make_mesh(shape, axis_names)
-
+__all__ = ["shard_map", "make_mesh", "tree_map", "tree_leaves",
+           "tree_flatten", "tree_unflatten"]
 
 tree_map = jax.tree_util.tree_map
 tree_leaves = jax.tree_util.tree_leaves

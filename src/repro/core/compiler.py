@@ -10,14 +10,18 @@ one of two backends:
                     compiles on any platform incl. the 512-device dry-run.
   backend="pallas"  fused Pallas kernels with explicit semaphores + remote DMAs
                     (repro/kernels/ag_gemm.py etc.) — the literal kernel-fusion
-                    analogue; runs on TPU, validated on CPU via interpret mode.
+                    analogue; runs on TPU, validated on CPU via the
+                    ``repro.backend`` emulated target (interpret mode).
+
+``interpret=None`` defers to ``repro.backend.default_interpret()``: interpret
+on CPU-only hosts, Mosaic on real TPUs.
 
 The returned callable must be invoked inside shard_map over ``channel.axis``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.core.channels import BlockChannel
 from repro.core import overlap as _xla
@@ -33,7 +37,7 @@ def compile_overlap(
     *,
     backend: str = "xla",
     overlapped: bool = True,
-    interpret: bool = False,
+    interpret: Optional[bool] = None,
     **kw,
 ) -> Callable:
     """Compile a tile program. See module docstring."""
@@ -74,6 +78,8 @@ def compile_overlap(
                 f"pallas backend for {kind}: the paper maps this workload's "
                 "communication to the copy engine (host primitives) — use backend='xla'"
             )
+        # interpret=None flows through to backend.resolve_interpret inside the
+        # kernel's pallas_call — the target policy lives in one place only
         return functools.partial(table[kind], channel=channel, interpret=interpret, **kw)
 
     raise ValueError(f"unknown backend {backend!r}")

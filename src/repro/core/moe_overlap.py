@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.backend import axis_size
+
 __all__ = ["ag_moe", "ag_moe_baseline", "local_expert_ffn", "moe_router"]
 
 
@@ -99,7 +101,7 @@ def ag_moe(
     local to the rank (EP).  Returns [m_loc, d] combined outputs for the local
     token chunk.
     """
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     m_loc, d = x.shape
     k = topk_ids.shape[1]
@@ -132,7 +134,7 @@ def ag_moe_baseline(
     act=jax.nn.silu,
 ):
     """Non-overlapping reference: AllGather tokens+tables, GroupGEMM, ReduceScatter."""
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     m_loc, _ = x.shape
     k = topk_ids.shape[1]

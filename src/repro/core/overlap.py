@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.backend import axis_size
 from repro.core.channels import BlockChannel
 
 __all__ = [
@@ -87,7 +88,7 @@ def ag_matmul(
     """
     channel = channel or BlockChannel(axis=axis)
     out_dtype = out_dtype or x.dtype
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
 
     m_loc, k_dim = x.shape[-2], x.shape[-1]
@@ -162,7 +163,7 @@ def matmul_rs(
     holds the fully reduced segment ``r``.
     """
     channel = channel or BlockChannel(axis=axis)
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     out_dtype = out_dtype or x.dtype
 
@@ -207,7 +208,7 @@ def psum_scatter_ring(x, *, axis: str):
     Used for epilogue reductions (e.g. MoE combine) where the partials already
     exist; still overlaps the adds with the permutes.
     """
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     m_glob = x.shape[-2]
     m_loc = m_glob // r_axis
@@ -245,7 +246,7 @@ def ring_attention(
     ``window`` (sliding-window attention) skips ring steps entirely outside the
     window — chunks whose global key range cannot attend are never computed.
     """
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     b, h, s_loc, d = q.shape
     hkv = k.shape[1]
@@ -305,7 +306,7 @@ def ring_attention(
 def ag_attention_baseline(q, k, v, *, axis: str, causal: bool = False,
                           scale: Optional[float] = None, window: Optional[int] = None):
     """Non-overlapping reference: AllGather full KV, then one dense attention."""
-    r_axis = lax.axis_size(axis)
+    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     b, h, s_loc, d = q.shape
     kg = lax.all_gather(k, axis, axis=2, tiled=True)

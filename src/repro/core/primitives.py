@@ -26,10 +26,7 @@ reorder across the barrier — the strict-dependency rule of the paper.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Union
-
-import jax
-from jax.experimental.pallas import tpu as pltpu
+from repro import backend
 
 __all__ = [
     "producer_tile_notify",
@@ -41,28 +38,18 @@ __all__ = [
 ]
 
 
-def _device_id(rank) -> tuple:
-    return (rank,)
-
-
 def producer_tile_notify(sem, *, rank=None, inc: int = 1):
     """Mark a producer tile done; notify its consumer tile's channel semaphore.
 
     ``rank=None`` notifies the local consumer (p2p, same device);
     ``rank=r`` notifies rank ``r`` (push mode); broadcast = loop over ranks.
     """
-    if rank is None:
-        pltpu.semaphore_signal(sem, inc)
-    else:
-        pltpu.semaphore_signal(
-            sem, inc, device_id=_device_id(rank),
-            device_id_type=pltpu.DeviceIdType.MESH,
-        )
+    backend.semaphore_signal(sem, inc, rank=rank)
 
 
 def consumer_tile_wait(sem, *, count: int = 1):
     """Block the consumer until ``count`` producer tiles signalled the channel."""
-    pltpu.semaphore_wait(sem, count)
+    backend.semaphore_wait(sem, count)
 
 
 # peers are the same mechanism on a dedicated peer channel (paper Fig. 4 ring)
@@ -77,13 +64,12 @@ def make_tile_push(src_ref, dst_ref, send_sem, recv_sem, rank):
     the ICI engine; compute proceeds; ``h.wait()`` (or the receiver's
     ``wait_recv``) completes it.
     """
-    return pltpu.make_async_remote_copy(
+    return backend.make_async_remote_copy(
         src_ref=src_ref,
         dst_ref=dst_ref,
         send_sem=send_sem,
         recv_sem=recv_sem,
-        device_id=_device_id(rank),
-        device_id_type=pltpu.DeviceIdType.MESH,
+        rank=rank,
     )
 
 

@@ -17,7 +17,7 @@ One kernel per device (launched under shard_map over the TP axis) both
 Slot-per-origin gather buffer (``buf[src]``) makes the schedule race-free
 without credit counters: each slot is written exactly once per ring pass.
 
-Validated on CPU via ``pltpu.InterpretParams`` (TPU interpret mode simulates
+Validated on CPU via the backend's emulated target (the interpreter simulates
 the inter-device DMAs + semaphores); on real TPU the same code lowers to
 Mosaic with ICI RDMA.
 """
@@ -29,9 +29,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro import backend
+from repro.backend import pl
+from repro.core import primitives
 from repro.core.channels import BlockChannel
 
 __all__ = ["ag_gemm_shard"]
@@ -49,26 +50,25 @@ def _ag_gemm_kernel(x_ref, w_ref, o_ref, buf, x_vmem, acc, out_tile, copy_sem,
     @pl.when(jnp.logical_and(s == 0, j == 0))
     def _local_seed():
         # stage own shard into the gather buffer (producer tile 'my')
-        c = pltpu.make_async_copy(x_ref, buf.at[my], copy_sem)
+        c = backend.make_async_copy(x_ref, buf.at[my], copy_sem)
         c.start()
         c.wait()
 
     def _fwd_rdma(step, src_slot):
         # forward from the VMEM staging copy (x_vmem) to the right neighbour's
         # gather slot — src and dst must not alias for the DMA engine
-        return pltpu.make_async_remote_copy(
+        return primitives.make_tile_push(
             src_ref=x_vmem,
             dst_ref=buf.at[src_slot],
             send_sem=send_sem,
             recv_sem=recv_sems.at[step],
-            device_id=(right,),
-            device_id_type=pltpu.DeviceIdType.MESH,
+            rank=right,
         )
 
     @pl.when(j == 0)
     def _comm():
         # consumer_tile_wait + bring chunk to VMEM for the MXU
-        c = pltpu.make_async_copy(buf.at[src], x_vmem, copy_sem)
+        c = backend.make_async_copy(buf.at[src], x_vmem, copy_sem)
         c.start()
         c.wait()
 
@@ -81,7 +81,7 @@ def _ag_gemm_kernel(x_ref, w_ref, o_ref, buf, x_vmem, acc, out_tile, copy_sem,
     # compute tile j of the consumer GEMM (CompSpec tile)
     acc[...] = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=jnp.float32)
     out_tile[...] = acc[...].astype(out_tile.dtype)
-    oc = pltpu.make_async_copy(
+    oc = backend.make_async_copy(
         out_tile, o_ref.at[pl.ds(src * m_loc, m_loc), pl.ds(j * bn, bn)], out_sem
     )
     oc.start()
@@ -105,7 +105,9 @@ def ag_gemm_shard(
     """Per-shard fused AG+GEMM. x: [m_loc, K], w: [K, n_loc] -> [R*m_loc, n_loc].
 
     Call inside shard_map over ``channel.axis``.  ``interpret=True`` runs the
-    TPU interpret mode (CPU validation); False lowers to Mosaic for real TPUs.
+    interpreter (CPU validation); False lowers to Mosaic on TPU hosts — on a
+    CPU-only host the emulated backend target interprets regardless, since
+    there is no Mosaic toolchain to compile with.
     """
     channel = channel or BlockChannel(axis="model")
     axis = channel.axis
@@ -119,28 +121,25 @@ def ag_gemm_shard(
         _ag_gemm_kernel, axis=axis, world=world_size, n_tiles=n_tiles,
         m_loc=m_loc, bn=bn,
     )
-    interp = pltpu.InterpretParams() if interpret else False
-    return pl.pallas_call(
+    return backend.pallas_call(
         kern,
         grid=(world_size, n_tiles),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=backend.ANY),
             pl.BlockSpec((k, bn), lambda s, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((world_size * m_loc, n_loc), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((world_size, m_loc, k), x.dtype),   # gather buffer
-            pltpu.VMEM((m_loc, k), x.dtype),               # current chunk
-            pltpu.VMEM((m_loc, bn), jnp.float32),          # accumulator
-            pltpu.VMEM((m_loc, bn), x.dtype),              # cast staging tile
-            pltpu.SemaphoreType.DMA,                       # local copies
-            pltpu.SemaphoreType.DMA,                       # sends
-            pltpu.SemaphoreType.DMA((world_size,)),        # per-step recv
-            pltpu.SemaphoreType.DMA,                       # out stores
+            backend.vmem_scratch((world_size, m_loc, k), x.dtype),  # gather buffer
+            backend.vmem_scratch((m_loc, k), x.dtype),       # current chunk
+            backend.vmem_scratch((m_loc, bn), jnp.float32),  # accumulator
+            backend.vmem_scratch((m_loc, bn), x.dtype),      # cast staging tile
+            backend.dma_semaphore(),                         # local copies
+            backend.dma_semaphore(),                         # sends
+            backend.dma_semaphore((world_size,)),            # per-step recv
+            backend.dma_semaphore(),                         # out stores
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")
-        ),
-        interpret=interp,
+        dimension_semantics=("arbitrary", "arbitrary"),
+        interpret=interpret,
     )(x, w)

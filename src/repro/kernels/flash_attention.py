@@ -14,8 +14,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import backend
+from repro.backend import pl
 
 __all__ = ["flash_attention"]
 
@@ -97,7 +98,7 @@ def flash_attention(q, k, v, *, causal=False, window: Optional[int] = None,
         _fa_kernel, scale=scale, causal=causal, window=window,
         bq=bq, bk=bk, n_kv=n_kv, sq=sq, sk=sk,
     )
-    return pl.pallas_call(
+    return backend.pallas_call(
         kern,
         grid=(bh, sq // bq, n_kv),
         in_specs=[
@@ -108,12 +109,10 @@ def flash_attention(q, k, v, *, causal=False, window: Optional[int] = None,
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
+            backend.vmem_scratch((bq, 1), jnp.float32),
+            backend.vmem_scratch((bq, 1), jnp.float32),
+            backend.vmem_scratch((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(q, k, v)

@@ -30,9 +30,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro import backend
+from repro.backend import pl
+from repro.core import primitives
 from repro.core.channels import BlockChannel
 
 __all__ = ["gemm_rs_shard"]
@@ -50,19 +51,18 @@ def _gemm_rs_kernel(x_ref, w_ref, o_ref, x_vmem, acc, prev, out_stage, out_cast,
     def _push_rdma(stage):
         # identical descriptor on sender & receiver (SPMD) — sender start()s,
         # receiver wait_recv()s, sender wait_send()s before staging reuse
-        return pltpu.make_async_remote_copy(
+        return primitives.make_tile_push(
             src_ref=out_stage,
             dst_ref=rbuf.at[stage],
             send_sem=send_sem,
             recv_sem=recv_sems.at[stage],
-            device_id=(left,),
-            device_id_type=pltpu.DeviceIdType.MESH,
+            rank=left,
         )
 
     @pl.when(j == 0)
     def _stage_setup():
         # shape mapping f_S: bring segment `seg` of x into VMEM
-        c = pltpu.make_async_copy(
+        c = backend.make_async_copy(
             x_ref.at[pl.ds(seg * m_loc, m_loc), :], x_vmem, copy_sem
         )
         c.start()
@@ -72,7 +72,7 @@ def _gemm_rs_kernel(x_ref, w_ref, o_ref, x_vmem, acc, prev, out_stage, out_cast,
         def _recv_prev():
             # consumer_tile_wait (acquire): partial from rank r+1, stage s-1
             _push_rdma(s - 1).wait_recv()
-            c2 = pltpu.make_async_copy(rbuf.at[s - 1], prev, copy_sem)
+            c2 = backend.make_async_copy(rbuf.at[s - 1], prev, copy_sem)
             c2.start()
             c2.wait()
             # release: our stage s-1 push drained before out_stage is reused
@@ -100,7 +100,7 @@ def _gemm_rs_kernel(x_ref, w_ref, o_ref, x_vmem, acc, prev, out_stage, out_cast,
         def _store():
             # paper lines 22-23: final stage stores the reduced segment (== my)
             out_cast[...] = acc[...].astype(out_cast.dtype)
-            c = pltpu.make_async_copy(out_cast, o_ref, copy_sem)
+            c = backend.make_async_copy(out_cast, o_ref, copy_sem)
             c.start()
             c.wait()
 
@@ -117,6 +117,8 @@ def gemm_rs_shard(
     """Per-shard fused GEMM+RS. x: [M, k_loc], w: [k_loc, N] -> [M/R, N].
 
     Call inside shard_map over ``channel.axis``; partials accumulate in fp32.
+    ``interpret=False`` lowers to Mosaic only on TPU hosts — on a CPU-only
+    host the emulated backend target interprets regardless.
     """
     channel = channel or BlockChannel(axis="model")
     axis = channel.axis
@@ -132,29 +134,26 @@ def gemm_rs_shard(
         _gemm_rs_kernel, axis=axis, world=world_size, n_tiles=n_tiles,
         m_loc=m_loc, bn=bn,
     )
-    interp = pltpu.InterpretParams() if interpret else False
-    return pl.pallas_call(
+    return backend.pallas_call(
         kern,
         grid=(world_size, n_tiles),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=backend.ANY),
             pl.BlockSpec((k_loc, bn), lambda s, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((m_loc, n), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((m_loc, k_loc), x.dtype),          # x segment
-            pltpu.VMEM((m_loc, n), jnp.float32),           # stage accumulator
-            pltpu.VMEM((m_loc, n), jnp.float32),           # received partial
-            pltpu.VMEM((m_loc, n), jnp.float32),           # staged outgoing
-            pltpu.VMEM((m_loc, n), x.dtype),               # final cast
-            pltpu.SemaphoreType.DMA,                       # local copies
-            pltpu.SemaphoreType.DMA,                       # sends
-            pltpu.SemaphoreType.DMA((world_size,)),        # per-stage recv
-            pltpu.VMEM((world_size, m_loc, n), jnp.float32),  # slot-per-stage rbuf
+            backend.vmem_scratch((m_loc, k_loc), x.dtype),   # x segment
+            backend.vmem_scratch((m_loc, n), jnp.float32),   # stage accumulator
+            backend.vmem_scratch((m_loc, n), jnp.float32),   # received partial
+            backend.vmem_scratch((m_loc, n), jnp.float32),   # staged outgoing
+            backend.vmem_scratch((m_loc, n), x.dtype),       # final cast
+            backend.dma_semaphore(),                         # local copies
+            backend.dma_semaphore(),                         # sends
+            backend.dma_semaphore((world_size,)),            # per-stage recv
+            backend.vmem_scratch((world_size, m_loc, n), jnp.float32),  # rbuf
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")
-        ),
-        interpret=interp,
+        dimension_semantics=("arbitrary", "arbitrary"),
+        interpret=interpret,
     )(x, w)

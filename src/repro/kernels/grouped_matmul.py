@@ -16,8 +16,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import backend
+from repro.backend import pl
 
 __all__ = ["grouped_matmul"]
 
@@ -40,7 +41,7 @@ def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None,
     assert tile_expert.shape == (m // bm,), (tile_expert.shape, m, bm)
     n_k = k // bk
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = backend.prefetch_grid_spec(
         num_scalar_prefetch=1,
         grid=(m // bm, n // bn, n_k),
         in_specs=[
@@ -49,7 +50,7 @@ def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None,
             pl.BlockSpec((1, bk, bn), lambda i, j, kk, expert: (expert[i], kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, expert: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[backend.vmem_scratch((bm, bn), jnp.float32)],
     )
 
     def _kernel(expert_ref, x_ref, w_ref, o_ref, acc_ref):
@@ -64,12 +65,10 @@ def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None,
         def _store():
             o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
-    return pl.pallas_call(
+    return backend.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
-        ),
+        dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         interpret=interpret,
     )(tile_expert, x, w)

@@ -15,8 +15,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import backend
+from repro.backend import pl
 
 __all__ = ["ssd_chunked", "ssd_intra_chunk"]
 
@@ -129,7 +130,7 @@ def ssd_intra_chunk(cum, cb, xdt, *, interpret=False):
     xdt: [T, Q, P] -> y: [T, Q, P]."""
     t, q = cum.shape
     p = xdt.shape[-1]
-    return pl.pallas_call(
+    return backend.pallas_call(
         functools.partial(_ssd_intra_kernel, q=q),
         grid=(t,),
         in_specs=[
@@ -139,8 +140,6 @@ def ssd_intra_chunk(cum, cb, xdt, *, interpret=False):
         ],
         out_specs=pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((t, q, p), xdt.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)
-        ),
+        dimension_semantics=("parallel",),
         interpret=interpret,
     )(cum.reshape(t, q, 1), cb, xdt)

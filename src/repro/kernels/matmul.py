@@ -10,8 +10,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import backend
+from repro.backend import pl
 
 __all__ = ["matmul", "DEFAULT_TILE"]
 
@@ -45,7 +46,7 @@ def matmul(x, w, *, tile=DEFAULT_TILE, out_dtype=None, interpret=False):
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w.shape, tile)
     n_k = k // bk
 
-    return pl.pallas_call(
+    return backend.pallas_call(
         functools.partial(_matmul_kernel, n_k=n_k),
         grid=(m // bm, n // bn, n_k),
         in_specs=[
@@ -54,9 +55,7 @@ def matmul(x, w, *, tile=DEFAULT_TILE, out_dtype=None, interpret=False):
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
+        scratch_shapes=[backend.vmem_scratch((bm, bn), jnp.float32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(x, w)

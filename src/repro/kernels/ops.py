@@ -1,11 +1,11 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 ``interpret`` defaults to auto: True when no TPU is present (CPU validation via
-the TPU interpret mode), False on real TPUs (Mosaic lowering).
+the backend's emulated target), False on real TPUs (Mosaic lowering).
 """
 from __future__ import annotations
 
-import jax
+from repro import backend
 
 from repro.kernels.matmul import matmul
 from repro.kernels.flash_attention import flash_attention
@@ -23,4 +23,4 @@ __all__ = [
 
 def auto_interpret() -> bool:
     """True when running without a TPU (kernels execute in interpret mode)."""
-    return jax.default_backend() != "tpu"
+    return backend.default_interpret()
