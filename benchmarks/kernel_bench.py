@@ -1,13 +1,27 @@
-"""Decoupled design-space sweep (paper §3.1): comm tile count (channels, f_C)
-and tile order (ring vs bidirectional) for AG+GEMM — the paper's argument that
-communication and computation must tune independently."""
+"""Decoupled design-space sweep (paper §3.1) through the compiled frontend.
+
+Default mode: the paper's argument that communication and computation must
+tune independently — comm tile count (channels, f_C) x tile order for
+AG+GEMM, timed against the C=1 ring base.
+
+``--smoke``: CI guard for the plan layer.  Sweeps a few ``BlockChannel``
+design points through ``compile_overlap`` for every workload kind, checks
+each against its non-overlapping baseline, times it, and emits
+``BENCH_kernels.json``.  Any parity failure or compile error exits non-zero,
+so schedule regressions fail the build loudly.
+"""
+import argparse
+import json
+import sys
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import overlap, BlockChannel, CommSpec
-from benchmarks.common import mesh8, time_fn, row
+from repro.core import BlockChannel, CommSpec, CompSpec, compile_overlap
+from repro.core.moe_overlap import moe_router
+from benchmarks.common import mesh8, mesh_tp, time_fn, row
 
 
 def main():
@@ -20,11 +34,11 @@ def main():
                        NamedSharding(mesh, P(None, "model")))
     base = None
     for channels in (1, 2, 4):
-        for order in ("ring", "bidir_ring"):
+        for order in ("ring", "bidir_ring", "all2all"):
             ch = BlockChannel(axis="model", num_channels=channels,
                               comm=CommSpec(order=order))
             fn = jax.jit(shard_map(
-                lambda a, b: overlap.ag_matmul(a, b, axis="model", channel=ch),
+                compile_overlap("ag_matmul", ch),
                 mesh, in_specs=(P("model", None), P(None, "model")),
                 out_specs=P(None, "model")))
             t = time_fn(fn, x, w)
@@ -33,5 +47,121 @@ def main():
             row(f"kernel/ag_gemm/C={channels}/{order}", t, f"{base/t:.2f}x")
 
 
+# ---- --smoke: sweep the plan layer across every kind ------------------------
+
+SMOKE_POINTS = [
+    # (order, num_channels, accum_dtype)
+    ("ring", 1, "float32"),
+    ("ring", 2, "float32"),
+    ("bidir_ring", 2, "float32"),
+    ("all2all", 1, "float32"),
+    ("ring", 2, "bfloat16"),
+]
+
+
+def _smoke_cases(mesh, r):
+    """kind -> (overlap fn(ch), baseline fn, args) on tiny shapes."""
+    key = jax.random.PRNGKey(0)
+    m, k, n = r * 16, 32, 32
+    x_ag = jax.random.normal(key, (m, k), jnp.float32)
+    w_ag = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    x_rs = jax.random.normal(key, (m, r * 16), jnp.float32)
+    w_rs = jax.random.normal(jax.random.PRNGKey(2), (r * 16, n), jnp.float32)
+    b, hh, sq, d = 1, 2, r * 16, 16
+    q = jax.random.normal(key, (b, hh, sq, d))
+    kv = jax.random.normal(jax.random.PRNGKey(3), (b, 1, sq, d))
+    e, ktop, dm, f = 8, 2, 16, 16
+    x_moe = jax.random.normal(key, (r * 16, dm)) * 0.5
+    wr = jax.random.normal(jax.random.PRNGKey(4), (dm, e))
+    wgu = jax.random.normal(jax.random.PRNGKey(5), (e, dm, 2 * f)) * 0.1
+    wdn = jax.random.normal(jax.random.PRNGKey(6), (e, f, dm)) * 0.1
+
+    def sm(fn, in_specs, out_specs):
+        return jax.jit(shard_map(fn, mesh, in_specs=in_specs,
+                                 out_specs=out_specs))
+
+    def moe_wrap(ch, overlapped):
+        g = compile_overlap("ag_moe", ch, overlapped=overlapped,
+                            capacity_factor=8.0)
+
+        def f_(xs, wgu_, wdn_):
+            ids, wts, _ = moe_router(xs, wr, num_experts=e, top_k=ktop)
+            return g(xs, ids, wts, wgu_, wdn_)
+        return f_
+
+    mspecs = (P("model", None), P("model", None, None), P("model", None, None))
+    return {
+        "ag_matmul": (
+            lambda ch, ov: sm(compile_overlap("ag_matmul", ch, overlapped=ov),
+                              (P("model", None), P(None, None)), P(None, None)),
+            (x_ag, w_ag)),
+        "matmul_rs": (
+            lambda ch, ov: sm(compile_overlap("matmul_rs", ch, overlapped=ov),
+                              (P(None, "model"), P("model", None)),
+                              P("model", None)),
+            (x_rs, w_rs)),
+        "ag_attention": (
+            lambda ch, ov: sm(compile_overlap("ag_attention", ch, overlapped=ov,
+                                              causal=True),
+                              (P(None, None, "model"),) * 3,
+                              P(None, None, "model")),
+            (q, kv, kv)),
+        "ag_moe": (
+            lambda ch, ov: sm(moe_wrap(ch, ov), mspecs, P("model", None)),
+            (x_moe, wgu, wdn)),
+    }
+
+
+def smoke(out_path: str = "BENCH_kernels.json") -> int:
+    r = 4
+    mesh = mesh_tp(r)
+    cases = _smoke_cases(mesh, r)
+    results, failures = {}, []
+    for kind, (build, args) in cases.items():
+        base_fn = build(BlockChannel(axis="model"), False)
+        ref = base_fn(*args)
+        base_us = time_fn(base_fn, *args, repeats=3, warmup=1)
+        for order, nch, accum in SMOKE_POINTS:
+            tag = f"{kind}/{order}/C={nch}/{accum}"
+            ch = BlockChannel(axis="model", num_channels=nch,
+                              comm=CommSpec(order=order),
+                              comp=CompSpec(accum_dtype=accum))
+            try:
+                fn = build(ch, True)
+                y = fn(*args)
+                tol = 1e-3 if accum == "float32" else 1e-1
+                err = float(jnp.max(jnp.abs(
+                    jnp.asarray(y, jnp.float32) - jnp.asarray(ref, jnp.float32))))
+                ok = bool(err < tol * max(1.0, float(jnp.max(jnp.abs(ref)))))
+                us = time_fn(fn, *args, repeats=3, warmup=1)
+            except Exception as exc:  # loud: any compile/run error fails CI
+                failures.append(f"{tag}: {type(exc).__name__}: {exc}")
+                results[tag] = {"error": str(exc)}
+                continue
+            if not ok:
+                failures.append(f"{tag}: parity error {err:.3e} (tol {tol})")
+            results[tag] = {
+                "us": round(us, 1),
+                "baseline_us": round(base_us, 1),
+                "speedup_vs_nonoverlap": round(base_us / us, 3),
+                "max_abs_err": err,
+                "ok": ok,
+            }
+            row(f"smoke/{tag}", us, f"{base_us/us:.2f}x")
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {len(results)} design points, "
+          f"{len(failures)} failures")
+    for f_ in failures:
+        print(f"FAIL {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sweep of BlockChannel configs through "
+                         "compile_overlap; writes BENCH_kernels.json")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    a = ap.parse_args()
+    sys.exit(smoke(a.out) if a.smoke else main())

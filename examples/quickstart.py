@@ -18,6 +18,9 @@ from repro.compat import shard_map, make_mesh
 from repro.core import compile_overlap, BlockChannel, CommSpec
 
 mesh = make_mesh((8,), ("model",))
+# the full CommSpec x CompSpec space compiles — try order="bidir_ring" or
+# "all2all", any num_channels, comp=CompSpec(accum_dtype="bfloat16"): the
+# frontend lowers (kind, BlockChannel) -> tile plan -> generic executor
 channel = BlockChannel(axis="model", num_channels=2,
                        comm=CommSpec(order="ring", resource="dma"))
 

@@ -1,17 +1,48 @@
 """BlockChannel — the tile-centric mapping context (paper §6).
 
-The paper threads a special ``BlockChannel`` parameter through generated kernels;
-it "encapsulates distributed mapping metadata including current process rank,
-total world size, synchronization barrier configurations, and producer/consumer
-block relationships".  Here it is an explicit dataclass consumed by both overlap
-backends (XLA shard_map schedules and fused Pallas kernels).
+The paper threads a special ``BlockChannel`` parameter through generated
+kernels; it "encapsulates distributed mapping metadata including current
+process rank, total world size, synchronization barrier configurations, and
+producer/consumer block relationships".  Here it is the *sole input* to the
+frontend's plan layer: ``compile_overlap`` lowers ``(kind, BlockChannel)``
+through ``core/plan.build_plan`` into a :class:`~repro.core.plan.TilePlan`
+that both backends execute — the XLA backend via the generic schedule
+executor (``core/overlap.run_plan``), the Pallas backend via schedule tables
+baked into the fused kernels.  Every field below is therefore *live* across
+all workload kinds:
+
+  ``comm.order``      picks the per-step peer schedule (ring / bidir_ring /
+                      all2all) for tiles and flowing partials alike;
+  ``num_channels``    chunks each rank's shard into C independently scheduled
+                      flows (C outstanding transfers — the paper's f_C);
+  ``comp.accum_dtype``is the flow dtype: what partial reductions accumulate
+                      in and travel the wire in (fp32 = reduction-exact,
+                      bf16 = half the ring bytes);
+  ``comm.resource``   / ``comm.mode`` select the transfer engine and
+                      push/pull realization (paper Fig. 2c, §3.2.2).
+
+Specs validate at construction — an unsupported order/resource/mode/dtype or
+a non-positive channel count raises immediately, not deep inside a trace.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
-__all__ = ["BlockChannel", "CommSpec", "CompSpec"]
+import jax.numpy as jnp
+
+__all__ = ["BlockChannel", "CommSpec", "CompSpec",
+           "ORDERS", "RESOURCES", "MODES"]
+
+ORDERS = ("ring", "bidir_ring", "all2all")
+RESOURCES = ("dma", "core")
+MODES = ("push", "pull")
+
+
+def _check(value, allowed, what: str):
+    if value not in allowed:
+        raise ValueError(
+            f"unsupported {what} {value!r}; supported: {allowed}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,17 +62,42 @@ class CommSpec:
     resource: str = "dma"
     mode: str = "push"
 
+    def __post_init__(self):
+        _check(self.order, ORDERS, "tile order")
+        _check(self.resource, RESOURCES, "comm resource")
+        _check(self.mode, MODES, "comm mode")
+        if self.tile < 1:
+            raise ValueError(f"comm tile must be >= 1, got {self.tile}")
+
 
 @dataclasses.dataclass(frozen=True)
 class CompSpec:
     """Computation half of the decoupled design space.
 
-    tile: (tm, tn, tk) MXU tile for the consumer compute kernel — chosen
-    independently from CommSpec.tile (the core decoupling of the paper).
+    tile:        (tm, tn, tk) MXU tile for the consumer compute kernel — chosen
+                 independently from CommSpec.tile (the core decoupling of the
+                 paper).
+    accum_dtype: dtype partial reductions accumulate in AND travel the wire in
+                 (the flow dtype): "float32" is reduction-exact, "bfloat16"
+                 halves the flowing bytes (§Perf optimization).
     """
 
     tile: Tuple[int, int, int] = (128, 128, 128)
     accum_dtype: str = "float32"
+
+    def __post_init__(self):
+        if len(self.tile) != 3 or any(t < 1 for t in self.tile):
+            raise ValueError(
+                f"comp tile must be 3 positive ints (tm, tn, tk), got {self.tile}")
+        try:
+            dt = jnp.dtype(self.accum_dtype)
+        except TypeError as e:
+            raise ValueError(
+                f"unsupported accum_dtype {self.accum_dtype!r}: {e}") from None
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise ValueError(
+                f"accum_dtype must be floating (flow/reduction dtype), "
+                f"got {self.accum_dtype!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +106,9 @@ class BlockChannel:
 
     axis:          mesh axis name the collective runs over (e.g. "model").
     num_channels:  barrier channels per rank (paper's C; controls f_C granularity
-                   and == number of outstanding DMA chunks per rank here).
+                   and == number of outstanding DMA chunks per rank here).  If C
+                   does not divide the chunked extent at trace time, the plan
+                   layer falls back to the largest divisor <= C (with a warning).
     comm/comp:     the two independent halves of the design space.
     """
 
@@ -59,6 +117,18 @@ class BlockChannel:
     comm: CommSpec = CommSpec()
     comp: CompSpec = CompSpec()
     name: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.axis or not isinstance(self.axis, str):
+            raise ValueError(f"axis must be a non-empty mesh axis name, "
+                             f"got {self.axis!r}")
+        if self.num_channels < 1:
+            raise ValueError(
+                f"num_channels must be >= 1, got {self.num_channels}")
+        if not isinstance(self.comm, CommSpec):
+            raise TypeError(f"comm must be a CommSpec, got {type(self.comm)}")
+        if not isinstance(self.comp, CompSpec):
+            raise TypeError(f"comp must be a CompSpec, got {type(self.comp)}")
 
     def with_(self, **kw) -> "BlockChannel":
         return dataclasses.replace(self, **kw)

@@ -1,17 +1,32 @@
-"""TileLink frontend: compile tile programs to a chosen backend.
+"""TileLink frontend: compile ``(kind, BlockChannel)`` tile programs.
 
 The paper's frontend takes (communication spec, computation spec, BlockChannel)
-and emits a fused kernel.  Here ``compile_overlap`` is that entry point: given a
-workload kind and a BlockChannel, it returns a *per-shard callable* lowered to
-one of two backends:
+and emits a fused kernel.  ``compile_overlap`` is that entry point, and it is a
+real (if small) compiler pipeline:
 
-  backend="xla"     decomposed-inside-jit ring schedules (core/overlap.py) —
-                    communication on XLA async collectives ("copy engine"),
-                    compiles on any platform incl. the 512-device dry-run.
-  backend="pallas"  fused Pallas kernels with explicit semaphores + remote DMAs
-                    (repro/kernels/ag_gemm.py etc.) — the literal kernel-fusion
-                    analogue; runs on TPU, validated on CPU via the
-                    ``repro.backend`` emulated target (interpret mode).
+  1. **validate** — ``BlockChannel`` fields are checked at construction; the
+     (kind, backend) pair is checked here, with one structured
+     ``NotImplementedError`` for every unsupported combination;
+  2. **plan** — ``core/plan.build_plan`` lowers the channel's CommSpec/CompSpec
+     into a :class:`~repro.core.plan.TilePlan`: per-channel per-step peer
+     schedules (from ``schedules.SCHEDULES``), flow permutations, flow kind,
+     and flow dtype.  Plans are cached on ``(kind, channel, world,
+     num_channels)`` — ``plan.plan_cache_info()`` shows reuse;
+  3. **execute** — one of two backends consumes the SAME plan:
+
+     backend="xla"     the generic schedule executor (``core/overlap.run_plan``)
+                       runs the plan over ``lax.ppermute`` — communication on
+                       XLA async collectives ("copy engine"), compiles on any
+                       platform incl. the 512-device dry-run.  All four kinds.
+     backend="pallas"  fused Pallas kernels with explicit semaphores + remote
+                       DMAs (``repro/kernels/ag_gemm.py``, ``gemm_rs.py``)
+                       consume the plan's schedule tables — the literal
+                       kernel-fusion analogue; runs on TPU, validated on CPU
+                       via the ``repro.backend`` emulated target.
+
+Because both backends execute the same plan, the whole ``CommSpec x CompSpec``
+space (order x num_channels x accum_dtype) is sweepable uniformly across every
+kind — see ``benchmarks/kernel_bench.py --smoke``.
 
 ``interpret=None`` defers to ``repro.backend.default_interpret()``: interpret
 on CPU-only hosts, Mosaic on real TPUs.
@@ -26,9 +41,25 @@ from typing import Callable, Optional
 from repro.core.channels import BlockChannel
 from repro.core import overlap as _xla
 
-__all__ = ["compile_overlap", "KINDS"]
+__all__ = ["compile_overlap", "KINDS", "BACKENDS", "PALLAS_KINDS",
+           "unsupported_error"]
 
 KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
+BACKENDS = ("xla", "pallas")
+# kinds with a fused-kernel lowering; the others map their communication to
+# the copy engine via host primitives (paper Fig. 5/6), i.e. backend="xla"
+PALLAS_KINDS = ("ag_matmul", "matmul_rs")
+
+
+def unsupported_error(kind: str, backend: str) -> NotImplementedError:
+    """The one structured error for every unsupported (kind, backend) pair."""
+    supported = PALLAS_KINDS if backend == "pallas" else KINDS
+    return NotImplementedError(
+        f"compile_overlap: kind={kind!r} is not supported on "
+        f"backend={backend!r} (supported there: {supported}); "
+        "the paper maps this workload's communication to the copy engine "
+        "(host primitives) — use backend='xla'"
+    )
 
 
 def compile_overlap(
@@ -43,43 +74,42 @@ def compile_overlap(
     """Compile a tile program. See module docstring."""
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if not isinstance(channel, BlockChannel):
+        raise TypeError(f"channel must be a BlockChannel, got {type(channel)}")
 
     if backend == "xla":
-        table = {
-            ("ag_matmul", True): _xla.ag_matmul,
-            ("ag_matmul", False): _xla.ag_matmul_baseline,
-            ("matmul_rs", True): _xla.matmul_rs,
-            ("matmul_rs", False): _xla.matmul_rs_baseline,
-            ("ag_attention", True): _xla.ring_attention,
-            ("ag_attention", False): _xla.ag_attention_baseline,
-        }
         if kind == "ag_moe":
             from repro.core import moe_overlap
 
             fn = moe_overlap.ag_moe if overlapped else moe_overlap.ag_moe_baseline
-            return functools.partial(fn, axis=channel.axis, **kw)
-        fn = table[(kind, overlapped)]
-        if kind in ("ag_matmul", "matmul_rs") and overlapped:
+        else:
+            table = {
+                ("ag_matmul", True): _xla.ag_matmul,
+                ("ag_matmul", False): _xla.ag_matmul_baseline,
+                ("matmul_rs", True): _xla.matmul_rs,
+                ("matmul_rs", False): _xla.matmul_rs_baseline,
+                ("ag_attention", True): _xla.ring_attention,
+                ("ag_attention", False): _xla.ag_attention_baseline,
+            }
+            fn = table[(kind, overlapped)]
+        if overlapped:
+            # every overlapped kind lowers kind -> plan -> generic executor;
+            # the plan itself is built (and cached) at trace time, once the
+            # mesh world size is known inside shard_map
             return functools.partial(fn, axis=channel.axis, channel=channel, **kw)
         return functools.partial(fn, axis=channel.axis, **kw)
 
-    if backend == "pallas":
-        from repro import kernels as _k
+    # backend == "pallas"
+    from repro import kernels as _k
 
-        table = {
-            "ag_matmul": _k.ag_gemm_shard,
-            "matmul_rs": _k.gemm_rs_shard,
-        }
-        if kind not in table:
-            # Paper Fig. 6 maps AG-KV + attention comm to the *copy engine via
-            # host primitives* — that resource mapping IS the xla backend here.
-            # MoE's grouped GEMM runs as kernels/grouped_matmul inside the xla ring.
-            raise NotImplementedError(
-                f"pallas backend for {kind}: the paper maps this workload's "
-                "communication to the copy engine (host primitives) — use backend='xla'"
-            )
-        # interpret=None flows through to backend.resolve_interpret inside the
-        # kernel's pallas_call — the target policy lives in one place only
-        return functools.partial(table[kind], channel=channel, interpret=interpret, **kw)
-
-    raise ValueError(f"unknown backend {backend!r}")
+    table = {
+        "ag_matmul": _k.ag_gemm_shard,
+        "matmul_rs": _k.gemm_rs_shard,
+    }
+    if kind not in table:
+        raise unsupported_error(kind, backend)
+    # interpret=None flows through to backend.resolve_interpret inside the
+    # kernel's pallas_call — the target policy lives in one place only
+    return functools.partial(table[kind], channel=channel, interpret=interpret, **kw)

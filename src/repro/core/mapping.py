@@ -30,16 +30,38 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["StaticTileMapping", "DynamicTileMapping", "cdiv"]
+__all__ = ["StaticTileMapping", "DynamicTileMapping", "cdiv",
+           "effective_channels"]
 
 
 def cdiv(a: int, b: int) -> int:
     """Ceiling division (host-side)."""
     return -(-a // b)
+
+
+def effective_channels(extent: int, requested: int, *, kind: str = "") -> int:
+    """f_C feasibility: largest channel count <= ``requested`` dividing ``extent``.
+
+    The affine channel mapping needs C | extent (each channel owns an equal
+    sub-chunk).  When the requested C does not divide, fall back to the largest
+    divisor <= C — never silently to 1 — and warn once per call site/shape so
+    sweeps notice the clamp.
+    """
+    req = max(1, int(requested))
+    c = min(req, max(1, int(extent)))
+    while extent % c:
+        c -= 1
+    if c != req:
+        warnings.warn(
+            f"{kind or 'tile plan'}: num_channels={requested} does not divide "
+            f"extent {extent}; using largest divisor {c}",
+            stacklevel=2)
+    return c
 
 
 @dataclasses.dataclass(frozen=True)

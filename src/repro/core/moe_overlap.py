@@ -2,18 +2,23 @@
 
 The paper's hardest case: AllGather + Gather + GroupGEMM + TopkReduce +
 ReduceScatter with *dynamic* tile mappings (token routing known only at
-runtime).  Here it is lowered as a fused **double ring** inside shard_map:
+runtime).  Here it is lowered as an "ag_rs" tile plan run by the generic
+schedule executor (``core/overlap.run_plan``) — the fused **double ring**
+generalized to any ``CommSpec.order``:
 
-  * an all-gather ring rotates token chunks (+ their routing tables) around the
-    EP axis — the dynamic mapping tables f_R/f_S travel with the data exactly as
-    the paper's lookup tables do;
-  * a reduce-scatter ring accumulates combined expert outputs, consuming each
-    token chunk one hop after it arrives.
+  * token tiles (+ their routing tables) flow per the plan's per-step
+    permutes — the dynamic mapping tables f_R/f_S travel with the data
+    exactly as the paper's lookup tables do;
+  * a reduction of combined expert outputs travels the *same* permutes
+    (arriving partials fuse one hop after each token tile is consumed), plus
+    a final alignment hop delivering each rank its own tokens' outputs.
 
-Stage ``s`` of the RS ring computes the local-expert FFN for the chunk that the
-AG ring delivered at stage ``s`` while both rings' permutes are in flight — an
-extended producer-consumer chain (AG -> GroupGEMM -> TopkReduce -> RS) matching
-the paper's §7.2 MoE kernel, with the ICI DMA engine as the copy resource.
+Step ``s`` computes the local-expert FFN for the tile the flow delivered at
+step ``s`` while both flows' permutes are in flight — an extended
+producer-consumer chain (AG -> GroupGEMM -> TopkReduce -> RS) matching the
+paper's §7.2 MoE kernel, with the ICI DMA engine as the copy resource.
+``num_channels`` splits the local token chunk into independently scheduled
+flows; the reduction travels in ``CompSpec.accum_dtype``.
 
 Expert dispatch inside a chunk uses capacity-based one-hot dispatch (GShard
 style) — the XLA-friendly realization of the paper's Gather/Scatter fusion; the
@@ -29,6 +34,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.backend import axis_size
+from repro.core.channels import BlockChannel
+from repro.core.overlap import _plan_for, run_plan
 
 __all__ = ["ag_moe", "ag_moe_baseline", "local_expert_ffn", "moe_router"]
 
@@ -93,40 +100,44 @@ def local_expert_ffn(
 
 def ag_moe(
     x, topk_ids, topk_w, w_gu, w_down, *, axis: str, capacity_factor: float = 1.25,
-    act=jax.nn.silu,
+    act=jax.nn.silu, channel: Optional[BlockChannel] = None,
 ):
-    """Overlapped AG + MoE + RS double ring (see module docstring).
+    """Overlapped AG + MoE + RS double flow (see module docstring).
 
     Per-shard: x [m_loc, d] (token chunk, sharded over ``axis``), expert weights
     local to the rank (EP).  Returns [m_loc, d] combined outputs for the local
     token chunk.
     """
-    r_axis = axis_size(axis)
+    channel = channel or BlockChannel(axis=axis)
     rank = lax.axis_index(axis)
     m_loc, d = x.shape
     k = topk_ids.shape[1]
     e_loc = w_gu.shape[0]
-    e_total = e_loc * r_axis
-    cap = _capacity(m_loc, k, e_total, capacity_factor)
 
-    to_left = [(j, (j - 1) % r_axis) for j in range(r_axis)]
+    plan = _plan_for("ag_moe", channel, axis, m_loc)
+    e_total = e_loc * plan.world
+    m_sub = m_loc // plan.num_channels
+    cap = _capacity(m_sub, k, e_total, capacity_factor)
+    flow = jnp.dtype(plan.flow_dtype)
     e_lo = rank * e_loc
 
-    cur, cur_ids, cur_w = x, topk_ids, topk_w
-    acc = None
-    for s in range(r_axis):
-        if s < r_axis - 1:
-            nxt = lax.ppermute(cur, axis, to_left)       # tile_push_data (tokens)
-            nxt_ids = lax.ppermute(cur_ids, axis, to_left)  # dynamic f_R table travels
-            nxt_w = lax.ppermute(cur_w, axis, to_left)
+    # token tiles + their dynamic routing tables flow together per channel
+    chunks = [
+        (x[c * m_sub:(c + 1) * m_sub],
+         topk_ids[c * m_sub:(c + 1) * m_sub],
+         topk_w[c * m_sub:(c + 1) * m_sub])
+        for c in range(plan.num_channels)
+    ]
+
+    def moe_tile(ctx, tile, _carry):
+        xs, ids, wts = tile
         part = local_expert_ffn(
-            cur, cur_ids, cur_w, w_gu, w_down, e_lo=e_lo, cap=cap, act=act
-        )
-        acc = part if s == 0 else lax.ppermute(acc, axis, to_left) + part
-        if s < r_axis - 1:
-            cur, cur_ids, cur_w = nxt, nxt_ids, nxt_w
-    # acc at rank r holds segment (r-1): one final hop aligns segments to ranks
-    return lax.ppermute(acc, axis, to_left)
+            xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act)
+        return part.astype(flow)  # reduction travels in the flow dtype
+
+    accs = run_plan(plan, moe_tile, state=chunks)
+    out = accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=0)
+    return out.astype(x.dtype)
 
 
 def ag_moe_baseline(

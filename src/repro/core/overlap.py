@@ -1,17 +1,23 @@
-"""XLA overlap backend — tile-granular compute/communication overlap in shard_map.
+"""XLA overlap backend — one generic schedule executor over tile plans.
 
-This module lowers TileLink tile programs to JAX/XLA:TPU primitives.  The paper's
-resource-mapping choice "communication on the copy engine" is realized by
-expressing the producer/consumer tile graph as SSA dataflow over
+This module lowers TileLink tile programs to JAX/XLA:TPU primitives.  The
+paper's resource-mapping choice "communication on the copy engine" is realized
+by expressing the producer/consumer tile graph as SSA dataflow over
 ``lax.ppermute`` steps: XLA:TPU's latency-hiding scheduler issues each
-``collective-permute-start`` on the ICI DMA engines and overlaps it with the MXU
-compute of the previously received tile.  The paper's barriers become SSA data
-dependencies — release/acquire consistency is structural (a tile's matmul
+``collective-permute-start`` on the ICI DMA engines and overlaps it with the
+MXU compute of the previously received tile.  The paper's barriers become SSA
+data dependencies — release/acquire consistency is structural (a tile's matmul
 consumes exactly the permuted value, so it can never be hoisted above the
 "wait"), which satisfies §4.2 of the paper by construction.
 
-Every function here is a *per-shard* function: call it inside ``shard_map`` (the
-model layers do), or through the ``shard_mapped`` convenience wrapper.
+There is exactly ONE schedule loop here: :func:`run_plan` executes any
+:class:`~repro.core.plan.TilePlan` — every workload kind is a per-tile compute
+callback plugged into it (GEMM tile, online-softmax tile, grouped-GEMM tile in
+``core/moe_overlap.py``), so ``CommSpec.order``, ``num_channels``, and
+``CompSpec.accum_dtype`` behave identically across all kinds.
+
+Every function here is a *per-shard* function: call it inside ``shard_map``
+(the model layers do, via ``parallel.ParallelContext``).
 
 Functions come in paper-faithful pairs:
 
@@ -20,12 +26,14 @@ Functions come in paper-faithful pairs:
   ag_matmul_baseline                  ag_matmul          (AG + GEMM)
   matmul_rs_baseline                  matmul_rs          (GEMM + ring RS, Fig. 4)
   ag_attention_baseline               ring_attention     (AG-KV + attn, Fig. 6)
-  ag_moe_baseline                     ag_moe             (AG + MoE, Fig. 5)
+  ag_moe_baseline                     ag_moe             (AG + MoE, Fig. 5;
+                                                          core/moe_overlap.py)
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,13 +41,128 @@ from jax import lax
 
 from repro.backend import axis_size
 from repro.core.channels import BlockChannel
+from repro.core.mapping import effective_channels
+from repro.core.plan import TilePlan, build_plan
 
 __all__ = [
+    "run_plan", "TileContext",
     "ag_matmul", "ag_matmul_baseline",
     "matmul_rs", "matmul_rs_baseline",
     "ring_attention", "ag_attention_baseline",
     "psum_scatter_ring",
 ]
+
+
+# -----------------------------------------------------------------------------
+# The generic schedule executor
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileContext:
+    """What the executor tells a compute callback about the current tile.
+
+    step/channel are host ints (the schedule is unrolled at trace time);
+    ``src`` is a *traced* rank id: the origin rank of the held tile for AG
+    flows, the reduced segment id for RS flows.
+    """
+
+    step: int
+    channel: int
+    src: Any
+    plan: TilePlan
+
+
+def _permute(tree, axis, pairs):
+    return jax.tree_util.tree_map(
+        lambda t: lax.ppermute(t, axis, pairs), tree)
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def run_plan(
+    plan: TilePlan,
+    tile_fn: Callable,
+    *,
+    state: Optional[Sequence[Any]] = None,
+    carry: Any = None,
+) -> Any:
+    """Execute a tile plan; the only ``lax.ppermute`` loop in the backend.
+
+    plan.flow == "ag":
+        ``state[c]`` is channel c's flowing tile (any pytree).  Each step the
+        executor issues next-step permutes for every channel (producer side),
+        then calls ``tile_fn(ctx, tile, carry) -> carry`` on each held tile
+        (consumer side) while the transfers are in flight.  Returns the final
+        carry.
+
+    plan.flow == "rs":
+        Nothing flows in; ``tile_fn(ctx, None, None) -> partial`` computes the
+        partial for segment ``ctx.src``; the executor keeps one flowing
+        accumulator per channel (``acc = ppermute(acc) + partial``, wire dtype
+        = plan.flow_dtype).  Returns the per-channel fully reduced home
+        segments (a list, channel-major).
+
+    plan.flow == "ag_rs" (MoE double ring):
+        ``state`` flows exactly as in "ag"; ``tile_fn(ctx, tile, None) ->
+        partial`` additionally feeds a reduction that travels the *same*
+        permutes as the tiles, plus one final alignment hop sending each
+        channel's reduction to its home rank.  Returns the per-channel
+        reductions.
+    """
+    axis, world, nch = plan.axis, plan.world, plan.num_channels
+    rank = lax.axis_index(axis)
+    accs: List[Any] = [None] * nch
+
+    for s in range(plan.steps):
+        nxt = None
+        if plan.flow in ("ag", "ag_rs") and s < plan.steps - 1:
+            # producer: issue every channel's step s+1 transfer (tile_push_data)
+            nxt = [_permute(state[c], axis, plan.channels[c].flow_perm(s))
+                   for c in range(nch)]
+        for c in range(nch):
+            sched = plan.channels[c]
+            if plan.flow == "rs":
+                seg = jnp.asarray(sched.rs_segment_table(s))[rank]
+                part = tile_fn(TileContext(s, c, seg, plan), None, None)
+                if s == 0:
+                    accs[c] = part
+                else:
+                    # peer_tile_wait/notify: previous partial arrives and fuses
+                    accs[c] = _tree_add(
+                        _permute(accs[c], axis, sched.rs_perm(s - 1)), part)
+            else:
+                # consumer_tile_wait is the SSA dependence on state[c]
+                src = jnp.asarray(sched.source_table(s))[rank]
+                ctx = TileContext(s, c, src, plan)
+                if plan.flow == "ag":
+                    carry = tile_fn(ctx, state[c], carry)
+                else:  # ag_rs: reduction rides the tile flow
+                    part = tile_fn(ctx, state[c], None)
+                    if s == 0:
+                        accs[c] = part
+                    else:
+                        accs[c] = _tree_add(
+                            _permute(accs[c], axis, sched.flow_perm(s - 1)),
+                            part)
+        if nxt is not None:
+            state = nxt
+
+    if plan.flow == "ag":
+        return carry
+    if plan.flow == "ag_rs":
+        # final hop: each channel's reduction goes home (rank it belongs to)
+        accs = [_permute(accs[c], axis, plan.channels[c].align_perm())
+                for c in range(nch)]
+    return accs
+
+
+def _plan_for(kind: str, channel: BlockChannel, axis: str, extent: int):
+    """Resolve (world, effective channels) and fetch the cached plan."""
+    world = axis_size(axis)
+    nch = effective_channels(extent, channel.num_channels, kind=kind)
+    return build_plan(kind, channel, world, nch)
 
 
 def _dot(a, b, accum=jnp.float32):
@@ -79,56 +202,28 @@ def ag_matmul(
     Per-shard shapes: ``x``: [..., m_loc, K] (sharded along M over ``axis``),
     ``w``: [K, n_loc].  Returns [..., R * m_loc, n_loc].
 
-    Ring schedule: at step ``s`` the chunk that originated at rank ``(r - s) % R``
-    is multiplied while the next chunk is in flight on the ICI ring
-    (``lax.ppermute`` to the right neighbour).  With ``channel.num_channels = C``
-    the local shard is split into C sub-chunks ringed independently — C in-flight
-    DMAs, the paper's channel mapping f_C.  ``comm.order == "bidir_ring"`` splits
-    chunks into two counter-rotating rings, halving ring latency.
+    Lowered as an "ag" tile plan: the local shard splits into
+    ``channel.num_channels`` sub-chunks flowing independently per
+    ``channel.comm.order`` (C in-flight transfers — the paper's f_C); each
+    arrived tile is consumed by a GEMM accumulated in
+    ``channel.comp.accum_dtype``.
     """
     channel = channel or BlockChannel(axis=axis)
     out_dtype = out_dtype or x.dtype
-    r_axis = axis_size(axis)
-    rank = lax.axis_index(axis)
+    m_loc, n_loc = x.shape[-2], w.shape[-1]
+    plan = _plan_for("ag_matmul", channel, axis, m_loc)
+    m_sub = m_loc // plan.num_channels
+    accum = jnp.dtype(channel.comp.accum_dtype)
 
-    m_loc, k_dim = x.shape[-2], x.shape[-1]
-    n_loc = w.shape[-1]
+    chunks = [_row_slice(x, c * m_sub, m_sub) for c in range(plan.num_channels)]
+    out0 = jnp.zeros(x.shape[:-2] + (plan.world * m_loc, n_loc), dtype=out_dtype)
 
-    num_ch = max(1, channel.num_channels)
-    bidir = channel.comm.order == "bidir_ring" and r_axis > 2
-    if bidir and num_ch % 2:
-        num_ch *= 2
-    if m_loc % num_ch:
-        num_ch = 1  # fall back: indivisible chunking
-        bidir = False
-    m_sub = m_loc // num_ch
+    def gemm_tile(ctx, tile, out):
+        part = _dot(tile, w, accum=accum).astype(out_dtype)
+        # f_S: the tile covers rows [src * m_loc + c * m_sub, ...) globally
+        return _row_update(out, part, ctx.src * m_loc + ctx.channel * m_sub)
 
-    fwd = [(j, (j + 1) % r_axis) for j in range(r_axis)]
-    bwd = [(j, (j - 1) % r_axis) for j in range(r_axis)]
-
-    out = jnp.zeros(x.shape[:-2] + (r_axis * m_loc, n_loc), dtype=out_dtype)
-    # chunks[c] currently held sub-chunk of channel c (leading dims preserved
-    # so DP/FSDP-sharded batch dims partition cleanly)
-    chunks = [_row_slice(x, c * m_sub, m_sub) for c in range(num_ch)]
-    # direction per channel: bidir splits channels across the two rings
-    dirs = [(-1 if (bidir and c % 2) else 1) for c in range(num_ch)]
-
-    for s in range(r_axis):
-        nxt = []
-        if s < r_axis - 1:
-            # producer: issue all channel DMAs for step s+1 (tile_push_data)
-            for c in range(num_ch):
-                nxt.append(lax.ppermute(chunks[c], axis, fwd if dirs[c] > 0 else bwd))
-        # consumer: compute on the tiles received at step s (consumer_tile_wait is
-        # the SSA dependence on chunks[c])
-        for c in range(num_ch):
-            src = (rank - s * dirs[c]) % r_axis  # f_R^{-1} of the held tile
-            part = _dot(chunks[c], w).astype(out_dtype)
-            out = _row_update(out, part, src * m_loc + c * m_sub)
-        if s < r_axis - 1:
-            chunks = nxt
-
-    return out
+    return run_plan(plan, gemm_tile, state=chunks, carry=out0)
 
 
 def ag_matmul_baseline(x, w, *, axis: str, out_dtype=None):
@@ -155,43 +250,33 @@ def matmul_rs(
     Per-shard shapes: ``x``: [..., M, k_loc], ``w``: [k_loc, N];
     returns [..., M / R, N].
 
-    Faithful port of the paper's Fig. 4 ring: at stage ``s`` rank ``r`` computes
-    the GEMM tile for segment ``(r + s + 1) % R`` (schedules.ring_rs_segment),
-    adds the partial accumulator arriving from rank ``r + 1``, and forwards the
-    sum to rank ``r - 1`` — the stage-s GEMM overlaps the in-flight permute of
-    the stage-(s-1) accumulator.  After R stages the accumulator at rank ``r``
-    holds the fully reduced segment ``r``.
+    Lowered as an "rs" tile plan (the time reversal of the order's source
+    schedule — for "ring" exactly the paper's Fig. 4 ``seg=(r+s+1)%R``): at
+    each step the executor fuses the arriving partial into this rank's GEMM
+    tile for the scheduled segment, overlapping the in-flight permute with
+    the GEMM.  ``num_channels`` chunks the N columns into independent flows;
+    partials travel in ``channel.comp.accum_dtype`` — the dot PRODUCES the
+    flow dtype natively (preferred_element_type), so bf16 halves ring bytes
+    (§Perf optimization).
     """
     channel = channel or BlockChannel(axis=axis)
-    r_axis = axis_size(axis)
-    rank = lax.axis_index(axis)
     out_dtype = out_dtype or x.dtype
 
-    m_glob, k_loc = x.shape[-2], x.shape[-1]
-    assert m_glob % r_axis == 0, (m_glob, r_axis)
-    m_loc = m_glob // r_axis
+    m_glob, n = x.shape[-2], w.shape[-1]
+    plan = _plan_for("matmul_rs", channel, axis, n)
+    assert m_glob % plan.world == 0, (m_glob, plan.world)
+    m_loc = m_glob // plan.world
+    n_sub = n // plan.num_channels
+    flow = jnp.dtype(plan.flow_dtype)
 
-    to_left = [(j, (j - 1) % r_axis) for j in range(r_axis)]  # paper: to_rank = r-1
+    def gemm_tile(ctx, _tile, _carry):
+        xs = _row_slice(x, ctx.src * m_loc, m_loc)
+        wc = w[..., ctx.channel * n_sub:(ctx.channel + 1) * n_sub]
+        return _dot(xs, wc, accum=flow)
 
-    # flow dtype of the ring partials: fp32 (default, reduction-exact) or bf16
-    # (halves ring bytes — §Perf optimization).  The partial dot must PRODUCE
-    # the flow dtype natively (preferred_element_type): a separate convert is
-    # commuted past the permute by XLA's algebraic simplifier, leaving fp32 on
-    # the wire.
-    flow = jnp.dtype(channel.comp.accum_dtype)
-
-    acc = None
-    for s in range(r_axis):
-        seg = (rank + s + 1) % r_axis
-        xs = _row_slice(x, seg * m_loc, m_loc)
-        part = lax.dot_general(
-            xs, w, (((xs.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=flow)
-        if acc is None:
-            acc = part
-        else:
-            acc = lax.ppermute(acc, axis, to_left) + part  # peer_tile_wait/notify
-    return acc.astype(out_dtype)
+    accs = run_plan(plan, gemm_tile)
+    out = accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=-1)
+    return out.astype(out_dtype)
 
 
 def matmul_rs_baseline(x, w, *, axis: str, out_dtype=None):
@@ -202,23 +287,25 @@ def matmul_rs_baseline(x, w, *, axis: str, out_dtype=None):
     return out.astype(out_dtype)
 
 
-def psum_scatter_ring(x, *, axis: str):
+def psum_scatter_ring(x, *, axis: str, channel: Optional[BlockChannel] = None):
     """Ring reduce-scatter of a precomputed partial (no fused GEMM).
 
     Used for epilogue reductions (e.g. MoE combine) where the partials already
-    exist; still overlaps the adds with the permutes.
+    exist; still overlaps the adds with the permutes (an "rs" plan whose tile
+    compute is a row slice).
     """
-    r_axis = axis_size(axis)
-    rank = lax.axis_index(axis)
-    m_glob = x.shape[-2]
-    m_loc = m_glob // r_axis
-    to_left = [(j, (j - 1) % r_axis) for j in range(r_axis)]
-    acc = None
-    for s in range(r_axis):
-        seg = (rank + s + 1) % r_axis
-        part = _row_slice(x, seg * m_loc, m_loc)
-        acc = part if acc is None else lax.ppermute(acc, axis, to_left) + part
-    return acc
+    channel = channel or BlockChannel(axis=axis)
+    m_glob, n = x.shape[-2], x.shape[-1]
+    plan = _plan_for("psum_scatter", channel, axis, n)
+    m_loc = m_glob // plan.world
+    n_sub = n // plan.num_channels
+
+    def slice_tile(ctx, _tile, _carry):
+        seg = _row_slice(x, ctx.src * m_loc, m_loc)
+        return seg[..., ctx.channel * n_sub:(ctx.channel + 1) * n_sub]
+
+    accs = run_plan(plan, slice_tile)
+    return accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=-1)
 
 
 # -----------------------------------------------------------------------------
@@ -234,26 +321,31 @@ def ring_attention(
     causal: bool = False,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    channel: Optional[BlockChannel] = None,
 ):
     """Overlapped sequence-parallel attention with online softmax.
 
     Per-shard shapes: ``q``: [B, H, s_loc, D], ``k``/``v``: [B, Hkv, s_loc, D]
-    (sequence sharded over ``axis``).  KV chunks rotate around the ring while
-    flash-style online softmax consumes each arrived chunk — the TileLink AG-KV
-    + flash-attention kernel with the AG mapped to the ICI DMA engine.
+    (sequence sharded over ``axis``).  KV tiles rotate per the plan's order
+    (``num_channels`` splits each shard's KV along the sequence into
+    independent flows) while flash-style online softmax consumes each arrived
+    tile — the TileLink AG-KV + flash-attention kernel with the AG mapped to
+    the ICI DMA engine.  Online-softmax statistics stay fp32; the score and
+    PV contractions accumulate in ``channel.comp.accum_dtype``.
 
     ``causal`` masks with *global* positions (rank-offset aware).
-    ``window`` (sliding-window attention) skips ring steps entirely outside the
-    window — chunks whose global key range cannot attend are never computed.
+    ``window`` (sliding-window attention) masks keys outside the window.
     """
-    r_axis = axis_size(axis)
+    channel = channel or BlockChannel(axis=axis)
     rank = lax.axis_index(axis)
     b, h, s_loc, d = q.shape
     hkv = k.shape[1]
     rep = h // hkv
     scale = scale if scale is not None else d ** -0.5
 
-    fwd = [(j, (j + 1) % r_axis) for j in range(r_axis)]
+    plan = _plan_for("ag_attention", channel, axis, s_loc)
+    s_sub = s_loc // plan.num_channels
+    accum = jnp.dtype(channel.comp.accum_dtype)
 
     q32 = (q * scale).astype(jnp.float32)
     m_i = jnp.full((b, h, s_loc, 1), -jnp.inf, jnp.float32)
@@ -262,20 +354,21 @@ def ring_attention(
 
     q_pos = rank * s_loc + jnp.arange(s_loc)  # global query positions
 
-    kc, vc = k, v
-    for s in range(r_axis):
-        src = (rank - s) % r_axis
-        if s < r_axis - 1:
-            k_nxt = lax.ppermute(kc, axis, fwd)
-            v_nxt = lax.ppermute(vc, axis, fwd)
-        k_pos = src * s_loc + jnp.arange(s_loc)
+    chunks = [(k[:, :, c * s_sub:(c + 1) * s_sub],
+               v[:, :, c * s_sub:(c + 1) * s_sub])
+              for c in range(plan.num_channels)]
+
+    def softmax_tile(ctx, kv, carry):
+        kc, vc = kv
+        m_i, l_i, o_i = carry
+        k_pos = ctx.src * s_loc + ctx.channel * s_sub + jnp.arange(s_sub)
 
         kr = jnp.repeat(kc, rep, axis=1) if rep > 1 else kc
         vr = jnp.repeat(vc, rep, axis=1) if rep > 1 else vc
         scores = jnp.einsum(
             "bhqd,bhkd->bhqk", q32, kr.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
+            preferred_element_type=accum,
+        ).astype(jnp.float32)
         mask = None
         if causal:
             mask = q_pos[:, None] >= k_pos[None, :]
@@ -290,16 +383,16 @@ def ring_attention(
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.exp(jnp.where(jnp.isfinite(scores), scores - m_safe, -jnp.inf))
         alpha = jnp.exp(jnp.where(jnp.isfinite(m_i), m_i - m_safe, -jnp.inf))
-        l_i = l_i * alpha + p.sum(axis=-1, keepdims=True)
-        o_i = o_i * alpha + jnp.einsum(
+        l_new = l_i * alpha + p.sum(axis=-1, keepdims=True)
+        o_new = o_i * alpha + jnp.einsum(
             "bhqk,bhkd->bhqd", p, vr.astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
-        m_i = m_new
-        if s < r_axis - 1:
-            kc, vc = k_nxt, v_nxt
+        return m_new, l_new, o_new
 
-    out = o_i / jnp.maximum(l_i, 1e-30)
+    m_f, l_f, o_f = run_plan(plan, softmax_tile, state=chunks,
+                             carry=(m_i, l_i, o_i))
+    out = o_f / jnp.maximum(l_f, 1e-30)
     return out.astype(q.dtype)
 
 

@@ -1,0 +1,237 @@
+"""Tile-program plans — the IR between ``BlockChannel`` and the executors.
+
+``compile_overlap`` no longer dispatches to hand-written ring loops: it builds
+a :class:`TilePlan` from ``(kind, BlockChannel, world)`` and hands it to the
+single generic schedule executor (``core/overlap.run_plan``) or to the fused
+Pallas kernels.  The plan is the one place where the *communication* half of
+the design space (``CommSpec.order``, ``num_channels``) is turned into
+concrete per-step schedules, so every workload kind sweeps the same space.
+
+A plan captures a producer/consumer tile graph over ``world`` ranks:
+
+  * per channel ``c`` a **source schedule** sigma_c(rank, step) — which peer's
+    tile rank holds/consumes at each step.  Sources come from
+    ``schedules.SCHEDULES`` (ring / bidir_ring / all2all); channels may run
+    mirrored (direction = -1) so a bidirectional order drives both ICI link
+    directions at once;
+  * the **flow permutations** between consecutive steps, derived from sigma by
+    inversion (rank j forwards its held tile to the rank that needs it next) —
+    these become ``lax.ppermute`` tables on the XLA backend and remote-DMA
+    destination tables in the Pallas kernels;
+  * the **flow kind**: "ag" (tiles flow, consumer accumulates locally), "rs"
+    (partial results flow and reduce; the segment schedule is the time
+    reversal of sigma, ending at the home rank — paper Fig. 4), or "ag_rs"
+    (MoE double ring: tiles flow forward while a reduction flows alongside,
+    plus a final alignment hop);
+  * the **flow dtype** (``CompSpec.accum_dtype``) partial reductions travel in.
+
+Plans are host-side, hashable, and cached: ``build_plan`` is keyed on
+``(kind, channel, world, num_channels)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+from repro.core import schedules
+from repro.core.channels import BlockChannel, ORDERS
+
+__all__ = [
+    "ChannelSchedule",
+    "TilePlan",
+    "build_plan",
+    "plan_cache_info",
+    "FLOW_OF_KIND",
+]
+
+# flow type of each workload kind (see module docstring)
+FLOW_OF_KIND = {
+    "ag_matmul": "ag",
+    "ag_attention": "ag",
+    "matmul_rs": "rs",
+    "psum_scatter": "rs",
+    "ag_moe": "ag_rs",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelSchedule:
+    """One channel's realization of a tile order over ``world`` ranks.
+
+    ``direction=-1`` mirrors the base schedule (rank -> 2*rank - sigma), i.e.
+    the counter-rotating twin of the same order — bidirectional plans split
+    channels across the two directions so both ring links carry traffic.
+    """
+
+    order: str
+    world: int
+    direction: int = 1
+
+    def __post_init__(self):
+        if self.order not in ORDERS:
+            raise ValueError(f"unknown tile order {self.order!r}; one of {ORDERS}")
+
+    # ---- sigma: source schedule ---------------------------------------------
+    def source(self, rank: int, step: int) -> int:
+        """sigma(rank, step): origin rank of the tile held at ``step``."""
+        src = schedules.SCHEDULES[self.order](rank, step, self.world)
+        if self.direction < 0 and self.order != "all2all":
+            src = (2 * rank - src) % self.world  # mirrored (counter-rotating)
+        return src
+
+    def source_table(self, step: int) -> Tuple[int, ...]:
+        """sigma(., step) for every rank — index with a traced rank."""
+        return tuple(self.source(r, step) for r in range(self.world))
+
+    # ---- flow permutations (AG direction) -----------------------------------
+    def flow_perm(self, step: int) -> Tuple[Tuple[int, int], ...]:
+        """ppermute pairs moving held tiles from ``step`` to ``step + 1``.
+
+        Rank j holds the tile of sigma(j, step); it must reach the rank d that
+        consumes that tile next: sigma(d, step + 1) == sigma(j, step).
+        """
+        inv = {self.source(d, step + 1): d for d in range(self.world)}
+        if len(inv) != self.world:
+            raise ValueError(
+                f"order {self.order!r} is not a per-step permutation at "
+                f"step {step + 1} (world={self.world})")
+        return tuple((j, inv[self.source(j, step)]) for j in range(self.world))
+
+    def align_perm(self) -> Tuple[Tuple[int, int], ...]:
+        """Final hop routing a tile-following reduction to its home rank.
+
+        After the last step rank j holds the reduction for the tiles of rank
+        sigma(j, world - 1); send it there (MoE double ring's last permute).
+        """
+        return tuple((j, self.source(j, self.world - 1))
+                     for j in range(self.world))
+
+    # ---- reduce-scatter view (time-reversed sigma) --------------------------
+    def rs_segment(self, rank: int, step: int) -> int:
+        """Segment reduced by ``rank`` at ``step`` of an RS flow.
+
+        The time reversal of sigma: seg(r, world-1) == sigma(r, 0) == r, so
+        after the last step every rank holds its own fully reduced segment.
+        For the ring order in the plan's default orientation (direction -1,
+        see ``_directions``) this is exactly the paper's Fig. 4 schedule
+        ``seg = (rank + step + 1) % world`` (``schedules.ring_rs_segment``),
+        with partials flowing to rank r-1.
+        """
+        return self.source(rank, self.world - 1 - step)
+
+    def rs_segment_table(self, step: int) -> Tuple[int, ...]:
+        return tuple(self.rs_segment(r, step) for r in range(self.world))
+
+    def rs_perm(self, step: int) -> Tuple[Tuple[int, int], ...]:
+        """ppermute pairs moving partials from ``step`` to ``step + 1``."""
+        inv = {self.rs_segment(d, step + 1): d for d in range(self.world)}
+        return tuple((j, inv[self.rs_segment(j, step)])
+                     for j in range(self.world))
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """A compiled tile program: what every rank does at every step.
+
+    ``channels[c]`` gives channel c's schedule; the executor runs all channels
+    each step (C outstanding transfers per rank — the paper's f_C).
+    """
+
+    kind: str
+    axis: str
+    world: int
+    flow: str                      # "ag" | "rs" | "ag_rs"
+    num_channels: int              # effective (validated divisor of the extent)
+    flow_dtype: str                # CompSpec.accum_dtype — wire dtype of partials
+    channels: Tuple[ChannelSchedule, ...]
+
+    @property
+    def steps(self) -> int:
+        return self.world
+
+    # ---- flat tables for the Pallas kernels ---------------------------------
+    # [num_channels][steps][world] nested tuples; wrappers jnp.asarray them and
+    # kernels index [c, s, my_rank] with traced scalars — one schedule source
+    # of truth for both backends.
+    def src_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
+        """AG: origin rank (== gather-buffer slot) consumed per (c, step, rank)."""
+        return tuple(tuple(ch.source_table(s) for s in range(self.steps))
+                     for ch in self.channels)
+
+    def flow_dst_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
+        """AG: remote rank each rank pushes its held tile to, per (c, step).
+
+        The last step pushes nowhere; its row is the identity (unused).
+        """
+        ident = tuple(range(self.world))
+        return tuple(
+            tuple(tuple(dst for _, dst in ch.flow_perm(s)) if s < self.steps - 1
+                  else ident for s in range(self.steps))
+            for ch in self.channels)
+
+    def rs_seg_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
+        """RS: segment reduced per (c, step, rank)."""
+        return tuple(tuple(ch.rs_segment_table(s) for s in range(self.steps))
+                     for ch in self.channels)
+
+    def rs_dst_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
+        """RS: remote rank each rank pushes its partial to, per (c, step)."""
+        ident = tuple(range(self.world))
+        return tuple(
+            tuple(tuple(dst for _, dst in ch.rs_perm(s)) if s < self.steps - 1
+                  else ident for s in range(self.steps))
+            for ch in self.channels)
+
+
+def _directions(order: str, num_channels: int) -> Tuple[int, ...]:
+    """Channel -> ring direction.
+
+    ring      : unidirectional by definition — every channel direction -1,
+                i.e. the paper's orientation: AG chunks flow to rank r+1 and
+                the RS view reduces to exactly Fig. 4's
+                ``seg = (rank + step + 1) % world`` with partials flowing to
+                rank r-1 (asserted by tests against
+                ``schedules.ring_rs_segment``).
+    bidir_ring: odd channels mirrored so both link directions carry traffic
+                every step (with C == 1 the alternating +-hop schedule itself
+                uses both directions across steps).
+    all2all   : pairwise exchange, direction-less.
+    """
+    if order == "bidir_ring":
+        return tuple(1 if c % 2 == 0 else -1 for c in range(num_channels))
+    if order == "ring":
+        return (-1,) * num_channels
+    return (1,) * num_channels
+
+
+@functools.lru_cache(maxsize=None)
+def build_plan(kind: str, channel: BlockChannel, world: int,
+               num_channels: int) -> TilePlan:
+    """Build (and cache) the tile plan for ``kind`` over ``world`` ranks.
+
+    ``num_channels`` is the *effective* channel count — callers run the
+    requested ``channel.num_channels`` through ``mapping.effective_channels``
+    against the chunked extent first, so the cache key is exact.
+    """
+    if kind not in FLOW_OF_KIND:
+        raise ValueError(
+            f"unknown workload kind {kind!r}; one of {tuple(FLOW_OF_KIND)}")
+    order = channel.comm.order
+    chans = tuple(
+        ChannelSchedule(order=order, world=world, direction=d)
+        for d in _directions(order, num_channels))
+    return TilePlan(
+        kind=kind,
+        axis=channel.axis,
+        world=world,
+        flow=FLOW_OF_KIND[kind],
+        num_channels=num_channels,
+        flow_dtype=channel.comp.accum_dtype,
+        channels=chans,
+    )
+
+
+def plan_cache_info():
+    """Cache statistics for the plan layer (hits == reused compilations)."""
+    return build_plan.cache_info()

@@ -17,6 +17,12 @@ Conventions (match the paper's Fig. 4 pseudo-code):
                two (bandwidth-optimal pairwise exchange), else (r + s) % R.
   bidir_ring : even steps move clockwise, odd steps counter-clockwise, halving
                ring latency when both link directions are available.
+
+``SCHEDULES`` (order name -> source schedule) is consumed by the plan layer
+(``core/plan.ChannelSchedule``), which derives per-step ppermute tables and
+remote-DMA destination tables by inverting the schedule; reduce-scatter
+segment orders are its time reversal (for the ring order in the plan's
+default orientation, that reversal == ring_rs_segment).
 """
 from __future__ import annotations
 

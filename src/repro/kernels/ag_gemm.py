@@ -1,21 +1,28 @@
-"""Fused AllGather + GEMM Pallas kernel (paper §5, AG+GEMM; push mode, ring).
+"""Fused AllGather + GEMM Pallas kernel (paper §5, AG+GEMM; push mode).
 
 One kernel per device (launched under shard_map over the TP axis) both
-*communicates* and *computes*:
+*communicates* and *computes*, driven by the SAME :class:`~repro.core.plan.
+TilePlan` the XLA backend executes — the plan's per-(channel, step, rank)
+source and destination tables are baked into the kernel as int32 schedule
+tables, so ``CommSpec.order`` (ring / bidir_ring / all2all) and
+``num_channels`` behave identically on both backends:
 
-  * ring step ``s``: the chunk that originated at rank ``(my - s) % R`` is
-    forwarded to the right neighbour with ``tile_push_data``
-    (``pltpu.make_async_remote_copy`` on the ICI DMA engine) while the MXU
-    computes GEMM tiles on the chunk that arrived at step ``s`` — communication
-    and computation tiles are *decoupled*: the comm tile is the whole
-    [m_loc, K] shard, the compute tile is (m_loc, bn) (CompSpec), iterated in
-    the inner grid dimension;
-  * ``consumer_tile_wait`` is the ``wait_recv`` on the per-step DMA semaphore —
-    acquire semantics; loads of the gathered chunk are emitted only after it
-    (paper §4.2's strict-dependency rule, enforced by construction).
+  * step ``s``, channel ``c``: the sub-chunk this rank holds (origin
+    ``src_tbl[c, s, my]``) is forwarded to ``dst_tbl[c, s, my]`` with
+    ``tile_push_data`` (``pltpu.make_async_remote_copy`` on the ICI DMA
+    engine) while the MXU computes GEMM tiles on it — communication and
+    computation tiles are *decoupled*: the comm tile is the [m_sub, K]
+    channel sub-chunk (f_C), the compute tile is (m_sub, bn) (CompSpec),
+    iterated in the inner grid dimension;
+  * ``consumer_tile_wait`` is the ``wait_recv`` on the per-(step, channel)
+    DMA semaphore — acquire semantics; loads of the gathered chunk are
+    emitted only after it (paper §4.2's strict-dependency rule, enforced by
+    construction).
 
-Slot-per-origin gather buffer (``buf[src]``) makes the schedule race-free
-without credit counters: each slot is written exactly once per ring pass.
+Slot-per-(origin, channel) gather buffer makes the schedule race-free without
+credit counters: every tile visits every rank exactly once (the plan's source
+schedules are per-step and per-rank permutations), so each slot is written
+exactly once per pass.
 
 Validated on CPU via the backend's emulated target (the interpreter simulates
 the inter-device DMAs + semaphores); on real TPU the same code lowers to
@@ -34,63 +41,74 @@ from repro import backend
 from repro.backend import pl
 from repro.core import primitives
 from repro.core.channels import BlockChannel
+from repro.core.mapping import effective_channels
+from repro.core.plan import build_plan
 
 __all__ = ["ag_gemm_shard"]
 
 
-def _ag_gemm_kernel(x_ref, w_ref, o_ref, buf, x_vmem, acc, out_tile, copy_sem,
-                    send_sem, recv_sems, out_sem, *, axis: str, world: int,
-                    n_tiles: int, m_loc: int, bn: int):
+def _ag_gemm_kernel(x_ref, w_ref, src_tbl, dst_tbl, o_ref, buf, x_vmem, acc,
+                    out_tile, copy_sem, send_sem, recv_sems, out_sem, *,
+                    axis: str, world: int, nch: int, n_tiles: int,
+                    m_loc: int, m_sub: int, bn: int, accum):
     s = pl.program_id(0)
-    j = pl.program_id(1)
+    c = pl.program_id(1)
+    j = pl.program_id(2)
     my = lax.axis_index(axis)
-    right = lax.rem(my + 1, world)
-    src = lax.rem((my - s) + world, world)
+    flat = (c * world + s) * world + my
+    src = src_tbl[flat]          # origin (== gather slot) consumed this step
+    dst = dst_tbl[flat]          # peer the held tile is forwarded to
+    slot = src * nch + c
 
     @pl.when(jnp.logical_and(s == 0, j == 0))
     def _local_seed():
-        # stage own shard into the gather buffer (producer tile 'my')
-        c = backend.make_async_copy(x_ref, buf.at[my], copy_sem)
-        c.start()
-        c.wait()
+        # stage channel c of the own shard into its gather slot (producer tile)
+        cp = backend.make_async_copy(
+            x_ref.at[pl.ds(c * m_sub, m_sub), :], buf.at[my * nch + c],
+            copy_sem)
+        cp.start()
+        cp.wait()
 
-    def _fwd_rdma(step, src_slot):
-        # forward from the VMEM staging copy (x_vmem) to the right neighbour's
-        # gather slot — src and dst must not alias for the DMA engine
+    def _fwd_rdma():
+        # forward from the VMEM staging copy (x_vmem) to the peer's gather
+        # slot — src and dst must not alias for the DMA engine
         return primitives.make_tile_push(
             src_ref=x_vmem,
-            dst_ref=buf.at[src_slot],
+            dst_ref=buf.at[slot],
             send_sem=send_sem,
-            recv_sem=recv_sems.at[step],
-            rank=right,
+            recv_sem=recv_sems.at[s * nch + c],
+            rank=dst,
         )
 
     @pl.when(j == 0)
     def _comm():
-        # consumer_tile_wait + bring chunk to VMEM for the MXU
-        c = backend.make_async_copy(buf.at[src], x_vmem, copy_sem)
-        c.start()
-        c.wait()
+        # consumer_tile_wait + bring the tile to VMEM for the MXU
+        cp = backend.make_async_copy(buf.at[slot], x_vmem, copy_sem)
+        cp.start()
+        cp.wait()
 
-        # tile_push_data: forward the current chunk around the ring (overlaps
-        # with this step's GEMM tiles below)
+        # tile_push_data: forward the held tile along the plan's schedule
+        # (overlaps with this step's GEMM tiles below)
         @pl.when(s < world - 1)
         def _():
-            _fwd_rdma(s, src).start()
+            _fwd_rdma().start()
 
-    # compute tile j of the consumer GEMM (CompSpec tile)
-    acc[...] = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=jnp.float32)
+    # compute tile j of the consumer GEMM (CompSpec tile, accum dtype)
+    acc[...] = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=accum)
     out_tile[...] = acc[...].astype(out_tile.dtype)
     oc = backend.make_async_copy(
-        out_tile, o_ref.at[pl.ds(src * m_loc, m_loc), pl.ds(j * bn, bn)], out_sem
+        out_tile,
+        o_ref.at[pl.ds(src * m_loc + c * m_sub, m_sub), pl.ds(j * bn, bn)],
+        out_sem,
     )
     oc.start()
     oc.wait()
 
     @pl.when(jnp.logical_and(j == n_tiles - 1, s < world - 1))
     def _finish_comm():
-        # wait_send: our buffer slot is drained; wait_recv: next chunk arrived
-        _fwd_rdma(s, src).wait()
+        # wait_send: x_vmem is drained (safe to reuse next channel/step);
+        # wait_recv: the tile for step s+1 arrived
+        _fwd_rdma().wait()
 
 
 def ag_gemm_shard(
@@ -99,47 +117,59 @@ def ag_gemm_shard(
     *,
     channel: Optional[BlockChannel] = None,
     world_size: int,
-    bn: int = 128,
+    bn: Optional[int] = None,
     interpret: bool = True,
 ):
     """Per-shard fused AG+GEMM. x: [m_loc, K], w: [K, n_loc] -> [R*m_loc, n_loc].
 
-    Call inside shard_map over ``channel.axis``.  ``interpret=True`` runs the
-    interpreter (CPU validation); False lowers to Mosaic on TPU hosts — on a
-    CPU-only host the emulated backend target interprets regardless, since
-    there is no Mosaic toolchain to compile with.
+    Call inside shard_map over ``channel.axis``.  The schedule (order,
+    channels) and the accumulation dtype come from ``channel`` via the plan
+    layer; ``bn`` defaults to ``channel.comp.tile[1]``.  ``interpret=True``
+    runs the interpreter (CPU validation); False lowers to Mosaic on TPU
+    hosts — on a CPU-only host the emulated backend target interprets
+    regardless, since there is no Mosaic toolchain to compile with.
     """
     channel = channel or BlockChannel(axis="model")
     axis = channel.axis
     m_loc, k = x.shape
     _, n_loc = w.shape
+    bn = bn or channel.comp.tile[1]
     bn = min(bn, n_loc)
     assert n_loc % bn == 0
     n_tiles = n_loc // bn
 
+    nch = effective_channels(m_loc, channel.num_channels, kind="ag_matmul")
+    plan = build_plan("ag_matmul", channel, world_size, nch)
+    m_sub = m_loc // nch
+    accum = jnp.dtype(plan.flow_dtype)
+    src_tbl = jnp.asarray(plan.src_tables(), jnp.int32).reshape(-1)
+    dst_tbl = jnp.asarray(plan.flow_dst_tables(), jnp.int32).reshape(-1)
+
     kern = functools.partial(
-        _ag_gemm_kernel, axis=axis, world=world_size, n_tiles=n_tiles,
-        m_loc=m_loc, bn=bn,
+        _ag_gemm_kernel, axis=axis, world=world_size, nch=nch,
+        n_tiles=n_tiles, m_loc=m_loc, m_sub=m_sub, bn=bn, accum=accum,
     )
     return backend.pallas_call(
         kern,
-        grid=(world_size, n_tiles),
+        grid=(world_size, nch, n_tiles),
         in_specs=[
             pl.BlockSpec(memory_space=backend.ANY),
-            pl.BlockSpec((k, bn), lambda s, j: (0, j)),
+            pl.BlockSpec((k, bn), lambda s, c, j: (0, j)),
+            pl.BlockSpec(memory_space=backend.ANY),   # src schedule table
+            pl.BlockSpec(memory_space=backend.ANY),   # dst schedule table
         ],
         out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((world_size * m_loc, n_loc), x.dtype),
         scratch_shapes=[
-            backend.vmem_scratch((world_size, m_loc, k), x.dtype),  # gather buffer
-            backend.vmem_scratch((m_loc, k), x.dtype),       # current chunk
-            backend.vmem_scratch((m_loc, bn), jnp.float32),  # accumulator
-            backend.vmem_scratch((m_loc, bn), x.dtype),      # cast staging tile
-            backend.dma_semaphore(),                         # local copies
-            backend.dma_semaphore(),                         # sends
-            backend.dma_semaphore((world_size,)),            # per-step recv
-            backend.dma_semaphore(),                         # out stores
+            backend.vmem_scratch((world_size * nch, m_sub, k), x.dtype),  # gather
+            backend.vmem_scratch((m_sub, k), x.dtype),   # current tile
+            backend.vmem_scratch((m_sub, bn), accum),    # accumulator
+            backend.vmem_scratch((m_sub, bn), x.dtype),  # cast staging tile
+            backend.dma_semaphore(),                     # local copies
+            backend.dma_semaphore(),                     # sends
+            backend.dma_semaphore((world_size * nch,)),  # per-(step, ch) recv
+            backend.dma_semaphore(),                     # out stores
         ],
-        dimension_semantics=("arbitrary", "arbitrary"),
+        dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         interpret=interpret,
-    )(x, w)
+    )(x, w, src_tbl, dst_tbl)

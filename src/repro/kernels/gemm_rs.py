@@ -1,22 +1,29 @@
-"""Fused GEMM + ring ReduceScatter Pallas kernel — faithful port of paper Fig. 4.
+"""Fused GEMM + ReduceScatter Pallas kernel — paper Fig. 4, plan-driven.
 
-Stage ``s`` at rank ``r``:
-  1. ``consumer_tile_wait``   — wait for the partial accumulator pushed by rank
-     ``r+1`` at its stage ``s-1`` (``wait_recv`` on the per-stage DMA semaphore);
-  2. compute the GEMM tile for segment ``(r + s + 1) % R``
-     (``schedules.ring_rs_segment`` — the paper's ``seg = (rank+stage+1) % W``)
-     while the *next* incoming partial is still in flight;
+Driven by the SAME :class:`~repro.core.plan.TilePlan` as the XLA backend: the
+plan's reduce-scatter view (the time reversal of the order's source schedule —
+for "ring" in the plan's default orientation exactly the paper's
+``seg = (rank + stage + 1) % W``) is baked in
+as int32 segment/destination tables, so ``CommSpec.order``, ``num_channels``
+(column chunking, C independent flows) and ``CompSpec.accum_dtype`` (the flow
+dtype partials travel in) behave identically on both backends.
+
+Stage ``s``, channel ``c`` at rank ``r``:
+  1. ``consumer_tile_wait``   — wait for the partial pushed by the plan's
+     stage-(s-1) peer (``wait_recv`` on the per-(stage, channel) semaphore);
+  2. compute the GEMM tiles for segment ``seg_tbl[c, s, r]`` while the *next*
+     incoming partial is still in flight;
   3. add the received partial (TopK-reduce-style epilogue fusion);
-  4. ``tile_push_data`` + ``peer_tile_notify`` — push the new partial to rank
-     ``r-1`` (paper line 11: ``to_rank = (rank - 1 + WORLD_SIZE) % WORLD_SIZE``).
+  4. ``tile_push_data`` + ``peer_tile_notify`` — push the new partial to
+     ``dst_tbl[c, s, r]`` (for "ring": rank r-1, paper line 11).
 
-After R stages the accumulator holds the fully reduced segment ``r`` and is
-stored to the local output (paper lines 22-23).
+After R stages each channel's accumulator holds the fully reduced home
+segment and is stored to the local output columns (paper lines 22-23).
 
-Race-freedom: receive buffers are slot-per-stage (written exactly once per ring
-pass — no credit counters needed); the outgoing staging buffer is reused across
-stages, guarded by ``wait_send`` (release, §4.2) before each overwrite.
-Partials flow in fp32 for reduction fidelity.
+Race-freedom: receive buffers are slot-per-(stage, channel) (written exactly
+once per pass — no credit counters needed); the outgoing partial is pushed
+straight from the accumulator's channel columns, guarded by ``wait_send``
+(release, §4.2) before those columns are overwritten next stage.
 
 VMEM budget: the flowing accumulator is [m_loc, N] resident in VMEM; pick
 m_loc * N * 4B ≲ 4 MiB per call (the TP shard sizes used by the models obey
@@ -35,74 +42,91 @@ from repro import backend
 from repro.backend import pl
 from repro.core import primitives
 from repro.core.channels import BlockChannel
+from repro.core.mapping import effective_channels
+from repro.core.plan import build_plan
 
 __all__ = ["gemm_rs_shard"]
 
 
-def _gemm_rs_kernel(x_ref, w_ref, o_ref, x_vmem, acc, prev, out_stage, out_cast,
-                    copy_sem, send_sem, recv_sems, rbuf, *, axis: str,
-                    world: int, n_tiles: int, m_loc: int, bn: int):
+def _gemm_rs_kernel(x_ref, w_ref, seg_tbl, dst_tbl, o_ref, x_vmem, acc, prev,
+                    out_cast, copy_sem, send_sem, recv_sems, rbuf, *,
+                    axis: str, world: int, nch: int, n_tiles: int,
+                    m_loc: int, n_sub: int, bn: int, flow):
     s = pl.program_id(0)
-    j = pl.program_id(1)
+    c = pl.program_id(1)
+    j = pl.program_id(2)
     my = lax.axis_index(axis)
-    left = lax.rem((my - 1) + world, world)
-    seg = lax.rem(my + s + 1, world)
+    flat = (c * world + s) * world + my
+    seg = seg_tbl[flat]          # segment this rank reduces at stage s
+    dst = dst_tbl[flat]          # peer that reduces it at stage s+1
 
     def _push_rdma(stage):
         # identical descriptor on sender & receiver (SPMD) — sender start()s,
-        # receiver wait_recv()s, sender wait_send()s before staging reuse
+        # receiver wait_recv()s, sender wait_send()s before the accumulator
+        # columns are overwritten.  Source: the channel's accumulator columns.
         return primitives.make_tile_push(
-            src_ref=out_stage,
-            dst_ref=rbuf.at[stage],
+            src_ref=acc.at[:, pl.ds(c * n_sub, n_sub)],
+            dst_ref=rbuf.at[stage * nch + c],
             send_sem=send_sem,
-            recv_sem=recv_sems.at[stage],
-            rank=left,
+            recv_sem=recv_sems.at[stage * nch + c],
+            rank=dst,
         )
+
+    # channels sharing a direction reduce the same segment at the same stage
+    # (always for ring/all2all) — skip the HBM->VMEM refetch when the segment
+    # x_vmem already holds (previous channel, same stage) is the one we need
+    prev_flat = (jnp.maximum(c - 1, 0) * world + s) * world + my
+    seg_is_stale = jnp.logical_or(c == 0, seg != seg_tbl[prev_flat])
 
     @pl.when(j == 0)
     def _stage_setup():
-        # shape mapping f_S: bring segment `seg` of x into VMEM
-        c = backend.make_async_copy(
-            x_ref.at[pl.ds(seg * m_loc, m_loc), :], x_vmem, copy_sem
-        )
-        c.start()
-        c.wait()
+        @pl.when(seg_is_stale)
+        def _fetch_seg():
+            # shape mapping f_S: bring segment `seg` of x into VMEM
+            cp = backend.make_async_copy(
+                x_ref.at[pl.ds(seg * m_loc, m_loc), :], x_vmem, copy_sem
+            )
+            cp.start()
+            cp.wait()
 
         @pl.when(s > 0)
         def _recv_prev():
-            # consumer_tile_wait (acquire): partial from rank r+1, stage s-1
+            # consumer_tile_wait (acquire): stage s-1 partial for channel c
             _push_rdma(s - 1).wait_recv()
-            c2 = backend.make_async_copy(rbuf.at[s - 1], prev, copy_sem)
-            c2.start()
-            c2.wait()
-            # release: our stage s-1 push drained before out_stage is reused
+            cp2 = backend.make_async_copy(
+                rbuf.at[(s - 1) * nch + c], prev, copy_sem)
+            cp2.start()
+            cp2.wait()
+            # release: our stage s-1 push drained before acc cols are reused
             _push_rdma(s - 1).wait_send()
 
     # GEMM tile j for segment `seg` (+ fused reduction of the incoming partial)
-    part = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=jnp.float32)
+    part = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=flow)
+    col = c * n_sub + j * bn
 
     @pl.when(s > 0)
     def _add_prev():
-        acc[:, pl.ds(j * bn, bn)] = part + prev[:, pl.ds(j * bn, bn)]
+        acc[:, pl.ds(col, bn)] = part + prev[:, pl.ds(j * bn, bn)]
 
     @pl.when(s == 0)
     def _no_prev():
-        acc[:, pl.ds(j * bn, bn)] = part
+        acc[:, pl.ds(col, bn)] = part
 
     @pl.when(j == n_tiles - 1)
     def _stage_finish():
         @pl.when(s < world - 1)
         def _push():
-            out_stage[...] = acc[...]
             _push_rdma(s).start()  # tile_push_data + peer_tile_notify
 
         @pl.when(s == world - 1)
         def _store():
-            # paper lines 22-23: final stage stores the reduced segment (== my)
-            out_cast[...] = acc[...].astype(out_cast.dtype)
-            c = backend.make_async_copy(out_cast, o_ref, copy_sem)
-            c.start()
-            c.wait()
+            # paper lines 22-23: final stage stores the reduced home segment
+            out_cast[...] = acc[:, pl.ds(c * n_sub, n_sub)].astype(
+                out_cast.dtype)
+            cp = backend.make_async_copy(
+                out_cast, o_ref.at[:, pl.ds(c * n_sub, n_sub)], copy_sem)
+            cp.start()
+            cp.wait()
 
 
 def gemm_rs_shard(
@@ -111,12 +135,14 @@ def gemm_rs_shard(
     *,
     channel: Optional[BlockChannel] = None,
     world_size: int,
-    bn: int = 128,
+    bn: Optional[int] = None,
     interpret: bool = True,
 ):
     """Per-shard fused GEMM+RS. x: [M, k_loc], w: [k_loc, N] -> [M/R, N].
 
-    Call inside shard_map over ``channel.axis``; partials accumulate in fp32.
+    Call inside shard_map over ``channel.axis``; the schedule (order,
+    channels) and the flow dtype partials accumulate/travel in come from
+    ``channel`` via the plan layer; ``bn`` defaults to ``channel.comp.tile[1]``.
     ``interpret=False`` lowers to Mosaic only on TPU hosts — on a CPU-only
     host the emulated backend target interprets regardless.
     """
@@ -126,34 +152,43 @@ def gemm_rs_shard(
     _, n = w.shape
     assert m_glob % world_size == 0
     m_loc = m_glob // world_size
-    bn = min(bn, n)
-    assert n % bn == 0
-    n_tiles = n // bn
+
+    nch = effective_channels(n, channel.num_channels, kind="matmul_rs")
+    plan = build_plan("matmul_rs", channel, world_size, nch)
+    n_sub = n // nch
+    bn = bn or channel.comp.tile[1]
+    bn = min(bn, n_sub)
+    assert n_sub % bn == 0
+    n_tiles = n_sub // bn
+    flow = jnp.dtype(plan.flow_dtype)
+    seg_tbl = jnp.asarray(plan.rs_seg_tables(), jnp.int32).reshape(-1)
+    dst_tbl = jnp.asarray(plan.rs_dst_tables(), jnp.int32).reshape(-1)
 
     kern = functools.partial(
-        _gemm_rs_kernel, axis=axis, world=world_size, n_tiles=n_tiles,
-        m_loc=m_loc, bn=bn,
+        _gemm_rs_kernel, axis=axis, world=world_size, nch=nch,
+        n_tiles=n_tiles, m_loc=m_loc, n_sub=n_sub, bn=bn, flow=flow,
     )
     return backend.pallas_call(
         kern,
-        grid=(world_size, n_tiles),
+        grid=(world_size, nch, n_tiles),
         in_specs=[
             pl.BlockSpec(memory_space=backend.ANY),
-            pl.BlockSpec((k_loc, bn), lambda s, j: (0, j)),
+            pl.BlockSpec((k_loc, bn), lambda s, c, j: (0, c * (n_sub // bn) + j)),
+            pl.BlockSpec(memory_space=backend.ANY),   # segment schedule table
+            pl.BlockSpec(memory_space=backend.ANY),   # push-dst schedule table
         ],
         out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((m_loc, n), x.dtype),
         scratch_shapes=[
             backend.vmem_scratch((m_loc, k_loc), x.dtype),   # x segment
-            backend.vmem_scratch((m_loc, n), jnp.float32),   # stage accumulator
-            backend.vmem_scratch((m_loc, n), jnp.float32),   # received partial
-            backend.vmem_scratch((m_loc, n), jnp.float32),   # staged outgoing
-            backend.vmem_scratch((m_loc, n), x.dtype),       # final cast
+            backend.vmem_scratch((m_loc, n), flow),          # stage accumulator
+            backend.vmem_scratch((m_loc, n_sub), flow),      # received partial
+            backend.vmem_scratch((m_loc, n_sub), x.dtype),   # final cast
             backend.dma_semaphore(),                         # local copies
             backend.dma_semaphore(),                         # sends
-            backend.dma_semaphore((world_size,)),            # per-stage recv
-            backend.vmem_scratch((world_size, m_loc, n), jnp.float32),  # rbuf
+            backend.dma_semaphore((world_size * nch,)),      # per-(stage,ch) recv
+            backend.vmem_scratch((world_size * nch, m_loc, n_sub), flow),  # rbuf
         ],
-        dimension_semantics=("arbitrary", "arbitrary"),
+        dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         interpret=interpret,
-    )(x, w)
+    )(x, w, seg_tbl, dst_tbl)

@@ -4,7 +4,9 @@ Train/prefill path (``apply_seq``): the AG+GEMM producer gathers the
 sequence-sharded residual stream while projecting to this rank's heads (the
 paper's AG+GEMM), attention runs locally on the head shard with a
 memory-efficient chunked online-softmax (differentiable), and the output
-projection is the GEMM+RS consumer (paper Fig. 4).
+projection is the GEMM+RS consumer (paper Fig. 4).  Both collectives lower
+through ``compile_overlap`` as tile plans, so the tile order / channel count /
+flow dtype selected by ``pc.channel`` apply here uniformly.
 
 Decode path (``apply_decode``): activations are replicated over the TP axis;
 projections are local column/row-parallel matmuls with a psum epilogue, and the

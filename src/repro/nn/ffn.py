@@ -1,8 +1,10 @@
 """Dense (gated) MLP block — the paper's motivational workload.
 
 Forward = AG+GEMM (gate/up fused, column-parallel) -> activation ->
-GEMM+RS (down, row-parallel): exactly the tensor-parallel MLP of paper Fig. 1,
-with both collectives replaced by TileLink ring schedules in overlap mode.
+GEMM+RS (down, row-parallel): exactly the tensor-parallel MLP of paper Fig. 1.
+In overlap mode both collectives lower through ``compile_overlap`` as tile
+plans run by the generic schedule executor, so the layer inherits whatever
+tile order / channel count / flow dtype ``pc.channel`` selects.
 """
 from __future__ import annotations
 

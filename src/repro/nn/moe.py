@@ -2,10 +2,12 @@
 
 Routing (dynamic mapping), dispatch, expert FFN and combine follow the paper's
 Fig. 5 workload: the router fills the dynamic lookup tables; the overlapped
-double ring in core/moe_overlap.py gathers token chunks and reduce-scatters
-combined outputs while local experts compute.  Shared experts (DeepSeek-style)
-run as a dense TP MLP in parallel with the routed path (paper §7.3 does the
-same for Qwen1.5's shared experts).
+"ag_rs" tile plan in core/moe_overlap.py (an AG flow of token tiles + a
+reduction riding the same permutes, run by the generic schedule executor)
+gathers token chunks and reduce-scatters combined outputs while local experts
+compute — under whatever tile order / channel count ``pc.channel`` selects.
+Shared experts (DeepSeek-style) run as a dense TP MLP in parallel with the
+routed path (paper §7.3 does the same for Qwen1.5's shared experts).
 
 Expert count is padded up to a multiple of the EP degree; padding experts get
 -inf router logits and are never selected (their weights receive zero gradient

@@ -1,11 +1,18 @@
 """ParallelContext — distribution configuration threaded through the model.
 
-Carries the mesh, axis roles, and the overlap mode:
+Carries the mesh, axis roles, the overlap mode, and the ``BlockChannel``
+describing the communication/computation design point:
 
-  mode="overlap"   TileLink ring schedules (core/overlap.py) — the paper
+  mode="overlap"   TileLink tile plans run by the generic schedule executor
+                   (compile_overlap -> core/plan -> core/overlap.run_plan)
   mode="baseline"  operator-centric AG/RS collectives — the non-overlap baseline
   (both run inside partial-auto shard_map, manual over the TP axis only;
    FSDP/DP axes stay under XLA's automatic partitioner)
+
+Every per-shard collective op lowers through ``compile_overlap`` with
+``pc.channel``, so the whole ``CommSpec x CompSpec`` space (tile order,
+channel count, flow dtype) is selected once here and honored by every layer
+(`nn/attention.py`, `nn/ffn.py`, `nn/moe.py`, `nn/mamba.py`).
 
 Layers call ``pc.ag_matmul`` / ``pc.matmul_rs`` / ``pc.psum`` on *per-shard*
 values while inside a manual region entered via ``pc.smap``.
@@ -21,8 +28,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import overlap
 from repro.core.channels import BlockChannel
+from repro.core.compiler import compile_overlap
 
 __all__ = ["ParallelContext", "manual_only"]
 
@@ -60,6 +67,13 @@ class ParallelContext:
     def __post_init__(self):
         if self.channel is None:
             object.__setattr__(self, "channel", BlockChannel(axis=self.axis))
+        elif self.channel.axis != self.axis:
+            # ops lower through compile_overlap(channel), which binds the
+            # collective axis from the channel — a mismatch would run every
+            # permute over a different axis than the manual region
+            raise ValueError(
+                f"BlockChannel.axis {self.channel.axis!r} != "
+                f"ParallelContext.axis {self.axis!r}")
 
     # ---- static topology -----------------------------------------------------
     @property
@@ -108,26 +122,23 @@ class ParallelContext:
         return manual_only(spec, (self.axis,))
 
     # ---- per-shard collective ops (call inside smap) ---------------------------
+    # every op lowers kind -> plan -> executor through the frontend; the plan
+    # cache makes repeated layer calls reuse one schedule per design point
+    def _op(self, kind: str) -> Callable:
+        return compile_overlap(kind, self.channel, backend="xla",
+                               overlapped=(self.mode == "overlap"))
+
     def ag_matmul(self, x, w, **kw):
-        if self.mode == "overlap":
-            return overlap.ag_matmul(x, w, axis=self.axis, channel=self.channel, **kw)
-        return overlap.ag_matmul_baseline(x, w, axis=self.axis, **kw)
+        return self._op("ag_matmul")(x, w, **kw)
 
     def matmul_rs(self, x, w, **kw):
-        if self.mode == "overlap":
-            return overlap.matmul_rs(x, w, axis=self.axis, channel=self.channel, **kw)
-        return overlap.matmul_rs_baseline(x, w, axis=self.axis, **kw)
+        return self._op("matmul_rs")(x, w, **kw)
 
     def ring_attention(self, q, k, v, **kw):
-        if self.mode == "overlap":
-            return overlap.ring_attention(q, k, v, axis=self.axis, **kw)
-        return overlap.ag_attention_baseline(q, k, v, axis=self.axis, **kw)
+        return self._op("ag_attention")(q, k, v, **kw)
 
     def ag_moe(self, x, ids, wts, w_gu, w_down, **kw):
-        from repro.core import moe_overlap
-
-        fn = moe_overlap.ag_moe if self.mode == "overlap" else moe_overlap.ag_moe_baseline
-        return fn(x, ids, wts, w_gu, w_down, axis=self.axis, **kw)
+        return self._op("ag_moe")(x, ids, wts, w_gu, w_down, **kw)
 
     def psum(self, x):
         return lax.psum(x, self.axis)
