@@ -1,0 +1,139 @@
+"""Autotuner bench + CI smoke (``--smoke`` -> ``BENCH_autotune.json``).
+
+Default mode: tune a small sweep of shapes per kind with the analytic
+cost-model ranker and print each shape's winning design point — the paper's
+§3.1 point made concrete: the winner changes with the shape.
+
+``--smoke``: CI guard for the tuning subsystem.  For every workload kind it
+tunes one shape with the cost-model ranker (emulated-CPU wall time is not a
+perf signal; ROADMAP), then asserts the full cache contract:
+
+  1. a second ``autotune`` call is a cache HIT returning the same winner;
+  2. the hit survives a process-memo flush (disk round-trip);
+  3. the winner, realized through ``compile_overlap``, is parity-equal to
+     the explicit default-``BlockChannel`` path (tolerance matched to the
+     winner's flow dtype).
+
+Any violation exits non-zero so CI fails loudly.
+"""
+import argparse
+import json
+import sys
+import tempfile
+
+import jax.numpy as jnp
+
+from repro import tune
+from repro.core import BlockChannel
+from repro.tune import cache as tune_cache
+from repro.tune import cost as tune_cost
+from repro.tune.measure import build_case, time_fn
+
+try:  # package import (python -m benchmarks.autotune_bench / pytest)
+    from benchmarks.common import mesh_tp, row
+except ImportError:  # plain script: the benchmarks/ dir is sys.path[0]
+    from common import mesh_tp, row
+
+# one per-shard signature per kind (see repro.tune.signature for the layout)
+SMOKE_SHAPES = {
+    "ag_matmul": (1, 32, 32, 32),  # (lead, m_loc, k, n_loc)
+    "matmul_rs": (1, 64, 16, 32),  # (lead, m_glob, k_loc, n)
+    "ag_attention": (1, 2, 1, 32, 16),  # (b, h, hkv, s_loc, d)
+    "ag_moe": (32, 16, 2, 2, 16),  # (m_loc, d_model, top_k, e_loc, f)
+}
+
+SWEEP_SHAPES = {
+    "ag_matmul": [(1, 32, 64, 64), (1, 512, 1024, 512), (1, 4096, 8192, 4096)],
+    "matmul_rs": [(1, 128, 32, 64), (1, 4096, 512, 1024), (1, 32768, 1024, 4096)],
+    "ag_attention": [(1, 4, 1, 64, 32), (4, 16, 2, 1024, 128), (8, 16, 2, 4096, 128)],
+    "ag_moe": [(64, 32, 2, 2, 32), (2048, 512, 2, 8, 256), (8192, 1024, 2, 16, 512)],
+}
+
+
+def _tol(accum_dtype: str) -> float:
+    return 1e-3 if accum_dtype == "float32" else 1e-1
+
+
+def _check_winner(kind, result, mesh):
+    """(parity_err, parity_ok, us): the realized winner vs. the explicit
+    default-BlockChannel path, plus its wall time (informational on CPU)."""
+    build, args = build_case(kind, mesh, result.channel.axis, result.signature)
+    fn = build(result.channel)
+    got = fn(*args)
+    ref = build(BlockChannel(axis=result.channel.axis))(*args)
+    ref32 = jnp.asarray(ref, jnp.float32)
+    err = float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32) - ref32)))
+    ok = err < _tol(result.candidate.accum_dtype) * max(1.0, float(jnp.max(jnp.abs(ref32))))
+    return err, ok, time_fn(fn, *args, repeats=3, warmup=1)
+
+
+def smoke(out_path: str = "BENCH_autotune.json") -> int:
+    mesh = mesh_tp(4)
+    cache_dir = tempfile.mkdtemp(prefix="repro-tune-smoke-")
+    results, failures = {}, []
+    for kind, sig in SMOKE_SHAPES.items():
+        entry = {"signature": list(sig)}
+        kw = dict(signature=sig, mesh=mesh, ranker="model", cache_dir=cache_dir)
+        try:
+            first = tune.autotune(kind, **kw)
+            again = tune.autotune(kind, **kw)
+            tune_cache.clear_memo()  # force the disk read
+            rt = tune.autotune(kind, **kw)
+            if first.cache_hit:
+                failures.append(f"{kind}: first tune was already a cache hit")
+            for name, res in (("memo", again), ("disk", rt)):
+                if not res.cache_hit:
+                    failures.append(f"{kind}: {name} lookup re-tuned instead of hitting the cache")
+                if res.candidate != first.candidate:
+                    failures.append(
+                        f"{kind}: {name} round-trip changed the winner "
+                        f"{first.candidate} -> {res.candidate}"
+                    )
+            err, ok, us = _check_winner(kind, first, mesh)
+            if not ok:
+                failures.append(f"{kind}: auto-channel parity error {err:.3e}")
+            entry.update(
+                winner=first.candidate.label(),
+                predicted=tune_cost.explain(kind, sig, 4, first.candidate),
+                cache_round_trip=bool(again.cache_hit and rt.cache_hit),
+                max_abs_err=err,
+                us=round(us, 1),
+                considered=first.considered,
+            )
+            row(f"autotune/{kind}/{first.candidate.label()}", us)
+        except Exception as exc:  # loud: any tuner error fails CI
+            failures.append(f"{kind}: {type(exc).__name__}: {exc}")
+            entry["error"] = str(exc)
+        results[kind] = entry
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {len(results)} kinds, {len(failures)} failures")
+    for f_ in failures:
+        print(f"FAIL {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(world: int) -> int:
+    print(f"# cost-model winners per shape (world={world}); the point of the")
+    print("# paper's decoupling: the best design point is shape-dependent")
+    for kind, shapes in SWEEP_SHAPES.items():
+        for sig in shapes:
+            cands = tune.enumerate_candidates(kind, extent=tune.chunk_extent(kind, sig))
+            best = min(cands, key=lambda c: tune_cost.predict_cost(kind, sig, world, c))
+            us = tune_cost.predict_cost(kind, sig, world, best) * 1e6
+            row(f"tune/{kind}/{'x'.join(map(str, sig))}/{best.label()}", us)
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI guard: tune one shape per kind, assert the cache round-trip, "
+        "write BENCH_autotune.json",
+    )
+    ap.add_argument("--out", default="BENCH_autotune.json")
+    ap.add_argument("--world", type=int, default=8, help="ring size for the cost-model sweep")
+    a = ap.parse_args()
+    sys.exit(smoke(a.out) if a.smoke else main(a.world))

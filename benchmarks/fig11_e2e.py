@@ -1,7 +1,6 @@
 """Paper Fig. 11: end-to-end LM train-step time, TileLink overlap vs
 operator-centric baseline, across model families (reduced configs on the
 8-device CPU mesh; the relative speedup is the paper's reported quantity)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Paper Fig. 9: six MoE shapes — AG + GroupGEMM + TopkReduce + RS
 (double ring) vs non-overlapping AllGather/ReduceScatter."""
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import BlockChannel, CommSpec, CompSpec, compile_overlap
 from repro.core.moe_overlap import moe_router
-from benchmarks.common import mesh8, mesh_tp, time_fn, row
+
+try:  # package import (python -m benchmarks.kernel_bench / pytest)
+    from benchmarks.common import mesh8, mesh_tp, time_fn, row
+except ImportError:  # plain script: the benchmarks/ dir is sys.path[0]
+    from common import mesh8, mesh_tp, time_fn, row
 
 
 def main():

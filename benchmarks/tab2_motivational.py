@@ -1,13 +1,12 @@
 """Paper Table 2 (motivational): TP MLP (LLaMA-7B shape) — AG+GEMM and GEMM+RS
 under non-overlap / decomposition / TileLink."""
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import overlap, BlockChannel
+from repro.core import overlap
 from benchmarks.common import SCALE, mesh8, time_fn, row
 
 

@@ -10,7 +10,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -28,10 +27,10 @@ channel = BlockChannel(axis="model", num_channels=2,
 ag_gemm = compile_overlap("ag_matmul", channel, overlapped=True)
 ag_gemm_base = compile_overlap("ag_matmul", channel, overlapped=False)
 
-S, H, I = 1024, 512, 1408
+S, H, FF = 1024, 512, 1408
 key = jax.random.PRNGKey(0)
 x = jax.device_put(jax.random.normal(key, (S, H)), NamedSharding(mesh, P("model", None)))
-w = jax.device_put(jax.random.normal(key, (H, I)), NamedSharding(mesh, P(None, "model")))
+w = jax.device_put(jax.random.normal(key, (H, FF)), NamedSharding(mesh, P(None, "model")))
 
 specs = dict(in_specs=(P("model", None), P(None, "model")), out_specs=P(None, "model"))
 f_tl = jax.jit(shard_map(ag_gemm, mesh, **specs))

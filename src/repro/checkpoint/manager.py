@@ -16,7 +16,6 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -107,7 +106,8 @@ class CheckpointManager:
         data = np.load(os.path.join(path, "arrays.npz"))
         flat_like, treedef = _flatten(like)
         flat = [data[f"a{i}"] for i in range(len(flat_like))]
-        flat = [np.asarray(a, dtype=l.dtype) for a, l in zip(flat, flat_like)]
+        flat = [np.asarray(a, dtype=like_leaf.dtype)
+                for a, like_leaf in zip(flat, flat_like)]
         tree = treedef.unflatten(flat)
         if mesh is not None and spec_tree is not None:
             from repro.parallel.sharding import place

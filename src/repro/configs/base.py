@@ -6,7 +6,7 @@ One ``ArchConfig`` per assigned architecture lives in ``repro/configs/<id>.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 __all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "Shape", "SHAPES", "get_config"]
 
@@ -71,12 +71,12 @@ class ArchConfig:
 
     def param_count(self) -> int:
         """Approximate parameter count (for 6ND model-FLOPs accounting)."""
-        d, l = self.d_model, self.n_layers
+        d, n_layers = self.d_model, self.n_layers
         hd = self.hd
         attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
         emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
         total = emb
-        for i in range(l):
+        for i in range(n_layers):
             kind = self.layer_kind(i)
             if kind in ("attn", "attn_local", "attn_dense", "shared_attn"):
                 total += attn

@@ -28,6 +28,12 @@ Because both backends execute the same plan, the whole ``CommSpec x CompSpec``
 space (order x num_channels x accum_dtype) is sweepable uniformly across every
 kind — see ``benchmarks/kernel_bench.py --smoke``.
 
+``channel="auto"`` autotunes instead of hard-coding a design point: the
+returned callable resolves the best ``BlockChannel`` for its actual operand
+shapes through ``repro.tune`` (persistent per-mesh cache; analytic cost model
+at trace time, measured winners wherever the cache was pre-warmed — see
+``repro/tune/__init__.py``), then lowers through the normal pipeline above.
+
 ``interpret=None`` defers to ``repro.backend.default_interpret()``: interpret
 on CPU-only hosts, Mosaic on real TPUs.
 
@@ -36,7 +42,7 @@ The returned callable must be invoked inside shard_map over ``channel.axis``.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 from repro.core.channels import BlockChannel
 from repro.core import overlap as _xla
@@ -64,18 +70,37 @@ def unsupported_error(kind: str, backend: str) -> NotImplementedError:
 
 def compile_overlap(
     kind: str,
-    channel: BlockChannel,
+    channel: Union[BlockChannel, str],
     *,
     backend: str = "xla",
     overlapped: bool = True,
     interpret: Optional[bool] = None,
+    axis: str = "model",
+    mesh=None,
+    tune_ranker: Optional[str] = None,
     **kw,
 ) -> Callable:
-    """Compile a tile program. See module docstring."""
+    """Compile a tile program. See module docstring.
+
+    ``channel`` is either an explicit :class:`BlockChannel` or the string
+    ``"auto"``; ``axis``/``mesh``/``tune_ranker`` only apply to ``"auto"``
+    (a mesh widens the tuning-cache fingerprint to the full topology).
+    """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if isinstance(channel, str):
+        if channel != "auto":
+            raise ValueError(
+                f"channel must be a BlockChannel or 'auto', got {channel!r}")
+        if backend == "pallas" and kind not in PALLAS_KINDS:
+            # keep the unsupported-(kind, backend) contract loud at BUILD
+            # time — auto resolution must not defer it into the first trace
+            raise unsupported_error(kind, backend)
+        return _auto_overlap(kind, backend=backend, overlapped=overlapped,
+                             interpret=interpret, axis=axis, mesh=mesh,
+                             tune_ranker=tune_ranker, **kw)
     if not isinstance(channel, BlockChannel):
         raise TypeError(f"channel must be a BlockChannel, got {type(channel)}")
 
@@ -113,3 +138,32 @@ def compile_overlap(
     # interpret=None flows through to backend.resolve_interpret inside the
     # kernel's pallas_call — the target policy lives in one place only
     return functools.partial(table[kind], channel=channel, interpret=interpret, **kw)
+
+
+def _auto_overlap(kind: str, *, backend: str, overlapped: bool,
+                  interpret: Optional[bool], axis: str, mesh,
+                  tune_ranker: Optional[str], **kw) -> Callable:
+    """``channel="auto"``: defer design-point choice to the operand shapes.
+
+    Shapes are only known when the returned callable runs (inside shard_map,
+    like every compiled op), so resolution happens there: a pure host-side
+    cache lookup / cost-model ranking via ``repro.tune.resolve_channel`` —
+    trace-safe — then the normal ``compile_overlap`` lowering.  The tuning
+    cache memo makes repeated layer calls resolve once per (kind, shape).
+    """
+    def auto_fn(*args, **call_kw):
+        import jax.numpy as jnp
+
+        from repro import backend as _backend
+        from repro.tune import resolve_channel
+
+        world = int(mesh.shape[axis]) if mesh is not None \
+            else int(_backend.axis_size(axis))
+        channel = resolve_channel(
+            kind, shapes=[jnp.shape(a) for a in args], mesh=mesh, axis=axis,
+            world=world, ranker=tune_ranker)
+        fn = compile_overlap(kind, channel, backend=backend,
+                             overlapped=overlapped, interpret=interpret, **kw)
+        return fn(*args, **call_kw)
+
+    return auto_fn

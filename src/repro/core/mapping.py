@@ -29,7 +29,6 @@ code, including Pallas kernel bodies).
 from __future__ import annotations
 
 import dataclasses
-import math
 import warnings
 from typing import Tuple
 
@@ -187,16 +186,11 @@ class DynamicTileMapping:
 
         All shapes are static (max tiles); empty tiles have low == high.
         """
-        num_experts = group_sizes.shape[0]
-        offsets = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes.astype(jnp.int32))]
-        )
-        # static upper bound on tiles per expert
-        total = offsets[-1]
-        del total  # traced; tiles laid out per-expert with static max below
-        max_tiles_per_expert = None  # computed by caller via static capacity
+        # table layout: offsets = [0, cumsum(group_sizes)]; tiles laid out
+        # per-expert with a static max (capacity / tile) — see the
+        # capacity-static builder below, which is what callers must use
         raise NotImplementedError(
-            "Use moe.build_dynamic_mapping (capacity-static version); "
+            "Use build_moe_dynamic_mapping (capacity-static version); "
             "kept here as documentation of the table layout."
         )
 

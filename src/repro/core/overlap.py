@@ -32,7 +32,6 @@ Functions come in paper-faithful pairs:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, List, Optional, Sequence
 
 import jax
@@ -399,7 +398,6 @@ def ring_attention(
 def ag_attention_baseline(q, k, v, *, axis: str, causal: bool = False,
                           scale: Optional[float] = None, window: Optional[int] = None):
     """Non-overlapping reference: AllGather full KV, then one dense attention."""
-    r_axis = axis_size(axis)
     rank = lax.axis_index(axis)
     b, h, s_loc, d = q.shape
     kg = lax.all_gather(k, axis, axis=2, tiled=True)

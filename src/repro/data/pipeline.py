@@ -12,7 +12,7 @@ token t via a fixed random bigram table) so loss-decrease tests are meaningful.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import numpy as np
 

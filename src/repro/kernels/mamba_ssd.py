@@ -11,7 +11,6 @@ architectures; sub-quadratic in sequence length (long_500k shapes).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import json
 import subprocess
 import sys
 import time
-from typing import Optional
 
 __all__ = ["run_cell", "main"]
 
@@ -30,7 +29,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              order: str = "ring", channels: int = 1, attn_bf16: bool = False,
              moe_stream: bool = False):
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import get_config, SHAPES
@@ -75,9 +73,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         mod = S.model_module(cfg_)
         params, pspecs = S.abstract_params(cfg_, pc)
         inputs, ispecs = S.input_specs(cfg_, shape, pc)
-        sh = lambda tree: jax.tree_util.tree_map(
-            lambda sp_: NamedSharding(mesh, sp_), tree,
-            is_leaf=lambda v: isinstance(v, P))
+        def sh(tree):
+            return jax.tree_util.tree_map(
+                lambda sp_: NamedSharding(mesh, sp_), tree,
+                is_leaf=lambda v: isinstance(v, P))
 
         if shape.kind == "train":
             opt, ospecs = S.abstract_opt_state(params, pspecs)

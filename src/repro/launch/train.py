@@ -12,20 +12,18 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import SyntheticLM
-from repro.launch.mesh import make_dev_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import model_module
 from repro.parallel.context import ParallelContext
-from repro.parallel.sharding import place, shardings_of
-from repro.runtime import StepWatchdog, ElasticMesh, run_resilient
+from repro.parallel.sharding import place
+from repro.runtime import StepWatchdog, ElasticMesh
 from repro.training import AdamWConfig, init_opt_state, make_train_step
 
 __all__ = ["train", "reduce_config", "main"]

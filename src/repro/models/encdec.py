@@ -7,8 +7,6 @@ stacks and the cross-attention KV gather.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -205,8 +203,9 @@ def init_caches(cfg, pc, batch, max_len, dtype=jnp.bfloat16):
         "k": jnp.zeros((batch, pc.tp * lay.kv_loc, cfg.enc_len, cfg.hd), dtype),
         "v": jnp.zeros((batch, pc.tp * lay.kv_loc, cfg.enc_len, cfg.hd), dtype),
     }
-    stack = lambda c: jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a[None], (n_dec,) + a.shape).copy(), c)
+    def stack(c):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_dec,) + a.shape).copy(), c)
     return {"self": stack(self_c), "cross": stack(cross_c)}
 
 
@@ -268,7 +267,8 @@ def decode_step(params, caches, cfg, pc: ParallelContext, tokens, cache_len,
         import jax.numpy as _jnp
         collected = []
         for u in range(cfg.n_layers):
-            sl = lambda t: jax.tree_util.tree_map(lambda a: a[u], t)
+            def sl(t, _u=u):
+                return jax.tree_util.tree_map(lambda a: a[_u], t)
             x, sc = body(x, (sl(params["dec_scan"]), sl(caches["self"]),
                              sl(caches["cross"])))
             collected.append(sc)

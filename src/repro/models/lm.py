@@ -14,7 +14,6 @@ across all occurrences — Zamba2).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -18,8 +18,8 @@ grad-masked so semantics match the unpadded architecture exactly.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -193,13 +193,16 @@ def _project_qkv(params, h, pc, lay, hd):
 
 
 def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
-              rope_theta=None, attn_chunk=1024, return_kv=False):
+              rope_theta=None, attn_chunk=1024, return_kv=False, tune=False):
     """Full-sequence attention block body (call inside pc.smap manual region).
 
     x: [B, s_loc, D] sequence-sharded. Returns [B, s_loc, D] (residual added);
     with ``return_kv``, also the per-shard KV in cache layout
-    [B, kv_loc, S, hd] (prefill-into-cache).
+    [B, kv_loc, S, hd] (prefill-into-cache).  ``tune=True`` lets the AG+GEMM
+    and GEMM+RS collectives resolve autotuned BlockChannels (repro.tune).
     """
+    if tune and not pc.tune:
+        pc = dataclasses.replace(pc, tune=True)
     lay = _lay(cfg, pc.tp)
     hd = cfg.hd
     b = x.shape[0]

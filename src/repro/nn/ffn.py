@@ -4,9 +4,13 @@ Forward = AG+GEMM (gate/up fused, column-parallel) -> activation ->
 GEMM+RS (down, row-parallel): exactly the tensor-parallel MLP of paper Fig. 1.
 In overlap mode both collectives lower through ``compile_overlap`` as tile
 plans run by the generic schedule executor, so the layer inherits whatever
-tile order / channel count / flow dtype ``pc.channel`` selects.
+tile order / channel count / flow dtype ``pc.channel`` selects — or, with
+``apply_seq(..., tune=True)``, whatever the ``repro.tune`` autotuner picks
+per (kind, shape) on this mesh.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +40,15 @@ def _act(cfg):
     return ACTS[cfg.act]
 
 
-def apply_seq(params, x, pc, cfg):
+def apply_seq(params, x, pc, cfg, *, tune=False):
     """x: [B, s_loc, D] -> [B, s_loc, D] (+residual). Inside manual region.
 
     Per-shard w_gu is [D, 2*f_loc] with gate|up halves interleaved per shard
-    (column-parallel), so the activation is local.
+    (column-parallel), so the activation is local.  ``tune=True`` lets each
+    collective op resolve its own autotuned BlockChannel (repro.tune).
     """
+    if tune and not pc.tune:
+        pc = dataclasses.replace(pc, tune=True)
     h = rms_norm(x, params["ln"], cfg.norm_eps)
     gu = pc.ag_matmul(h, params["w_gu"])           # AG + GEMM  [B, S, 2*f_loc]
     f_loc = gu.shape[-1] // 2

@@ -15,6 +15,8 @@ structurally — no masks needed).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -60,12 +62,16 @@ def specs(cfg, tp: int, dp) -> dict:
     return s
 
 
-def apply_seq(params, x, pc, cfg):
+def apply_seq(params, x, pc, cfg, *, tune=False):
     """x: [B, s_loc, D] -> ([B, s_loc, D], aux_loss). Inside manual region.
 
     Batch rows are routed/dispatched independently (vmap over B) so the
     DP-sharded batch dim partitions cleanly; capacity is per (batch row,
-    sequence chunk)."""
+    sequence chunk).  ``tune=True`` lets the AG+MoE double ring (and the
+    shared-expert MLP, which sees the same pc) resolve autotuned
+    BlockChannels (repro.tune)."""
+    if tune and not pc.tune:
+        pc = dataclasses.replace(pc, tune=True)
     m = cfg.moe
     e_pad = params["w_gu"].shape[0] * pc.tp  # per-shard E_loc * tp
     h = rms_norm(x, params["ln"], cfg.norm_eps)

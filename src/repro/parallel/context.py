@@ -14,13 +14,20 @@ Every per-shard collective op lowers through ``compile_overlap`` with
 channel count, flow dtype) is selected once here and honored by every layer
 (`nn/attention.py`, `nn/ffn.py`, `nn/moe.py`, `nn/mamba.py`).
 
+With ``tune=True`` the design point is not fixed: each op resolves the best
+``BlockChannel`` for its own operand shapes through the ``repro.tune``
+autotuner (persistent per-mesh cache; trace-safe cost-model ranking, or
+measured winners wherever the cache was pre-warmed with
+``repro.tune.autotune(..., ranker="measure")``).  Non-tuned fields of
+``pc.channel`` (comm resource/mode, tiles) are inherited by every winner.
+
 Layers call ``pc.ag_matmul`` / ``pc.matmul_rs`` / ``pc.psum`` on *per-shard*
 values while inside a manual region entered via ``pc.smap``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +70,9 @@ class ParallelContext:
                                             # (halves attention HBM traffic)
     moe_decode_stream: bool = False         # stream local experts once over all
                                             # tokens in decode (bytes-optimal)
+    tune: bool = False                      # autotune each op's BlockChannel
+                                            # per (kind, shape) via repro.tune
+    tune_ranker: Optional[str] = None       # "measure" | "model" | "auto"/None
 
     def __post_init__(self):
         if self.channel is None:
@@ -124,21 +134,33 @@ class ParallelContext:
     # ---- per-shard collective ops (call inside smap) ---------------------------
     # every op lowers kind -> plan -> executor through the frontend; the plan
     # cache makes repeated layer calls reuse one schedule per design point
-    def _op(self, kind: str) -> Callable:
-        return compile_overlap(kind, self.channel, backend="xla",
+    def _op(self, kind: str, shapes: Tuple = ()) -> Callable:
+        channel = self.channel
+        if self.tune and self.mode == "overlap" and shapes:
+            from repro.tune import resolve_channel
+
+            # host-side: tuning-cache lookup / cost-model ranking (trace-safe)
+            channel = resolve_channel(
+                kind, shapes=shapes, mesh=self.mesh, axis=self.axis,
+                base=self.channel, ranker=self.tune_ranker)
+        return compile_overlap(kind, channel, backend="xla",
                                overlapped=(self.mode == "overlap"))
 
     def ag_matmul(self, x, w, **kw):
-        return self._op("ag_matmul")(x, w, **kw)
+        return self._op("ag_matmul", (jnp.shape(x), jnp.shape(w)))(x, w, **kw)
 
     def matmul_rs(self, x, w, **kw):
-        return self._op("matmul_rs")(x, w, **kw)
+        return self._op("matmul_rs", (jnp.shape(x), jnp.shape(w)))(x, w, **kw)
 
     def ring_attention(self, q, k, v, **kw):
-        return self._op("ag_attention")(q, k, v, **kw)
+        return self._op("ag_attention",
+                        (jnp.shape(q), jnp.shape(k), jnp.shape(v)))(q, k, v, **kw)
 
     def ag_moe(self, x, ids, wts, w_gu, w_down, **kw):
-        return self._op("ag_moe")(x, ids, wts, w_gu, w_down, **kw)
+        return self._op(
+            "ag_moe", (jnp.shape(x), jnp.shape(ids), jnp.shape(wts),
+                       jnp.shape(w_gu), jnp.shape(w_down)),
+        )(x, ids, wts, w_gu, w_down, **kw)
 
     def psum(self, x):
         return lax.psum(x, self.axis)

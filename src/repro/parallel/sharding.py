@@ -1,8 +1,6 @@
 """Sharding utilities: placing pytrees, named shardings, spec manipulation."""
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 

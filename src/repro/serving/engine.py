@@ -7,14 +7,12 @@ single jit'd ``decode_step`` advances all sequences one token per call.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
-from repro.parallel.sharding import place
 
 __all__ = ["ServeEngine"]
 

@@ -46,8 +46,8 @@ def init_opt_state(params):
 
 def global_norm(tree):
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def apply_update(params, grads, state, cfg: AdamWConfig,

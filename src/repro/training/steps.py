@@ -1,12 +1,10 @@
 """Train / eval step builders (jit-compiled, mesh-aware)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.training.optimizer import AdamWConfig, apply_update
 

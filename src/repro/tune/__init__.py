@@ -1,0 +1,274 @@
+"""Schedule-space autotuner over the compiled frontend (ROADMAP "Next").
+
+The paper's core argument (§3.1) is that communication and computation tune
+*independently*: the best ``(tile order, channel count f_C, flow dtype)``
+changes per shape and per mesh.  PR 2 made that space uniformly sweepable
+through ``compile_overlap``; this package searches it:
+
+    result = autotune("ag_matmul", signature=(1, 64, 32, 32), mesh=mesh)
+    fn = compile_overlap("ag_matmul", result.channel)
+
+or transparently:
+
+    compile_overlap("ag_matmul", channel="auto")      # resolves per call shape
+    ParallelContext(mesh=mesh, tune=True)             # every op resolves tuned
+    nn.ffn.apply_seq(params, x, pc, cfg, tune=True)   # per-layer opt-in
+
+Rankers
+-------
+``ranker="measure"``  times each candidate through ``compile_overlap`` under
+                      shard_map on the target mesh (``tune/measure.py``);
+``ranker="model"``    ranks with the analytic bytes-on-wire vs. per-tile-FLOPs
+                      cost model (``tune/cost.py``);
+``ranker="auto"``     (default) measures on a real TPU target, models
+                      otherwise — emulated-CPU wall time is not a perf signal
+                      (ROADMAP), and model ranking is pure host arithmetic so
+                      it is also safe *inside* a trace, where timing is
+                      impossible.  ``REPRO_TUNE_RANKER`` overrides globally.
+
+Both rankers walk ONE candidate enumerator (``tune/candidates.py``) and
+share ONE cache schema (``tune/cache.py``): results persist per mesh
+fingerprint (mesh shape + axis names + device kind + jax version + backend
+target) under ``~/.cache/repro-tune`` (``REPRO_TUNE_CACHE`` overrides), and
+a fingerprint hit never re-measures — except that an *explicit*
+``ranker="measure"`` request upgrades a model-ranked record in place, so
+pre-warming the cache with measured winners actually takes effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.channels import BlockChannel
+from repro.tune import cache as _cache
+from repro.tune import cost as _cost
+from repro.tune import measure as _measure
+from repro.tune.candidates import (
+    DEFAULT_SPACE,
+    Candidate,
+    Space,
+    TUNABLE_KINDS,
+    chunk_extent,
+    enumerate_candidates,
+    signature,
+)
+
+__all__ = [
+    "autotune",
+    "resolve_channel",
+    "TuneResult",
+    "Space",
+    "Candidate",
+    "DEFAULT_SPACE",
+    "TUNABLE_KINDS",
+    "RANKERS",
+    "signature",
+    "enumerate_candidates",
+    "chunk_extent",
+]
+
+RANKERS = ("auto", "measure", "model")
+_ENV_RANKER = "REPRO_TUNE_RANKER"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Winner of one search (or one cache hit)."""
+
+    kind: str
+    signature: Tuple[int, ...]
+    candidate: Candidate
+    channel: BlockChannel
+    ranker: str  # ranker that PRODUCED the record
+    score: float  # predicted seconds or measured us
+    cache_hit: bool
+    fingerprint: Dict[str, Any]
+    considered: int  # candidates scored (0 on a hit)
+
+
+def _entry_key(kind: str, axis: str, world: int, sig: Sequence[int], space: Space) -> str:
+    # axis + world are part of the key: one multi-axis mesh fingerprint can
+    # host tunings along different axes with different ring sizes
+    shape = ",".join(str(int(s)) for s in sig)
+    return f"{kind}|axis={axis}|world={int(world)}|sig={shape}|space={space.digest()}"
+
+
+def _tracing() -> bool:
+    """Best-effort: are we inside a jax trace (timing would be meaningless)?"""
+    try:
+        probe = getattr(jax.core, "trace_state_clean", None)
+        if probe is None:
+            from jax._src import core as _src_core  # probed, version-moved
+
+            probe = getattr(_src_core, "trace_state_clean", None)
+        return not probe() if probe is not None else False
+    except Exception:
+        return False
+
+
+def _wants_measure_upgrade(rec: Dict[str, Any], ranker: Optional[str], mesh) -> bool:
+    """Should this hit re-rank?  An *explicit* ``ranker="measure"`` request
+    (argument or ``REPRO_TUNE_RANKER``) landing on a model-ranked record —
+    exactly the pre-warm flow the fallback warning recommends — must measure
+    and overwrite, provided measurement is actually possible here.  Measured
+    records satisfy every request; ``"auto"`` never forces a re-rank.
+    """
+    requested = ranker or os.environ.get(_ENV_RANKER)
+    return (
+        requested == "measure"
+        and rec.get("ranker") == "model"
+        and mesh is not None
+        and not _tracing()
+    )
+
+
+def _resolve_ranker(ranker: Optional[str], mesh) -> str:
+    from repro import backend
+
+    choice = ranker or os.environ.get(_ENV_RANKER) or "auto"
+    if choice not in RANKERS:
+        raise ValueError(f"unknown ranker {choice!r}; one of {RANKERS}")
+    if choice == "auto":
+        choice = "measure" if backend.target() == "tpu" else "model"
+    if choice == "measure" and (mesh is None or _tracing()):
+        warnings.warn(
+            "repro.tune: measured ranking needs a mesh outside a trace; "
+            "falling back to the analytic cost model (pre-tune with "
+            "repro.tune.autotune(..., ranker='measure') to warm the cache)",
+            stacklevel=3,
+        )
+        choice = "model"
+    return choice
+
+
+def autotune(
+    kind: str,
+    *,
+    signature: Sequence[int],
+    mesh=None,
+    axis: str = "model",
+    world: Optional[int] = None,
+    base: Optional[BlockChannel] = None,
+    ranker: Optional[str] = None,
+    space: Space = DEFAULT_SPACE,
+    cache_dir: Optional[str] = None,
+    force: bool = False,
+    repeats: int = 3,
+    warmup: int = 1,
+) -> TuneResult:
+    """Find (or recall) the best design point for ``(kind, signature)``.
+
+    ``signature`` is the canonical per-shard shape tuple (see
+    :func:`repro.tune.signature`).  With ``mesh`` the fingerprint covers the
+    whole topology; without one, ``world`` (the axis size) must be given.
+    ``force=True`` re-ranks even on a cache hit (and overwrites the entry).
+    """
+    sig = tuple(int(s) for s in signature)
+    if mesh is not None:
+        world = int(mesh.shape[axis])
+    if world is None:
+        raise ValueError("autotune needs a mesh or an explicit world size")
+    fp = _cache.mesh_fingerprint(mesh, axis=axis, world=world)
+    key = _entry_key(kind, axis, world, sig, space)
+
+    if not force:
+        rec = _cache.load_entry(fp, key, directory=cache_dir)
+        if rec is not None and _wants_measure_upgrade(rec, ranker, mesh):
+            rec = None  # explicit measure request upgrades a model-ranked entry
+        if rec is not None:
+            cand = Candidate(
+                order=rec["order"],
+                num_channels=int(rec["num_channels"]),
+                accum_dtype=rec["accum_dtype"],
+            )
+            return TuneResult(
+                kind=kind,
+                signature=sig,
+                candidate=cand,
+                channel=cand.channel(axis, base),
+                ranker=rec["ranker"],
+                score=float(rec["score"]),
+                cache_hit=True,
+                fingerprint=fp,
+                considered=0,
+            )
+
+    use = _resolve_ranker(ranker, mesh)
+    cands = enumerate_candidates(kind, extent=chunk_extent(kind, sig), space=space)
+    best: Optional[Candidate] = None
+    best_score = float("inf")
+    for cand in cands:
+        if use == "measure":
+            score = _measure.measure_channel(
+                kind, cand.channel(axis, base), mesh, sig, repeats=repeats, warmup=warmup
+            )
+        else:
+            score = _cost.predict_cost(kind, sig, world, cand)
+        if score < best_score:  # strict: ties keep enumeration order
+            best, best_score = cand, score
+    assert best is not None
+
+    record = {
+        "kind": kind,
+        "signature": list(sig),
+        "world": world,
+        "order": best.order,
+        "num_channels": best.num_channels,
+        "accum_dtype": best.accum_dtype,
+        "ranker": use,
+        "score": best_score,
+        "score_unit": "us_measured" if use == "measure" else "s_predicted",
+        "considered": len(cands),
+    }
+    _cache.store_entry(fp, key, record, directory=cache_dir)
+    return TuneResult(
+        kind=kind,
+        signature=sig,
+        candidate=best,
+        channel=best.channel(axis, base),
+        ranker=use,
+        score=best_score,
+        cache_hit=False,
+        fingerprint=fp,
+        considered=len(cands),
+    )
+
+
+def resolve_channel(
+    kind: str,
+    *,
+    shapes: Optional[Sequence[Tuple[int, ...]]] = None,
+    sig: Optional[Sequence[int]] = None,
+    mesh=None,
+    axis: str = "model",
+    world: Optional[int] = None,
+    base: Optional[BlockChannel] = None,
+    ranker: Optional[str] = None,
+    space: Space = DEFAULT_SPACE,
+) -> BlockChannel:
+    """Tuned ``BlockChannel`` for an op call — the transparent entry point.
+
+    Cache hits and model ranking are pure host-side work, so this is safe at
+    trace time (which is where ``compile_overlap(kind, channel="auto")`` and
+    ``ParallelContext(tune=True)`` land).  Non-tuned fields (comm resource,
+    mode, tiles) are inherited from ``base``.
+    """
+    if sig is None:
+        if shapes is None:
+            raise ValueError("resolve_channel needs shapes or a signature")
+        sig = signature(kind, [tuple(s) for s in shapes])
+    res = autotune(
+        kind,
+        signature=sig,
+        mesh=mesh,
+        axis=axis,
+        world=world,
+        base=base,
+        ranker=ranker,
+        space=space,
+    )
+    return res.channel

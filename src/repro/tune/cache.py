@@ -1,0 +1,191 @@
+"""Persistent per-mesh autotune cache.
+
+Tuning results are keyed on a **mesh fingerprint** — everything that can
+change which design point wins without the workload changing:
+
+  mesh shape + axis names + device kind + jax version + backend target
+
+One JSON file per fingerprint lives under the cache directory
+(``~/.cache/repro-tune`` by default, ``REPRO_TUNE_CACHE`` overrides,
+``XDG_CACHE_HOME`` respected).  The file name is a short hash of the
+fingerprint, but the full fingerprint payload is stored *inside* the file and
+re-verified on every load: a payload mismatch (hand-copied cache file, hash
+collision, edited entry) invalidates the whole file and forces a re-tune —
+never a silent reuse of another mesh's winners.
+
+Entries are keyed on ``(kind, shape signature, candidate-space)`` — the
+ranker that produced a winner is recorded but is NOT part of the key, so a
+measured result is never clobbered by a later model-ranked lookup.  Hits
+never re-measure, with one deliberate exception owned by ``autotune``: an
+*explicit* ``ranker="measure"`` request upgrades a model-ranked record (the
+pre-warm flow), overwriting it with the measured winner.
+
+Writes are atomic (temp file + ``os.replace``); corrupt or unreadable files
+degrade to an empty cache.  A process-local memo avoids re-reading the JSON
+on every trace-time resolution.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+__all__ = [
+    "cache_dir",
+    "mesh_fingerprint",
+    "fingerprint_digest",
+    "load_entry",
+    "store_entry",
+    "clear_memo",
+]
+
+_ENV_DIR = "REPRO_TUNE_CACHE"
+
+# (directory, digest, entry_key) -> record; invalidated via clear_memo()
+# (tests) or whenever store_entry writes through it.
+_MEMO: Dict[Tuple[str, str, str], Dict[str, Any]] = {}
+# (directory, digest) -> parsed file payload, so one trace touching many
+# shapes reads once; keyed by directory so distinct cache_dir arguments in
+# one process never serve each other's entries
+_FILES: Dict[Tuple[str, str], Dict[str, Any]] = {}
+
+
+def cache_dir() -> str:
+    """Resolved cache directory (not created until first store)."""
+    env = os.environ.get(_ENV_DIR)
+    if env:
+        return os.path.expanduser(env)
+    xdg = os.environ.get("XDG_CACHE_HOME", "~/.cache")
+    return os.path.join(os.path.expanduser(xdg), "repro-tune")
+
+
+def mesh_fingerprint(
+    mesh=None, *, axis: Optional[str] = None, world: Optional[int] = None
+) -> Dict[str, Any]:
+    """The stable identity a tuning result is valid for.
+
+    With a ``mesh``, the full shape/axis-name tuple is used.  Without one
+    (e.g. resolving inside a manual region where only the collective axis is
+    visible), the caller supplies ``(axis, world)`` and the fingerprint
+    covers just that axis — still unique per (topology, software) pair.
+    """
+    if mesh is not None:
+        shape = tuple(int(mesh.shape[a]) for a in mesh.axis_names)
+        names = tuple(str(a) for a in mesh.axis_names)
+        dev = mesh.devices.flat[0]
+    else:
+        if axis is None or world is None:
+            raise ValueError("mesh_fingerprint needs a mesh or (axis, world)")
+        shape = (int(world),)
+        names = (str(axis),)
+        dev = jax.devices()[0]
+    from repro import backend  # late: backend reads env at call time
+
+    return {
+        "mesh_shape": list(shape),
+        "axis_names": list(names),
+        "device_kind": str(getattr(dev, "device_kind", dev.platform)),
+        "jax_version": jax.__version__,
+        "backend_target": backend.target(),
+    }
+
+
+def fingerprint_digest(fp: Dict[str, Any]) -> str:
+    """Short stable digest of a fingerprint payload (the cache file name)."""
+    blob = json.dumps(fp, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _resolve_dir(directory: Optional[str]) -> str:
+    return os.path.abspath(directory or cache_dir())
+
+
+def _path(digest: str, directory: str) -> str:
+    return os.path.join(directory, f"{digest}.json")
+
+
+def _read_file(
+    digest: str, directory: str, fp: Dict[str, Any], *, fresh: bool = False
+) -> Dict[str, Any]:
+    """Load + verify one cache file; any mismatch or damage -> empty cache.
+
+    ``fresh=True`` bypasses the process memo and re-parses the disk file —
+    writers use it so concurrent processes sharing a cache directory merge
+    instead of clobbering each other with stale memo snapshots.
+    """
+    if not fresh and (directory, digest) in _FILES:
+        return _FILES[(directory, digest)]
+    payload: Dict[str, Any] = {"fingerprint": fp, "entries": {}}
+    try:
+        with open(_path(digest, directory)) as fh:
+            data = json.load(fh)
+        # the stored fingerprint must match the live one exactly; the digest
+        # alone is not trusted (mesh-fingerprint mismatch => re-tune)
+        if data.get("fingerprint") == fp and isinstance(data.get("entries"), dict):
+            payload = data
+    except (OSError, ValueError):
+        pass
+    _FILES[(directory, digest)] = payload
+    return payload
+
+
+def load_entry(
+    fp: Dict[str, Any], entry_key: str, *, directory: Optional[str] = None
+) -> Optional[Dict[str, Any]]:
+    """Cached record for ``entry_key`` under fingerprint ``fp``, else None."""
+    directory = _resolve_dir(directory)
+    digest = fingerprint_digest(fp)
+    memo_key = (directory, digest, entry_key)
+    if memo_key in _MEMO:
+        return _MEMO[memo_key]
+    rec = _read_file(digest, directory, fp)["entries"].get(entry_key)
+    if rec is not None:
+        _MEMO[memo_key] = rec
+    return rec
+
+
+def store_entry(
+    fp: Dict[str, Any],
+    entry_key: str,
+    record: Dict[str, Any],
+    *,
+    directory: Optional[str] = None,
+) -> str:
+    """Persist ``record``; returns the cache file path.  Atomic per write.
+
+    The payload is re-read from disk (not the memo) right before writing, so
+    entries stored by OTHER processes since our last read are merged rather
+    than lost — last-writer-wins applies per entry, not per file.
+    """
+    directory = _resolve_dir(directory)
+    digest = fingerprint_digest(fp)
+    path = _path(digest, directory)
+    payload = _read_file(digest, directory, fp, fresh=True)
+    payload["fingerprint"] = fp
+    payload["entries"][entry_key] = dict(record, saved_at=time.time())
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    _MEMO[(directory, digest, entry_key)] = payload["entries"][entry_key]
+    _FILES[(directory, digest)] = payload
+    return path
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo (tests use this to force disk round-trips)."""
+    _MEMO.clear()
+    _FILES.clear()

@@ -1,0 +1,149 @@
+"""Candidate enumeration — ONE design-space walk for both rankers.
+
+The tunable space is exactly the decoupled ``CommSpec x CompSpec`` surface
+the plan layer sweeps (paper §3.1): tile order x channel count (f_C) x flow
+dtype.  Both the measured ranker and the analytic cost model iterate the
+tuple returned by :func:`enumerate_candidates`, and the cache entry key
+hashes the same :class:`Space` — so "which points were considered" is part
+of a result's identity and a narrowed sweep can never shadow a full one.
+
+Enumeration is deterministic (nested loops over the Space's ordered fields)
+and feasibility-aware: each requested channel count is pushed through
+``mapping.effective_channels`` against the kind's chunked extent, and
+candidates that clamp onto an already-seen effective point are dropped —
+the rankers never time the same realized schedule twice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import warnings
+from typing import Optional, Sequence, Tuple
+
+from repro.core.channels import BlockChannel, ORDERS
+from repro.core.mapping import effective_channels
+
+__all__ = [
+    "Space",
+    "Candidate",
+    "DEFAULT_SPACE",
+    "enumerate_candidates",
+    "signature",
+    "chunk_extent",
+]
+
+TUNABLE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class Space:
+    """The swept portion of the design space (ordered -> deterministic)."""
+
+    orders: Tuple[str, ...] = ORDERS
+    channel_counts: Tuple[int, ...] = (1, 2, 4)
+    accum_dtypes: Tuple[str, ...] = ("float32", "bfloat16")
+
+    def __post_init__(self):
+        for o in self.orders:
+            if o not in ORDERS:
+                raise ValueError(f"unknown order {o!r}; one of {ORDERS}")
+        if any(c < 1 for c in self.channel_counts):
+            raise ValueError(f"channel counts must be >= 1: {self.channel_counts}")
+
+    def digest(self) -> str:
+        blob = repr((self.orders, self.channel_counts, self.accum_dtypes))
+        return hashlib.sha256(blob.encode()).hexdigest()[:8]
+
+
+DEFAULT_SPACE = Space()
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One design point; ``num_channels`` is already the effective divisor."""
+
+    order: str
+    num_channels: int
+    accum_dtype: str
+
+    def channel(self, axis: str, base: Optional[BlockChannel] = None) -> BlockChannel:
+        """Realize as a BlockChannel, inheriting non-tuned fields of ``base``."""
+        base = base or BlockChannel(axis=axis)
+        return base.with_(
+            axis=axis,
+            num_channels=self.num_channels,
+            comm=dataclasses.replace(base.comm, order=self.order),
+            comp=dataclasses.replace(base.comp, accum_dtype=self.accum_dtype),
+        )
+
+    def label(self) -> str:
+        return f"{self.order}/C={self.num_channels}/{self.accum_dtype}"
+
+
+def enumerate_candidates(
+    kind: str, *, extent: Optional[int] = None, space: Space = DEFAULT_SPACE
+) -> Tuple[Candidate, ...]:
+    """Deterministic feasible design points for ``kind``.
+
+    ``extent`` is the chunked extent ``num_channels`` must divide (see
+    :func:`chunk_extent`); when known, infeasible counts are clamped through
+    ``mapping.effective_channels`` and deduplicated.
+    """
+    if kind not in TUNABLE_KINDS:
+        raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
+    out, seen = [], set()
+    for order in space.orders:
+        for req in space.channel_counts:
+            if extent is not None:
+                with warnings.catch_warnings():
+                    # the clamp warning is for silent runtime fallbacks; an
+                    # enumerator probing feasibility is not a surprise
+                    warnings.simplefilter("ignore")
+                    nch = effective_channels(extent, req, kind=kind)
+            else:
+                nch = req
+            for accum in space.accum_dtypes:
+                cand = Candidate(order=order, num_channels=nch, accum_dtype=accum)
+                if cand not in seen:
+                    seen.add(cand)
+                    out.append(cand)
+    return tuple(out)
+
+
+def signature(kind: str, shapes: Sequence[Tuple[int, ...]]) -> Tuple[int, ...]:
+    """Canonical shape signature from *per-shard* operand shapes.
+
+    Takes the positional operand shapes exactly as the ``compile_overlap``
+    ops receive them inside the manual region, and keeps only what changes
+    the tuning landscape (leading batch dims collapse into one).
+    """
+    if kind == "ag_matmul":
+        x, w = shapes[0], shapes[1]
+        lead = math.prod(x[:-2]) if len(x) > 2 else 1
+        return (lead, x[-2], x[-1], w[-1])  # (lead, m_loc, k, n_loc)
+    if kind == "matmul_rs":
+        x, w = shapes[0], shapes[1]
+        lead = math.prod(x[:-2]) if len(x) > 2 else 1
+        return (lead, x[-2], x[-1], w[-1])  # (lead, m_glob, k_loc, n)
+    if kind == "ag_attention":
+        q, k = shapes[0], shapes[1]
+        return (q[0], q[1], k[1], q[2], q[3])  # (b, h, hkv, s_loc, d)
+    if kind == "ag_moe":
+        x, ids, w_gu = shapes[0], shapes[1], shapes[3]
+        # (m_loc, d_model, top_k, e_loc, d_expert)
+        return (x[-2], x[-1], ids[-1], w_gu[0], w_gu[-1] // 2)
+    raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
+
+
+def chunk_extent(kind: str, sig: Tuple[int, ...]) -> int:
+    """The extent ``num_channels`` chunks for ``kind`` (what C must divide)."""
+    if kind == "ag_matmul":
+        return sig[1]  # m_loc rows of the local shard
+    if kind == "matmul_rs":
+        return sig[3]  # n columns of the partial
+    if kind == "ag_attention":
+        return sig[3]  # s_loc KV rows of the local shard
+    if kind == "ag_moe":
+        return sig[0]  # m_loc token rows of the local chunk
+    raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")

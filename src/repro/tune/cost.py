@@ -1,0 +1,111 @@
+"""Analytic cost model — the ranking fallback when wall time is no signal.
+
+CPU wall time on the emulated target does not predict TPU behavior (ROADMAP),
+and resolution can also happen *inside* a trace, where timing is impossible.
+This model ranks candidates from first principles in the spirit of
+``launch/roofline.py``: per schedule step, bytes-on-wire over link bandwidth
+vs. per-tile FLOPs over peak, composed into a pipelined makespan:
+
+    t_step  = max(t_comm, t_comp)            (overlap: the slower engine gates)
+    total   = (steps - 1) * t_step           (steady state)
+            + (t_comm + t_comp) / C          (pipeline fill/drain: finer
+                                              channels expose less head/tail)
+            + alpha * C * steps              (per-transfer launch latency —
+                                              what keeps C from growing forever)
+
+Order effects: a bidirectional ring with >= 2 channels splits traffic across
+both ICI link directions (halving per-link bytes); all2all pays the mean ring
+distance (R/4 hops) per payload on a physical ring/torus.  The flow dtype
+scales wire bytes only for flows whose *partials* travel (rs / ag_rs); for
+pure AG flows the input tiles travel in their own dtype, so the model is
+flow-dtype-neutral there and the enumeration order (float32 first) breaks the
+tie deterministically.
+
+Hardware constants come from ``launch.roofline.HW`` (TPU v5e) — the model
+ranks relative candidates, so absolute calibration is not critical.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.launch.roofline import HW
+from repro.tune.candidates import Candidate, chunk_extent
+
+__all__ = ["ALPHA_S", "step_terms", "predict_cost"]
+
+# per-transfer launch/synchronization latency (seconds); the alpha of a
+# classic alpha-beta model.  ~1us per DMA descriptor + semaphore round.
+ALPHA_S = 1e-6
+
+# bytes per element flowing tiles travel in (activations; bf16 on TPU)
+_TILE_BYTES = 2
+
+
+def _flow_bytes(accum_dtype: str) -> int:
+    return jnp.dtype(accum_dtype).itemsize
+
+
+def step_terms(
+    kind: str, sig: Tuple[int, ...], world: int, accum_dtype: str
+) -> Tuple[float, float]:
+    """(wire_bytes, flops) per schedule step per rank for one candidate.
+
+    Bytes counts every flow the executor permutes each step (tiles and/or
+    the travelling reduction); flops counts the tile compute consumed while
+    those transfers are in flight (see core/overlap.run_plan).
+    """
+    fb = _flow_bytes(accum_dtype)
+    if kind == "ag_matmul":
+        lead, m_loc, k, n_loc = sig
+        wire = lead * m_loc * k * _TILE_BYTES
+        flops = 2.0 * lead * m_loc * k * n_loc
+    elif kind == "matmul_rs":
+        lead, m_glob, k_loc, n = sig
+        m_loc = max(1, m_glob // world)
+        wire = lead * m_loc * n * fb  # the accumulator is the flow
+        flops = 2.0 * lead * m_loc * k_loc * n
+    elif kind == "ag_attention":
+        b, h, hkv, s_loc, d = sig
+        wire = 2.0 * b * hkv * s_loc * d * _TILE_BYTES  # K and V tiles
+        flops = 4.0 * b * h * s_loc * s_loc * d  # QK^T + PV
+    elif kind == "ag_moe":
+        m_loc, d_model, top_k, e_loc, d_exp = sig
+        # double ring: token tiles flow forward AND the combined reduction
+        # rides the same permutes (in the flow dtype)
+        wire = m_loc * d_model * (_TILE_BYTES + fb)
+        flops = 6.0 * m_loc * d_model * d_exp * max(1, top_k)
+    else:
+        raise ValueError(f"no cost model for kind {kind!r}")
+    return float(wire), float(flops)
+
+
+def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
+    """Predicted makespan (seconds) of one candidate; lower is better."""
+    wire, flops = step_terms(kind, sig, world, cand.accum_dtype)
+    steps = world
+
+    # per-link effective bytes for this tile order
+    dirs = 2.0 if (cand.order == "bidir_ring" and cand.num_channels >= 2) else 1.0
+    hops = max(1.0, world / 4.0) if cand.order == "all2all" else 1.0
+
+    t_comm = wire * hops / (HW["link_bw"] * dirs)
+    t_comp = flops / HW["peak_flops"]
+
+    steady = (steps - 1) * max(t_comm, t_comp)
+    fill = (t_comm + t_comp) / cand.num_channels
+    launch = ALPHA_S * cand.num_channels * steps
+    return steady + fill + launch
+
+
+def explain(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> Dict[str, float]:
+    """Itemized terms for reports/benchmarks (same math as predict_cost)."""
+    wire, flops = step_terms(kind, sig, world, cand.accum_dtype)
+    ext = chunk_extent(kind, sig)
+    return {
+        "wire_bytes_per_step": wire,
+        "flops_per_step": flops,
+        "chunk_extent": float(ext),
+        "predicted_s": predict_cost(kind, sig, world, cand),
+    }

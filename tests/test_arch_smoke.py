@@ -3,7 +3,6 @@
 Each assigned arch instantiates a REDUCED config of the same family and runs
 one forward + one train step on CPU, asserting output shapes and no NaNs.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """TileLink overlap ops == operator-centric baselines == dense references."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -1,7 +1,6 @@
 """Extended coverage: memmap data path, enc-dec decode consistency, bf16 fused
 comm kernels, MoE decode-stream equivalence."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
@@ -104,8 +103,6 @@ def test_moe_decode_stream_matches_gather(mesh8):
 
 def test_long_context_window_cache_sizes():
     """gemma3 long_500k: local layers allocate window-sized ring caches."""
-    from repro.launch import specs as S
-
     cfg = get_config("gemma3-27b")
     mesh = make_mesh((1, 2, 4), ("pod", "data", "model"))
     pc = ParallelContext(mesh=mesh)

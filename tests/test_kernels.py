@@ -53,12 +53,12 @@ def test_grouped_matmul_dynamic_mapping(dtype):
 
 @pytest.mark.parametrize("chunk", [16, 32, 64])
 def test_ssd_chunked_vs_sequential(chunk):
-    b, l, h, p, g, n = 2, 128, 4, 16, 2, 8
-    x = jax.random.normal(KEY, (b, l, h, p)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (b, l, h)))
+    b, sl, h, p, g, n = 2, 128, 4, 16, 2, 8
+    x = jax.random.normal(KEY, (b, sl, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (b, sl, h)))
     a_log = jax.random.normal(jax.random.PRNGKey(6), (h,)) * 0.5
-    bm = jax.random.normal(jax.random.PRNGKey(7), (b, l, g, n)) * 0.3
-    cm = jax.random.normal(jax.random.PRNGKey(8), (b, l, g, n)) * 0.3
+    bm = jax.random.normal(jax.random.PRNGKey(7), (b, sl, g, n)) * 0.3
+    cm = jax.random.normal(jax.random.PRNGKey(8), (b, sl, g, n)) * 0.3
     y = kernels.ssd_chunked(x, dt, a_log, bm, cm, chunk=chunk)
     r = ref.ssd_ref(x, dt, a_log, bm, cm)
     allclose(y, r, atol=1e-4, rtol=1e-3)
@@ -66,12 +66,12 @@ def test_ssd_chunked_vs_sequential(chunk):
 
 def test_ssd_chunked_state_continuation():
     """Final state from chunked == final state from sequential recurrence."""
-    b, l, h, p, g, n = 1, 64, 2, 8, 1, 4
-    x = jax.random.normal(KEY, (b, l, h, p)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (b, l, h)))
+    b, sl, h, p, g, n = 1, 64, 2, 8, 1, 4
+    x = jax.random.normal(KEY, (b, sl, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (b, sl, h)))
     a_log = jnp.zeros((h,))
-    bm = jax.random.normal(jax.random.PRNGKey(7), (b, l, g, n)) * 0.3
-    cm = jax.random.normal(jax.random.PRNGKey(8), (b, l, g, n)) * 0.3
+    bm = jax.random.normal(jax.random.PRNGKey(7), (b, sl, g, n)) * 0.3
+    cm = jax.random.normal(jax.random.PRNGKey(8), (b, sl, g, n)) * 0.3
     y1, h1 = kernels.ssd_chunked(x, dt, a_log, bm, cm, chunk=16,
                                  return_state=True)
     # continue for one decode step and compare against full-length chunked
@@ -82,7 +82,7 @@ def test_ssd_chunked_state_continuation():
         jnp.concatenate([cm, cm[:, :16]], 1), chunk=16)
     y2 = kernels.ssd_chunked(x[:, :16], dt[:, :16], a_log, bm[:, :16],
                              cm[:, :16], chunk=16, h_init=h1)
-    allclose(y2, y_full[:, l:], atol=1e-4, rtol=1e-3)
+    allclose(y2, y_full[:, sl:], atol=1e-4, rtol=1e-3)
 
 
 def test_ssd_intra_chunk_kernel():

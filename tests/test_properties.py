@@ -1,5 +1,4 @@
 """Hypothesis property tests on the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,7 +8,7 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.mapping import StaticTileMapping, build_moe_dynamic_mapping, cdiv
+from repro.core.mapping import StaticTileMapping, build_moe_dynamic_mapping
 from repro.core import schedules
 from repro.core.moe_overlap import _dispatch_tables, _capacity
 from repro.nn.layers import gqa_layout

@@ -1,13 +1,11 @@
 """Fault tolerance: checkpoint/restore, elastic remesh, restart loop, watchdog,
 data-pipeline exactly-once semantics."""
 import dataclasses
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.compat import make_mesh
@@ -133,8 +131,11 @@ def test_run_resilient_restarts_after_failures(tmp_path):
 def test_watchdog_flags_stragglers():
     wd = StepWatchdog(threshold=3.0, min_samples=3)
     for _ in range(5):
-        wd.start(); time.sleep(0.01); wd.stop()
-    wd.start(); time.sleep(0.2)
+        wd.start()
+        time.sleep(0.01)
+        wd.stop()
+    wd.start()
+    time.sleep(0.2)
     assert wd.stop() is True
     assert wd.stragglers == 1
 

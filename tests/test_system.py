@@ -1,9 +1,5 @@
 """End-to-end system behaviour: train -> checkpoint -> restore -> serve."""
-import dataclasses
-import os
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.train import train

@@ -7,7 +7,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticLM
-from repro.launch.specs import model_module
 from repro.models import lm
 from repro.nn.layers import gqa_layout, sync_kv_grad
 from repro.parallel.context import ParallelContext

@@ -1,0 +1,360 @@
+"""Autotuner subsystem: enumeration, cache contract, channel="auto" parity.
+
+The contract under test (ISSUE 3 acceptance):
+  * candidate enumeration is deterministic and honors
+    ``mapping.effective_channels`` divisibility;
+  * cache entries survive a save/load round-trip (memo AND disk);
+  * a mesh-fingerprint mismatch invalidates (re-tunes) instead of silently
+    reusing another mesh's winner;
+  * a fingerprint hit never re-measures;
+  * ``channel="auto"`` output is parity-equal to the explicit-``BlockChannel``
+    path for all four kinds on the 4-rank emulated mesh.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import tune
+from repro.compat import make_mesh, shard_map
+from repro.core import BlockChannel, compile_overlap, effective_channels
+from repro.core.moe_overlap import moe_router
+from repro.tune import cache as tune_cache
+from repro.tune import measure as tune_measure
+
+R = 4
+KEY = jax.random.PRNGKey(0)
+
+SIGS = {
+    "ag_matmul": (1, 16, 16, 12),
+    "matmul_rs": (1, R * 8, 8, 16),
+    "ag_attention": (1, 2, 1, 16, 8),
+    "ag_moe": (16, 8, 2, 2, 8),
+}
+
+TINY_SPACE = tune.Space(orders=("ring",), channel_counts=(1,), accum_dtypes=("float32",))
+
+MEASURE_KW = dict(ranker="measure", space=TINY_SPACE, repeats=1, warmup=0)
+
+
+@pytest.fixture(scope="module")
+def mesh4():
+    return make_mesh((R,), ("model",))
+
+
+@pytest.fixture(autouse=True)
+def isolated_cache(tmp_path, monkeypatch):
+    """Every test gets a fresh cache dir + empty process memo."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune-cache"))
+    tune_cache.clear_memo()
+    yield
+    tune_cache.clear_memo()
+
+
+# ---- candidate enumeration --------------------------------------------------
+
+
+def test_enumeration_deterministic():
+    a = tune.enumerate_candidates("ag_matmul", extent=32)
+    b = tune.enumerate_candidates("ag_matmul", extent=32)
+    assert a == b
+    assert len(a) == 18  # 3 orders x {1,2,4} x 2 dtypes, all feasible
+
+
+def test_enumeration_honors_effective_channels():
+    # extent 6: requested {1,2,4} -> effective {1,2,3} via the same
+    # largest-divisor rule the runtime plan layer applies
+    cands = tune.enumerate_candidates("ag_matmul", extent=6)
+    for c in cands:
+        assert 6 % c.num_channels == 0
+        assert c.num_channels in {effective_channels(6, req) for req in (1, 2, 4)}
+    # extent 5 (prime, < 2): every count clamps to 1 and duplicates collapse
+    clamped = tune.enumerate_candidates("ag_matmul", extent=5)
+    assert {c.num_channels for c in clamped} == {1}
+    assert len(clamped) == 6  # 3 orders x 2 dtypes, one channel point each
+
+
+def test_signature_canonicalization():
+    assert tune.signature("ag_matmul", [(2, 3, 16, 8), (8, 5)]) == (6, 16, 8, 5)
+    att = tune.signature("ag_attention", [(1, 4, 16, 8), (1, 2, 16, 8)])
+    assert att == (1, 4, 2, 16, 8)
+    sig = tune.signature("ag_moe", [(16, 8), (16, 2), (16, 2), (4, 8, 32), (4, 16, 8)])
+    assert sig == (16, 8, 2, 4, 16)
+
+
+# ---- cache contract ---------------------------------------------------------
+
+
+def test_cache_round_trip(mesh4):
+    first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert not first.cache_hit and first.considered == 18
+
+    memo = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert memo.cache_hit and memo.candidate == first.candidate
+
+    tune_cache.clear_memo()  # force the JSON read
+    disk = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert disk.cache_hit and disk.candidate == first.candidate
+    assert disk.ranker == first.ranker
+
+    files = os.listdir(tune_cache.cache_dir())
+    assert len(files) == 1 and files[0].endswith(".json")
+    with open(os.path.join(tune_cache.cache_dir(), files[0])) as fh:
+        payload = json.load(fh)
+    assert payload["fingerprint"] == first.fingerprint
+    assert len(payload["entries"]) == 1
+
+
+def test_fingerprint_mismatch_invalidates(mesh4):
+    first = tune.autotune("matmul_rs", signature=SIGS["matmul_rs"], mesh=mesh4)
+    assert not first.cache_hit
+
+    # same file name, tampered fingerprint payload: the stored identity no
+    # longer matches the live mesh -> whole file must be ignored (re-tune),
+    # never silently reused
+    digest = tune_cache.fingerprint_digest(first.fingerprint)
+    path = os.path.join(tune_cache.cache_dir(), digest + ".json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    payload["fingerprint"]["jax_version"] = "0.0.0-other-mesh"
+    with open(path, "w") as fh:
+        json.dump(payload, fh)
+
+    tune_cache.clear_memo()
+    redo = tune.autotune("matmul_rs", signature=SIGS["matmul_rs"], mesh=mesh4)
+    assert not redo.cache_hit  # invalidated -> re-tuned
+    assert redo.candidate == first.candidate  # same space, same winner
+
+    # and the re-tune heals the file back to the live fingerprint
+    with open(path) as fh:
+        assert json.load(fh)["fingerprint"] == first.fingerprint
+
+
+def test_cache_hit_never_remeasures(mesh4, monkeypatch):
+    first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
+    assert not first.cache_hit and first.ranker == "measure"
+
+    def boom(*a, **k):
+        raise AssertionError("cache hit must not re-measure")
+
+    monkeypatch.setattr(tune_measure, "measure_channel", boom)
+    tune_cache.clear_memo()  # disk hit, not memo hit
+    hit = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
+    assert hit.cache_hit and hit.candidate == first.candidate
+
+
+def test_explicit_measure_upgrades_model_entry(mesh4, monkeypatch):
+    # pre-warm flow: a model-ranked record must not satisfy an explicit
+    # measured request — it is re-ranked by measurement and overwritten
+    model = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, space=TINY_SPACE)
+    assert not model.cache_hit and model.ranker == "model"
+
+    calls = []
+
+    def fake_measure(kind, channel, mesh, sig, **kw):
+        calls.append(kind)
+        return 1.0
+
+    monkeypatch.setattr(tune_measure, "measure_channel", fake_measure)
+    up = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
+    assert not up.cache_hit and up.ranker == "measure" and calls
+
+    # the measured record now satisfies BOTH rankers without re-measuring
+    calls.clear()
+    hit_m = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
+    hit_a = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, space=TINY_SPACE)
+    assert hit_m.cache_hit and hit_a.cache_hit and not calls
+    assert hit_a.ranker == "measure"  # measured result is never clobbered
+
+
+def test_cache_dirs_are_isolated_in_process(mesh4, tmp_path):
+    # the process memo must not leak entries across cache_dir arguments
+    a = tune.autotune(
+        "ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, cache_dir=str(tmp_path / "a")
+    )
+    b = tune.autotune(
+        "ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, cache_dir=str(tmp_path / "b")
+    )
+    assert not a.cache_hit and not b.cache_hit  # distinct stores, no cross-hit
+    assert os.path.isdir(tmp_path / "a") and os.path.isdir(tmp_path / "b")
+
+
+def test_axis_and_world_are_part_of_entry_key():
+    # one multi-axis mesh fingerprint: a winner tuned along the 4-rank axis
+    # must not be reused for the 2-rank axis (different ring length)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    a = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh, axis="model")
+    b = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh, axis="data")
+    assert not a.cache_hit and not b.cache_hit  # no cross-axis reuse
+    assert a.fingerprint == b.fingerprint  # same file, distinct entries
+
+
+def test_store_merges_external_writes(mesh4):
+    # a concurrent process's entry written between our read and our write
+    # must survive our store (per-entry last-writer-wins, not per-file)
+    first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    digest = tune_cache.fingerprint_digest(first.fingerprint)
+    path = os.path.join(tune_cache.cache_dir(), digest + ".json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    payload["entries"]["external|entry"] = {"ranker": "measure", "score": 1.0}
+    with open(path, "w") as fh:
+        json.dump(payload, fh)
+
+    # our memo still holds the pre-external snapshot; a new store must merge
+    tune.autotune("matmul_rs", signature=SIGS["matmul_rs"], mesh=mesh4)
+    with open(path) as fh:
+        entries = json.load(fh)["entries"]
+    assert "external|entry" in entries  # not clobbered by the stale memo
+    assert len(entries) == 3
+
+
+def test_auto_keeps_unsupported_backend_loud():
+    # PR-2 contract: unsupported (kind, backend) raises at BUILD time — the
+    # auto path must not defer it into the first trace
+    with pytest.raises(NotImplementedError, match="copy engine"):
+        compile_overlap("ag_attention", "auto", backend="pallas")
+
+
+def test_space_is_part_of_entry_key(mesh4):
+    narrow = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, space=TINY_SPACE)
+    full = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert not full.cache_hit  # narrowed sweep must not shadow the full one
+    assert narrow.considered == 1 and full.considered == 18
+
+
+def test_base_channel_fields_inherited(mesh4):
+    pull = dataclasses.replace(BlockChannel(axis="model").comm, mode="pull")
+    base = BlockChannel(axis="model", comm=pull)
+    res = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, base=base)
+    assert res.channel.comm.mode == "pull"  # non-tuned field survives
+    assert res.channel.comm.order == res.candidate.order
+
+
+# ---- channel="auto" end-to-end ----------------------------------------------
+
+
+def _auto_and_explicit(kind, mesh4):
+    """(auto_fn, explicit_fn, baseline_fn, args): same specs, three lowerings."""
+    key = KEY
+    resolved = tune.resolve_channel(kind, sig=SIGS[kind], mesh=mesh4)
+
+    def sm(fn, in_specs, out_specs):
+        return jax.jit(shard_map(fn, mesh4, in_specs=in_specs, out_specs=out_specs))
+
+    if kind == "ag_matmul":
+        _, m_loc, k, n = SIGS[kind]
+        args = (
+            jax.random.normal(key, (R * m_loc, k)),
+            jax.random.normal(jax.random.PRNGKey(1), (k, n)),
+        )
+        specs = ((P("model", None), P(None, None)), P(None, None))
+
+        def build(ch, ov=True):
+            return sm(compile_overlap(kind, ch, overlapped=ov), *specs)
+    elif kind == "matmul_rs":
+        _, m, k_loc, n = SIGS[kind]
+        args = (
+            jax.random.normal(key, (m, R * k_loc)),
+            jax.random.normal(jax.random.PRNGKey(2), (R * k_loc, n)),
+        )
+        specs = ((P(None, "model"), P("model", None)), P("model", None))
+
+        def build(ch, ov=True):
+            return sm(compile_overlap(kind, ch, overlapped=ov), *specs)
+    elif kind == "ag_attention":
+        b, h, hkv, s_loc, d = SIGS[kind]
+        q = jax.random.normal(key, (b, h, R * s_loc, d))
+        kv = jax.random.normal(jax.random.PRNGKey(3), (b, hkv, R * s_loc, d))
+        args = (q, kv, kv)
+        specs = ((P(None, None, "model"),) * 3, P(None, None, "model"))
+
+        def build(ch, ov=True):
+            return sm(compile_overlap(kind, ch, overlapped=ov, causal=True), *specs)
+    else:  # ag_moe
+        m_loc, dm, top_k, e_loc, f = SIGS[kind]
+        e = e_loc * R
+        args = (
+            jax.random.normal(key, (R * m_loc, dm)) * 0.5,
+            jax.random.normal(jax.random.PRNGKey(5), (e, dm, 2 * f)) * 0.1,
+            jax.random.normal(jax.random.PRNGKey(6), (e, f, dm)) * 0.1,
+        )
+        wr = jax.random.normal(jax.random.PRNGKey(4), (dm, e))
+        specs = (
+            (P("model", None), P("model", None, None), P("model", None, None)),
+            P("model", None),
+        )
+
+        def build(ch, ov=True):
+            g = compile_overlap(kind, ch, overlapped=ov, capacity_factor=8.0)
+
+            def f_(xs, wgu, wdn):
+                ids, wts, _ = moe_router(xs, wr, num_experts=e, top_k=top_k)
+                return g(xs, ids, wts, wgu, wdn)
+
+            return sm(f_, *specs)
+
+    return build("auto"), build(resolved), build(resolved, False), args, resolved
+
+
+@pytest.mark.parametrize("kind", tune.TUNABLE_KINDS)
+def test_channel_auto_parity(kind, mesh4):
+    auto_fn, explicit_fn, baseline_fn, args, resolved = _auto_and_explicit(kind, mesh4)
+    got = np.asarray(auto_fn(*args), np.float32)
+    want = np.asarray(explicit_fn(*args), np.float32)
+    # auto resolves to exactly the explicit channel's lowering: bit-identical
+    np.testing.assert_array_equal(got, want)
+    # ... and correct vs the non-overlapping baseline, at the tolerance of
+    # the flow dtype the tuner picked (bf16 partials are genuinely lossy)
+    base = np.asarray(baseline_fn(*args), np.float32)
+    if resolved.comp.accum_dtype == "float32":
+        tol = dict(atol=2e-4, rtol=2e-3)
+    else:
+        tol = dict(atol=8e-2, rtol=3e-2)
+    np.testing.assert_allclose(got, base, **tol)
+
+
+def test_auto_resolves_without_mesh_inside_shard_map(mesh4):
+    # no mesh kwarg: world comes from axis_size inside the manual region and
+    # the fingerprint narrows to the collective axis
+    _, m_loc, k, n = SIGS["ag_matmul"]
+    x = jax.random.normal(KEY, (R * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    sm = shard_map(
+        compile_overlap("ag_matmul", "auto"),
+        mesh4,
+        in_specs=(P("model", None), P(None, None)),
+        out_specs=P(None, None),
+    )
+    fn = jax.jit(sm)
+    np.testing.assert_allclose(np.asarray(fn(x, w)), np.asarray(x @ w), atol=2e-4, rtol=2e-3)
+
+
+def test_parallel_context_tune_resolves(mesh4):
+    from repro.parallel.context import ParallelContext
+
+    pc = dataclasses.replace(ParallelContext(mesh=mesh4, axis="model", dp_axes=()), tune=True)
+    _, m_loc, k, n = SIGS["ag_matmul"]
+    x = jax.random.normal(KEY, (R * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    sm = pc.smap(lambda a, b: pc.ag_matmul(a, b), (P("model", None), P(None, None)), P(None, None))
+    fn = jax.jit(sm)
+    np.testing.assert_allclose(np.asarray(fn(x, w)), np.asarray(x @ w), atol=2e-4, rtol=2e-3)
+    # the resolution landed in the persistent cache
+    assert os.path.isdir(tune_cache.cache_dir())
+    assert len(os.listdir(tune_cache.cache_dir())) == 1
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError, match="not tunable"):
+        tune.enumerate_candidates("nope")
+    with pytest.raises(ValueError, match="mesh or an explicit world"):
+        tune.autotune("ag_matmul", signature=(1, 8, 8, 8))
+    with pytest.raises(ValueError, match="BlockChannel or 'auto'"):
+        compile_overlap("ag_matmul", "fastest")
+    with pytest.raises(ValueError, match="unknown ranker"):
+        tune.autotune("ag_matmul", signature=(1, 8, 8, 8), world=4, ranker="vibes")

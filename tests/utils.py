@@ -1,8 +1,6 @@
 """Shared test helpers."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.train import reduce_config  # re-export
@@ -15,5 +13,5 @@ def allclose(a, b, atol=2e-4, rtol=2e-3):
 
 
 def tree_finite(tree) -> bool:
-    return all(np.isfinite(np.asarray(l)).all()
-               for l in jax.tree_util.tree_leaves(tree))
+    return all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(tree))
