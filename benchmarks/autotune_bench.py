@@ -14,6 +14,14 @@ perf signal; ROADMAP), then asserts the full cache contract:
      the explicit default-``BlockChannel`` path (tolerance matched to the
      winner's flow dtype).
 
+The smoke additionally sweeps the JOINT (CommSpec x CompSpec) space per
+kind (ISSUE 4): every joint winner must stay parity-equal to the
+default-tile lowering, and at least one GEMM shape must resolve a compute
+tile that genuinely differs from the (128, 128, 128) default — the
+decoupled compute half is searchable, not decorative.  Joint winners land
+in ``BENCH_autotune.json`` under each kind's ``joint`` entry
+(``benchmarks/compare.py`` gates their candidate counts exactly).
+
 Any violation exits non-zero so CI fails loudly.
 """
 import argparse
@@ -25,6 +33,7 @@ import jax.numpy as jnp
 
 from repro import tune
 from repro.core import BlockChannel
+from repro.core.comp_tiles import DEFAULT_TILE
 from repro.tune import cache as tune_cache
 from repro.tune import cost as tune_cost
 from repro.tune.measure import build_case, time_fn
@@ -40,6 +49,15 @@ SMOKE_SHAPES = {
     "matmul_rs": (1, 64, 16, 32),  # (lead, m_glob, k_loc, n)
     "ag_attention": (1, 2, 1, 32, 16),  # (b, h, hkv, s_loc, d)
     "ag_moe": (32, 16, 2, 2, 16),  # (m_loc, d_model, top_k, e_loc, f)
+}
+
+# joint-space shapes: the GEMM kinds get extents large enough that explicit
+# MXU blocking can beat the default tile under the per-tile cost terms
+JOINT_SMOKE_SHAPES = {
+    "ag_matmul": (1, 256, 512, 256),
+    "matmul_rs": (1, 1024, 128, 512),
+    "ag_attention": (1, 2, 1, 32, 16),
+    "ag_moe": (32, 16, 2, 2, 16),
 }
 
 SWEEP_SHAPES = {
@@ -105,6 +123,43 @@ def smoke(out_path: str = "BENCH_autotune.json") -> int:
             failures.append(f"{kind}: {type(exc).__name__}: {exc}")
             entry["error"] = str(exc)
         results[kind] = entry
+
+    # ---- joint (CommSpec x CompSpec) sweep — ISSUE 4 acceptance ------------
+    non_default_tiles = 0
+    for kind, sig in JOINT_SMOKE_SHAPES.items():
+        entry = {"signature": list(sig)}
+        try:
+            res = tune.autotune(
+                kind,
+                signature=sig,
+                mesh=mesh,
+                ranker="model",
+                cache_dir=cache_dir,
+                space=tune.JOINT_SPACE,
+            )
+            err, ok, us = _check_winner(kind, res, mesh)
+            if not ok:
+                failures.append(f"{kind}: joint-winner parity error {err:.3e}")
+            if tuple(res.candidate.comp_tile) != DEFAULT_TILE:
+                non_default_tiles += 1
+            entry.update(
+                winner=res.candidate.label(),
+                comp_tile=list(res.candidate.comp_tile),
+                max_abs_err=err,
+                us=round(us, 1),
+                considered=res.considered,
+            )
+            row(f"autotune/joint/{kind}/{res.candidate.label()}", us)
+        except Exception as exc:  # loud: any tuner error fails CI
+            failures.append(f"joint/{kind}: {type(exc).__name__}: {exc}")
+            entry["error"] = str(exc)
+        results[kind]["joint"] = entry
+    if non_default_tiles == 0:
+        failures.append(
+            "joint sweep: no shape resolved a compute tile different from "
+            f"{DEFAULT_TILE} — the CompSpec half of the search is dead"
+        )
+
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2, sort_keys=True)
     print(f"wrote {out_path}: {len(results)} kinds, {len(failures)} failures")

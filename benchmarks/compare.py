@@ -1,0 +1,160 @@
+"""Gate BENCH_*.json artifacts against the last successful main-branch run.
+
+CI's ``bench-gate`` job downloads the previous successful main-branch BENCH
+artifact into one directory, this run's artifact into another, and calls:
+
+    python benchmarks/compare.py --baseline baseline/ --current current/
+
+Exit is non-zero on any regression, so the PR fails visibly instead of
+perf/coverage drift landing silently (the benches used to *emit* these files
+on every run and never read them back).
+
+Rules, applied to every ``BENCH_*.json`` present in the baseline:
+
+  * smoke timings (leaf keys named ``us``) — the current value may exceed
+    the baseline by at most ``--tolerance`` (default 20%).  An absolute
+    floor (``--floor-us``, default 200us) ignores micro-benchmark jitter;
+    speedups and derived ratios are never gated (they move with the
+    baseline term).  CI-runner noise above the tolerance is exactly what
+    the gate exists to surface — re-run the job if you believe it is noise.
+  * invariants — candidate counts (``considered``) compare EXACTLY: the
+    design space may not shrink or grow without the reviewer seeing it (an
+    intentional space change makes this gate red until it merges to main
+    and becomes the new baseline; say so in the PR).  Boolean health flags
+    (``cache_round_trip``, ``ok``) may not regress True -> False.
+  * coverage — an entry present in the baseline but missing from the
+    current run is a failure (a silently dropped design point); entries new
+    in the current run are reported as notices only.
+
+No baseline (first run on a fresh repo/fork, expired artifacts) passes with
+a loud notice — the gate arms itself on the next main-branch run.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, object]:
+    """Nested dicts -> {"a/b/c": leaf}; lists stay leaves (compared whole)."""
+    out: Dict[str, object] = {}
+    if isinstance(obj, dict):
+        for key, val in sorted(obj.items()):
+            out.update(flatten(val, f"{prefix}/{key}" if prefix else str(key)))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def load_bench_files(directory: str) -> Dict[str, Dict[str, object]]:
+    """{file name: flattened payload} for every BENCH_*.json under ``directory``."""
+    found = {}
+    for path in sorted(glob.glob(os.path.join(directory, "**", "BENCH_*.json"), recursive=True)):
+        try:
+            with open(path) as fh:
+                found[os.path.basename(path)] = flatten(json.load(fh))
+        except (OSError, ValueError) as exc:
+            print(f"::warning::unreadable bench artifact {path}: {exc}")
+    return found
+
+
+def compare_file(
+    name: str,
+    base: Dict[str, object],
+    cur: Dict[str, object],
+    *,
+    tolerance: float,
+    floor_us: float,
+) -> Tuple[list, list]:
+    """(failures, notices) from gating ``cur`` against ``base`` for one file."""
+    failures, notices = [], []
+    for key, bval in base.items():
+        tag = f"{name}:{key}"
+        if key not in cur:
+            failures.append(f"{tag}: present in baseline but missing from this run")
+            continue
+        cval = cur[key]
+        leaf = key.rsplit("/", 1)[-1]
+        if leaf == "us":
+            try:
+                b, c = float(bval), float(cval)
+            except (TypeError, ValueError):
+                continue
+            if c > b * (1.0 + tolerance) and c - b > floor_us:
+                failures.append(
+                    f"{tag}: timing regression {b:.0f}us -> {c:.0f}us "
+                    f"(+{100.0 * (c - b) / max(b, 1e-9):.0f}%, tolerance "
+                    f"{100.0 * tolerance:.0f}%)"
+                )
+        elif leaf == "considered":
+            if cval != bval:
+                failures.append(
+                    f"{tag}: candidate count changed {bval} -> {cval} (design "
+                    "space drift; if intentional, say so in the PR — this "
+                    "gate stays red until the change is the main baseline)"
+                )
+        elif leaf in ("cache_round_trip", "ok"):
+            if bool(bval) and not bool(cval):
+                failures.append(f"{tag}: health flag regressed True -> False")
+    for key in cur:
+        if key not in base:
+            notices.append(f"{name}:{key}: new in this run (not in baseline)")
+    return failures, notices
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="dir with the main-branch BENCH_*.json")
+    ap.add_argument("--current", required=True, help="dir with this run's BENCH_*.json")
+    ap.add_argument(
+        "--tolerance", type=float, default=0.2, help="relative slowdown allowed on us timings"
+    )
+    ap.add_argument(
+        "--floor-us", type=float, default=200.0, help="absolute us change ignored as jitter"
+    )
+    args = ap.parse_args()
+
+    current = load_bench_files(args.current)
+    if not current:
+        print(f"::error::no BENCH_*.json under {args.current} — the bench jobs did not run?")
+        return 1
+    baseline = load_bench_files(args.baseline) if os.path.isdir(args.baseline) else {}
+    if not baseline:
+        print(
+            "::notice::no baseline BENCH artifacts found (first run on this "
+            "branch history?) — gate passes; the next successful main run "
+            "becomes the baseline"
+        )
+        return 0
+
+    failures, notices = [], []
+    for name, base in sorted(baseline.items()):
+        if name not in current:
+            failures.append(f"{name}: baseline artifact has no counterpart in this run")
+            continue
+        f_, n_ = compare_file(
+            name, base, current[name], tolerance=args.tolerance, floor_us=args.floor_us
+        )
+        failures.extend(f_)
+        notices.extend(n_)
+    for name in current:
+        if name not in baseline:
+            notices.append(f"{name}: new bench artifact (not in baseline)")
+
+    for n_ in notices:
+        print(f"::notice::{n_}")
+    for f_ in failures:
+        print(f"::error::{f_}")
+    print(
+        f"compared {len(baseline)} baseline file(s) against {len(current)}: "
+        f"{len(failures)} regression(s), {len(notices)} notice(s)"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

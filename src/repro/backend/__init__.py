@@ -40,8 +40,16 @@ Surface
                            logical rank), semaphore_signal, semaphore_wait
   target control:          target, is_emulated, resolve_interpret,
                            default_interpret, describe
+  compute-hardware probes: mxu_dim, vmem_budget_bytes, sublane_multiple,
+                           lane_multiple (tile-lattice pruning, repro.tune)
 """
 from repro.backend.features import describe
+from repro.backend.hw import (
+    mxu_dim,
+    vmem_budget_bytes,
+    sublane_multiple,
+    lane_multiple,
+)
 from repro.backend.target import (
     target,
     is_emulated,
@@ -67,6 +75,10 @@ from repro.backend.lowering import (
 
 __all__ = [
     "describe",
+    "mxu_dim",
+    "vmem_budget_bytes",
+    "sublane_multiple",
+    "lane_multiple",
     "target",
     "is_emulated",
     "resolve_interpret",

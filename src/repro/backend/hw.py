@@ -1,0 +1,87 @@
+"""Compute-hardware probes for tile-size tuning (MXU shape, VMEM budget).
+
+The CompSpec half of the design space — the (tm, tn, tk) consumer-kernel
+tile — is only searchable if the tuner knows what the compute unit actually
+looks like: how wide the systolic array is (tiles below it waste MXU
+cycles), what the sublane/lane packing multiples are per dtype (misaligned
+tiles pad), and how much VMEM a tile's working set may occupy (oversized
+tiles spill or refuse to compile).  This module is the single place those
+constants live, probed per device kind with environment overrides, so
+``repro.tune.candidates`` prunes its tile lattice against the same numbers
+the kernels will face.
+
+Probing policy matches the rest of ``repro.backend``: inspect the live
+device (``device_kind``), fall back to conservative defaults on unknown or
+emulated hosts, never hard-code a version check.  ``REPRO_VMEM_BYTES``
+overrides the VMEM budget (tests use it to exercise the pruning path).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MXU_DIM",
+    "LANE_MULTIPLE",
+    "device_kind",
+    "mxu_dim",
+    "vmem_budget_bytes",
+    "sublane_multiple",
+    "lane_multiple",
+]
+
+_ENV_VMEM = "REPRO_VMEM_BYTES"
+
+# the MXU systolic array is 128x128 on every shipped TPU generation; the
+# vector lane width (last-dim packing multiple) is likewise 128
+MXU_DIM = 128
+LANE_MULTIPLE = 128
+
+# VMEM per core by device kind (bytes).  ~16 MiB on v4/v5 parts, 32 MiB on
+# v6e; unknown kinds (CPU hosts running the emulated target) get the
+# conservative 16 MiB so tiles tuned on an emulated host stay valid on TPU.
+_VMEM_BY_KIND = {
+    "TPU v4": 16 * 2**20,
+    "TPU v5 lite": 16 * 2**20,
+    "TPU v5e": 16 * 2**20,
+    "TPU v5p": 16 * 2**20,
+    "TPU v6e": 32 * 2**20,
+    "TPU v6 lite": 32 * 2**20,
+}
+_DEFAULT_VMEM = 16 * 2**20
+
+
+def device_kind() -> str:
+    """Kind string of the first visible device ("cpu" on emulated hosts)."""
+    dev = jax.devices()[0]
+    return str(getattr(dev, "device_kind", dev.platform))
+
+
+def mxu_dim() -> int:
+    """Edge length of the MXU systolic array (tiles below it underutilize)."""
+    return MXU_DIM
+
+
+def vmem_budget_bytes() -> int:
+    """VMEM available to one core's tile working set (env-overridable)."""
+    env = os.environ.get(_ENV_VMEM)
+    if env:
+        return max(1, int(env))
+    return _VMEM_BY_KIND.get(device_kind(), _DEFAULT_VMEM)
+
+
+def sublane_multiple(dtype) -> int:
+    """Second-to-last-dim packing multiple for ``dtype`` (8 sublanes x 32b).
+
+    f32 packs 8 rows per tile register, bf16/f16 16, int8/fp8 32 — the
+    standard (8 * 4 / itemsize) rule.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    return max(8, (8 * 4) // max(1, itemsize))
+
+
+def lane_multiple() -> int:
+    """Last-dim packing multiple (always the 128-wide vector lane)."""
+    return LANE_MULTIPLE

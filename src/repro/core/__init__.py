@@ -1,18 +1,33 @@
 """TileLink core: tile-centric primitives, mappings, schedules, plans, overlap compiler."""
 from repro.core.channels import BlockChannel, CommSpec, CompSpec
 from repro.core.mapping import (
-    StaticTileMapping, DynamicTileMapping, build_moe_dynamic_mapping,
+    StaticTileMapping,
+    DynamicTileMapping,
+    build_moe_dynamic_mapping,
     effective_channels,
 )
 from repro.core.plan import TilePlan, ChannelSchedule, build_plan, plan_cache_info
 from repro.core.compiler import compile_overlap, KINDS, unsupported_error
-from repro.core import overlap, schedules, moe_overlap, plan
+from repro.core import comp_tiles, overlap, schedules, moe_overlap, plan
 
 __all__ = [
-    "BlockChannel", "CommSpec", "CompSpec",
-    "StaticTileMapping", "DynamicTileMapping", "build_moe_dynamic_mapping",
+    "BlockChannel",
+    "CommSpec",
+    "CompSpec",
+    "StaticTileMapping",
+    "DynamicTileMapping",
+    "build_moe_dynamic_mapping",
     "effective_channels",
-    "TilePlan", "ChannelSchedule", "build_plan", "plan_cache_info",
-    "compile_overlap", "KINDS", "unsupported_error",
-    "overlap", "schedules", "moe_overlap", "plan",
+    "TilePlan",
+    "ChannelSchedule",
+    "build_plan",
+    "plan_cache_info",
+    "compile_overlap",
+    "KINDS",
+    "unsupported_error",
+    "comp_tiles",
+    "overlap",
+    "schedules",
+    "moe_overlap",
+    "plan",
 ]

@@ -18,6 +18,8 @@ all workload kinds:
   ``comp.accum_dtype``is the flow dtype: what partial reductions accumulate
                       in and travel the wire in (fp32 = reduction-exact,
                       bf16 = half the ring bytes);
+  ``comp.tile``       is the (tm, tn, tk) consumer compute tile — tunable
+                      independently of the comm half (``core/comp_tiles``);
   ``comm.resource``   / ``comm.mode`` select the transfer engine and
                       push/pull realization (paper Fig. 2c, §3.2.2).
 
@@ -31,8 +33,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["BlockChannel", "CommSpec", "CompSpec",
-           "ORDERS", "RESOURCES", "MODES"]
+__all__ = ["BlockChannel", "CommSpec", "CompSpec", "ORDERS", "RESOURCES", "MODES"]
 
 ORDERS = ("ring", "bidir_ring", "all2all")
 RESOURCES = ("dma", "core")
@@ -41,8 +42,7 @@ MODES = ("push", "pull")
 
 def _check(value, allowed, what: str):
     if value not in allowed:
-        raise ValueError(
-            f"unsupported {what} {value!r}; supported: {allowed}")
+        raise ValueError(f"unsupported {what} {value!r}; supported: {allowed}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,7 +76,10 @@ class CompSpec:
 
     tile:        (tm, tn, tk) MXU tile for the consumer compute kernel — chosen
                  independently from CommSpec.tile (the core decoupling of the
-                 paper).
+                 paper).  The default (128, 128, 128) is a sentinel meaning
+                 "backend-chosen blocking"; a non-default tile is honored
+                 literally by both backends (clamped to divisors of the
+                 operand extents — see core/comp_tiles).
     accum_dtype: dtype partial reductions accumulate in AND travel the wire in
                  (the flow dtype): "float32" is reduction-exact, "bfloat16"
                  halves the flowing bytes (§Perf optimization).
@@ -87,17 +90,15 @@ class CompSpec:
 
     def __post_init__(self):
         if len(self.tile) != 3 or any(t < 1 for t in self.tile):
-            raise ValueError(
-                f"comp tile must be 3 positive ints (tm, tn, tk), got {self.tile}")
+            raise ValueError(f"comp tile must be 3 positive ints (tm, tn, tk), got {self.tile}")
         try:
             dt = jnp.dtype(self.accum_dtype)
         except TypeError as e:
-            raise ValueError(
-                f"unsupported accum_dtype {self.accum_dtype!r}: {e}") from None
+            raise ValueError(f"unsupported accum_dtype {self.accum_dtype!r}: {e}") from None
         if not jnp.issubdtype(dt, jnp.floating):
             raise ValueError(
-                f"accum_dtype must be floating (flow/reduction dtype), "
-                f"got {self.accum_dtype!r}")
+                f"accum_dtype must be floating (flow/reduction dtype), got {self.accum_dtype!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,11 +121,9 @@ class BlockChannel:
 
     def __post_init__(self):
         if not self.axis or not isinstance(self.axis, str):
-            raise ValueError(f"axis must be a non-empty mesh axis name, "
-                             f"got {self.axis!r}")
+            raise ValueError(f"axis must be a non-empty mesh axis name, got {self.axis!r}")
         if self.num_channels < 1:
-            raise ValueError(
-                f"num_channels must be >= 1, got {self.num_channels}")
+            raise ValueError(f"num_channels must be >= 1, got {self.num_channels}")
         if not isinstance(self.comm, CommSpec):
             raise TypeError(f"comm must be a CommSpec, got {type(self.comm)}")
         if not isinstance(self.comp, CompSpec):

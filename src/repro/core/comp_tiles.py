@@ -1,0 +1,128 @@
+"""Compute-tile utilities — the CompSpec (tm, tn, tk) half, realized.
+
+``CompSpec.tile`` is the consumer-kernel MXU tile, chosen independently from
+the communication tile (the core decoupling of the paper).  This module is
+the one place its semantics live, shared by every executor:
+
+  * :func:`largest_divisor` / :func:`resolve_tile` clamp a requested tile
+    against the operand extents it must divide — the same largest-divisor
+    rule ``mapping.effective_channels`` applies to the comm half, so a tuned
+    tile degrades predictably instead of crashing on an awkward shape;
+  * :func:`blocked_dot` computes a (possibly batched) GEMM in (tm, tn, tk)
+    blocks accumulated in the flow dtype — the XLA-path compute callbacks
+    (``core/overlap.py``) and the fused Pallas kernels
+    (``kernels/ag_gemm.py``, ``gemm_rs.py``) all honor a non-default tile
+    through it, so a tuner winner behaves identically on both backends;
+  * :func:`tile_footprint_bytes` is the per-tile VMEM working set the tuner
+    prunes its lattice against (``repro.tune.candidates``).
+
+``DEFAULT_TILE`` (128, 128, 128) means "let the backend choose": the XLA
+path hands the whole per-step GEMM to XLA's own tiler, the Pallas kernels
+use their native blocking.  Only a non-default tile forces explicit blocks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "DEFAULT_TILE",
+    "largest_divisor",
+    "resolve_tile",
+    "blocked_dot",
+    "tile_footprint_bytes",
+]
+
+DEFAULT_TILE = (128, 128, 128)
+
+
+def largest_divisor(extent: int, cap: int) -> int:
+    """Largest divisor of ``extent`` that is <= ``cap`` (>= 1)."""
+    extent = max(1, int(extent))
+    c = min(max(1, int(cap)), extent)
+    while extent % c:
+        c -= 1
+    return c
+
+
+def resolve_tile(tile: Tuple[int, int, int], m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """Clamp a requested (tm, tn, tk) to divisors of the GEMM dims (m, n, k)."""
+    tm, tn, tk = tile
+    return (largest_divisor(m, tm), largest_divisor(n, tn), largest_divisor(k, tk))
+
+
+def blocked_dot(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    tile: Tuple[int, int, int],
+    accum=jnp.float32,
+    out_dtype: Optional[jnp.dtype] = None,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """``a @ b`` computed in (tm, tn, tk) blocks, accumulated in ``accum``.
+
+    ``a``: [..., m, k] (leading batch dims allowed), ``b``: [k, n].  The tile
+    is clamped through :func:`resolve_tile` first; a tile covering the whole
+    problem takes the single-dot fast path (bit-identical to the untiled
+    contraction).
+
+    Two lowerings of the same block decomposition:
+
+      * ``unroll=False`` (default, the XLA executor path): operands reshape
+        to explicit [m/tm, tm, ...] block form and contract in ONE
+        ``dot_general`` — O(1) emitted ops regardless of block count, so a
+        tuned tile on a large shape cannot blow up trace/compile time;
+      * ``unroll=True`` (the Pallas kernel bodies): explicit per-block 2-D
+        dots accumulated in registers — the Mosaic-friendly form (4-D
+        multi-contraction dots do not lower there), where the block count
+        is already bounded by the kernel's per-chunk operand sizes.
+    """
+    m, k = a.shape[-2], a.shape[-1]
+    n = b.shape[-1]
+    accum = jnp.dtype(accum)
+    tm, tn, tk = resolve_tile(tile, m, n, k)
+
+    def dot(x, y):
+        dims = (((x.ndim - 1,), (0,)), ((), ()))
+        return lax.dot_general(x, y, dims, preferred_element_type=accum)
+
+    if (tm, tn, tk) == (m, n, k):
+        out = dot(a, b)
+        return out.astype(out_dtype) if out_dtype is not None else out
+
+    if not unroll:
+        lead = a.shape[:-2]
+        a4 = a.reshape(lead + (m // tm, tm, k // tk, tk))
+        b4 = b.reshape(k // tk, tk, n // tn, tn)
+        nd = a4.ndim
+        # contract (k-block, tk) jointly: the blocked layout stays explicit,
+        # the emitted program stays a single op
+        dims = (((nd - 2, nd - 1), (0, 1)), ((), ()))
+        out = lax.dot_general(a4, b4, dims, preferred_element_type=accum)
+        out = out.reshape(lead + (m, n))  # [..., m/tm, tm, n/tn, tn] -> [..., m, n]
+        return out.astype(out_dtype) if out_dtype is not None else out
+
+    rows = []
+    for mi in range(m // tm):
+        a_mi = a[..., mi * tm : (mi + 1) * tm, :]
+        cols = []
+        for ni in range(n // tn):
+            b_ni = b[:, ni * tn : (ni + 1) * tn]
+            blk = dot(a_mi[..., 0:tk], b_ni[0:tk, :])
+            for ki in range(1, k // tk):
+                blk = blk + dot(
+                    a_mi[..., ki * tk : (ki + 1) * tk],
+                    b_ni[ki * tk : (ki + 1) * tk, :],
+                )
+            cols.append(blk)
+        rows.append(cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=-1))
+    out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=-2)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def tile_footprint_bytes(tile: Tuple[int, int, int], in_bytes: int, accum_bytes: int) -> int:
+    """Per-tile VMEM working set: A and B operand tiles + the accumulator."""
+    tm, tn, tk = tile
+    return (tm * tk + tk * tn) * in_bytes + tm * tn * accum_bytes

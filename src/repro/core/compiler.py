@@ -25,14 +25,23 @@ real (if small) compiler pipeline:
                        via the ``repro.backend`` emulated target.
 
 Because both backends execute the same plan, the whole ``CommSpec x CompSpec``
-space (order x num_channels x accum_dtype) is sweepable uniformly across every
-kind — see ``benchmarks/kernel_bench.py --smoke``.
+space (order x num_channels x accum_dtype x compute tile) is sweepable
+uniformly across every kind — see ``benchmarks/kernel_bench.py --smoke``.
 
 ``channel="auto"`` autotunes instead of hard-coding a design point: the
 returned callable resolves the best ``BlockChannel`` for its actual operand
 shapes through ``repro.tune`` (persistent per-mesh cache; analytic cost model
 at trace time, measured winners wherever the cache was pre-warmed — see
 ``repro/tune/__init__.py``), then lowers through the normal pipeline above.
+
+``comp`` selects the *computation* half independently (the paper's decoupled
+CompSpec): ``comp="auto"`` adds the pruned (tm, tn, tk) consumer-tile
+lattice to the search — with ``channel="auto"`` the two halves are searched
+jointly; with an explicit channel only the compute half is tuned, the comm
+half held fixed.  An explicit ``CompSpec`` overrides the whole compute half
+(tile AND flow dtype) without tuning; a bare (tm, tn, tk) tuple overrides
+the tile ONLY, leaving the flow dtype to the channel (or, with
+``channel="auto"``, to the comm search).
 
 ``interpret=None`` defers to ``repro.backend.default_interpret()``: interpret
 on CPU-only hosts, Mosaic on real TPUs.
@@ -41,14 +50,14 @@ The returned callable must be invoked inside shard_map over ``channel.axis``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, Optional, Union
+from typing import Callable, Optional, Tuple, Union
 
-from repro.core.channels import BlockChannel
+from repro.core.channels import BlockChannel, CompSpec
 from repro.core import overlap as _xla
 
-__all__ = ["compile_overlap", "KINDS", "BACKENDS", "PALLAS_KINDS",
-           "unsupported_error"]
+__all__ = ["compile_overlap", "KINDS", "BACKENDS", "PALLAS_KINDS", "unsupported_error"]
 
 KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
 BACKENDS = ("xla", "pallas")
@@ -68,10 +77,32 @@ def unsupported_error(kind: str, backend: str) -> NotImplementedError:
     )
 
 
+def _normalize_comp(comp) -> Union[None, str, CompSpec, Tuple[int, int, int]]:
+    """None | "auto" | CompSpec | (tm, tn, tk).
+
+    A bare tuple stays a tuple: it pins the TILE only, leaving the channel's
+    (or the search's) flow dtype untouched; a full CompSpec pins the whole
+    compute half (tile AND accum/flow dtype).
+    """
+    if comp is None or comp == "auto":
+        return comp
+    if isinstance(comp, CompSpec):
+        return comp
+    if isinstance(comp, (tuple, list)) and len(comp) == 3:
+        tile = tuple(int(t) for t in comp)
+        if any(t < 1 for t in tile):
+            raise ValueError(f"comp tile must be 3 positive ints, got {comp!r}")
+        return tile
+    raise ValueError(
+        f"comp must be None, 'auto', a CompSpec, or a (tm, tn, tk) tuple, got {comp!r}"
+    )
+
+
 def compile_overlap(
     kind: str,
     channel: Union[BlockChannel, str],
     *,
+    comp=None,
     backend: str = "xla",
     overlapped: bool = True,
     interpret: Optional[bool] = None,
@@ -83,26 +114,65 @@ def compile_overlap(
     """Compile a tile program. See module docstring.
 
     ``channel`` is either an explicit :class:`BlockChannel` or the string
-    ``"auto"``; ``axis``/``mesh``/``tune_ranker`` only apply to ``"auto"``
-    (a mesh widens the tuning-cache fingerprint to the full topology).
+    ``"auto"``; ``comp`` is None (use the channel's CompSpec), ``"auto"``
+    (tune the compute half), or an explicit CompSpec / (tm, tn, tk) tuple;
+    ``axis``/``mesh``/``tune_ranker`` only apply to auto resolution (a mesh
+    widens the tuning-cache fingerprint to the full topology).
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if backend == "pallas" and kind not in PALLAS_KINDS:
+        # keep the unsupported-(kind, backend) contract loud at BUILD time —
+        # no resolution mode (channel="auto", comp="auto") may defer it into
+        # the first trace
+        raise unsupported_error(kind, backend)
+    comp = _normalize_comp(comp)
     if isinstance(channel, str):
         if channel != "auto":
-            raise ValueError(
-                f"channel must be a BlockChannel or 'auto', got {channel!r}")
-        if backend == "pallas" and kind not in PALLAS_KINDS:
-            # keep the unsupported-(kind, backend) contract loud at BUILD
-            # time — auto resolution must not defer it into the first trace
-            raise unsupported_error(kind, backend)
-        return _auto_overlap(kind, backend=backend, overlapped=overlapped,
-                             interpret=interpret, axis=axis, mesh=mesh,
-                             tune_ranker=tune_ranker, **kw)
+            raise ValueError(f"channel must be a BlockChannel or 'auto', got {channel!r}")
+        base = None
+        if isinstance(comp, CompSpec):
+            # pinned compute half, tuned comm half: the explicit CompSpec
+            # fixes the tile AND the flow dtype (its accum_dtype); every
+            # candidate inherits it through the base channel and the
+            # narrowed space built in _auto_overlap
+            base = BlockChannel(axis=axis, comp=comp)
+        return _auto_overlap(
+            kind,
+            backend=backend,
+            overlapped=overlapped,
+            interpret=interpret,
+            axis=axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            comp=comp,
+            base=base,
+            **kw,
+        )
     if not isinstance(channel, BlockChannel):
         raise TypeError(f"channel must be a BlockChannel, got {type(channel)}")
+    if isinstance(comp, CompSpec):
+        channel = channel.with_(comp=comp)
+    elif isinstance(comp, tuple):
+        # tile-only override: the channel's flow/accum dtype is untouched
+        channel = channel.with_(comp=dataclasses.replace(channel.comp, tile=comp))
+    elif comp == "auto":
+        # explicit comm half, tuned compute half: resolve per call shapes
+        # with the channel's own comm point as the (only) comm candidate
+        return _auto_overlap(
+            kind,
+            backend=backend,
+            overlapped=overlapped,
+            interpret=interpret,
+            axis=channel.axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            comp="auto",
+            base=channel,
+            **kw,
+        )
 
     if backend == "xla":
         if kind == "ag_moe":
@@ -140,30 +210,72 @@ def compile_overlap(
     return functools.partial(table[kind], channel=channel, interpret=interpret, **kw)
 
 
-def _auto_overlap(kind: str, *, backend: str, overlapped: bool,
-                  interpret: Optional[bool], axis: str, mesh,
-                  tune_ranker: Optional[str], **kw) -> Callable:
-    """``channel="auto"``: defer design-point choice to the operand shapes.
+def _auto_overlap(
+    kind: str,
+    *,
+    backend: str,
+    overlapped: bool,
+    interpret: Optional[bool],
+    axis: str,
+    mesh,
+    tune_ranker: Optional[str],
+    comp=None,
+    base=None,
+    **kw,
+) -> Callable:
+    """Auto resolution: defer design-point choice to the operand shapes.
 
     Shapes are only known when the returned callable runs (inside shard_map,
     like every compiled op), so resolution happens there: a pure host-side
     cache lookup / cost-model ranking via ``repro.tune.resolve_channel`` —
     trace-safe — then the normal ``compile_overlap`` lowering.  The tuning
     cache memo makes repeated layer calls resolve once per (kind, shape).
+
+    ``comp="auto"`` widens the search to the compute-tile lattice: jointly
+    with the comm half when ``base`` is None, or comp-only (the base
+    channel's comm point held fixed) when ``base`` is an explicit channel.
     """
+
     def auto_fn(*args, **call_kw):
         import jax.numpy as jnp
 
         from repro import backend as _backend
+        from repro.tune import COMP_TILE_LATTICE, DEFAULT_SPACE, JOINT_SPACE, Space
         from repro.tune import resolve_channel
 
-        world = int(mesh.shape[axis]) if mesh is not None \
-            else int(_backend.axis_size(axis))
+        world = int(mesh.shape[axis]) if mesh is not None else int(_backend.axis_size(axis))
+        if isinstance(comp, CompSpec):
+            # pinned compute half (tile + flow dtype), tuned comm half: the
+            # single-tile space is honored (clamped, never pruned) and every
+            # candidate inherits the rest of the CompSpec through ``base``
+            space = Space(accum_dtypes=(comp.accum_dtype,), comp_tiles=(tuple(comp.tile),))
+        elif isinstance(comp, tuple):
+            # pinned tile only: the flow dtype stays part of the comm search
+            space = Space(comp_tiles=(comp,))
+        elif comp == "auto" and base is not None:
+            space = Space(
+                orders=(base.comm.order,),
+                channel_counts=(base.num_channels,),
+                accum_dtypes=(base.comp.accum_dtype,),
+                comp_tiles=COMP_TILE_LATTICE,
+            )
+        elif comp == "auto":
+            space = JOINT_SPACE
+        else:
+            space = DEFAULT_SPACE
         channel = resolve_channel(
-            kind, shapes=[jnp.shape(a) for a in args], mesh=mesh, axis=axis,
-            world=world, ranker=tune_ranker)
-        fn = compile_overlap(kind, channel, backend=backend,
-                             overlapped=overlapped, interpret=interpret, **kw)
+            kind,
+            shapes=[jnp.shape(a) for a in args],
+            mesh=mesh,
+            axis=axis,
+            world=world,
+            base=base,
+            ranker=tune_ranker,
+            space=space,
+        )
+        fn = compile_overlap(
+            kind, channel, backend=backend, overlapped=overlapped, interpret=interpret, **kw
+        )
         return fn(*args, **call_kw)
 
     return auto_fn

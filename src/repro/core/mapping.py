@@ -34,8 +34,9 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["StaticTileMapping", "DynamicTileMapping", "cdiv",
-           "effective_channels"]
+from repro.core.comp_tiles import largest_divisor
+
+__all__ = ["StaticTileMapping", "DynamicTileMapping", "cdiv", "effective_channels"]
 
 
 def cdiv(a: int, b: int) -> int:
@@ -43,23 +44,36 @@ def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def effective_channels(extent: int, requested: int, *, kind: str = "") -> int:
+# fallbacks already reported, keyed (kind, extent, requested) — autotune
+# sweeps probe the same infeasible counts hundreds of times per trace, and
+# one line per unique clamp is signal where one line per call is spam
+_WARNED_CLAMPS = set()
+
+
+def effective_channels(extent: int, requested: int, *, kind: str = "", warn: bool = True) -> int:
     """f_C feasibility: largest channel count <= ``requested`` dividing ``extent``.
 
     The affine channel mapping needs C | extent (each channel owns an equal
     sub-chunk).  When the requested C does not divide, fall back to the largest
-    divisor <= C — never silently to 1 — and warn once per call site/shape so
-    sweeps notice the clamp.
+    divisor <= C — never silently to 1 — and warn once per unique
+    (kind, extent, requested) clamp so sweeps notice without drowning in
+    repeats.  ``warn=False`` is for feasibility *probes* (the candidate
+    enumerator) that expect clamping and must not consume the one-shot
+    warning a later runtime fallback should still emit.
     """
     req = max(1, int(requested))
-    c = min(req, max(1, int(extent)))
-    while extent % c:
-        c -= 1
-    if c != req:
-        warnings.warn(
-            f"{kind or 'tile plan'}: num_channels={requested} does not divide "
-            f"extent {extent}; using largest divisor {c}",
-            stacklevel=2)
+    # ONE clamping rule for both halves of the design space: the comm half
+    # here, the compute half in comp_tiles.resolve_tile
+    c = largest_divisor(extent, req)
+    if c != req and warn:
+        key = (kind, int(extent), req)
+        if key not in _WARNED_CLAMPS:
+            _WARNED_CLAMPS.add(key)
+            warnings.warn(
+                f"{kind or 'tile plan'}: num_channels={requested} does not divide "
+                f"extent {extent}; using largest divisor {c}",
+                stacklevel=2,
+            )
     return c
 
 
@@ -137,9 +151,7 @@ class StaticTileMapping:
         if self.dim % self.tile:
             raise ValueError(f"tile {self.tile} must divide dim {self.dim}")
         if self.per_rank % self.tile:
-            raise ValueError(
-                f"tile {self.tile} must divide per-rank extent {self.per_rank}"
-            )
+            raise ValueError(f"tile {self.tile} must divide per-rank extent {self.per_rank}")
         if self.tiles_per_rank % self.num_channels:
             # the paper's affine f_C assumes channels evenly tile a rank's tiles
             raise ValueError(
@@ -157,10 +169,10 @@ class DynamicTileMapping:
     (a gather at ``tile_id``) is fixed at trace time — exactly the paper's design.
     """
 
-    f_S_low: jnp.ndarray   # [num_tiles] int32 — inclusive low of shape range
+    f_S_low: jnp.ndarray  # [num_tiles] int32 — inclusive low of shape range
     f_S_high: jnp.ndarray  # [num_tiles] int32 — exclusive high
-    f_R: jnp.ndarray       # [num_tiles] int32 — owning rank
-    f_C: jnp.ndarray       # [num_tiles] int32 — channel
+    f_R: jnp.ndarray  # [num_tiles] int32 — owning rank
+    f_C: jnp.ndarray  # [num_tiles] int32 — channel
 
     def shape_range_t(self, tile_id):
         return self.f_S_low[tile_id], self.f_S_high[tile_id]

@@ -73,9 +73,7 @@ def _dispatch_tables(local_ids, valid, e_loc: int, cap: int, dtype):
     return disp.reshape(m, k, e_loc, cap).astype(dtype)
 
 
-def local_expert_ffn(
-    x, topk_ids, topk_w, w_gu, w_down, *, e_lo: int, cap: int, act=jax.nn.silu
-):
+def local_expert_ffn(x, topk_ids, topk_w, w_gu, w_down, *, e_lo: int, cap: int, act=jax.nn.silu):
     """FFN through the experts hosted locally; zeros for foreign-routed tokens.
 
     x: [m, d]; topk_ids/topk_w: [m, k]; w_gu: [E_loc, d, 2f] fused gate+up;
@@ -99,8 +97,16 @@ def local_expert_ffn(
 
 
 def ag_moe(
-    x, topk_ids, topk_w, w_gu, w_down, *, axis: str, capacity_factor: float = 1.25,
-    act=jax.nn.silu, channel: Optional[BlockChannel] = None,
+    x,
+    topk_ids,
+    topk_w,
+    w_gu,
+    w_down,
+    *,
+    axis: str,
+    capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+    channel: Optional[BlockChannel] = None,
 ):
     """Overlapped AG + MoE + RS double flow (see module docstring).
 
@@ -123,16 +129,17 @@ def ag_moe(
 
     # token tiles + their dynamic routing tables flow together per channel
     chunks = [
-        (x[c * m_sub:(c + 1) * m_sub],
-         topk_ids[c * m_sub:(c + 1) * m_sub],
-         topk_w[c * m_sub:(c + 1) * m_sub])
+        (
+            x[c * m_sub : (c + 1) * m_sub],
+            topk_ids[c * m_sub : (c + 1) * m_sub],
+            topk_w[c * m_sub : (c + 1) * m_sub],
+        )
         for c in range(plan.num_channels)
     ]
 
     def moe_tile(ctx, tile, _carry):
         xs, ids, wts = tile
-        part = local_expert_ffn(
-            xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act)
+        part = local_expert_ffn(xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act)
         return part.astype(flow)  # reduction travels in the flow dtype
 
     accs = run_plan(plan, moe_tile, state=chunks)
@@ -141,7 +148,14 @@ def ag_moe(
 
 
 def ag_moe_baseline(
-    x, topk_ids, topk_w, w_gu, w_down, *, axis: str, capacity_factor: float = 1.25,
+    x,
+    topk_ids,
+    topk_w,
+    w_gu,
+    w_down,
+    *,
+    axis: str,
+    capacity_factor: float = 1.25,
     act=jax.nn.silu,
 ):
     """Non-overlapping reference: AllGather tokens+tables, GroupGEMM, ReduceScatter."""
@@ -153,7 +167,7 @@ def ag_moe_baseline(
     e_total = e_loc * r_axis
     cap = _capacity(m_loc, k, e_total, capacity_factor)  # per-chunk capacity
 
-    xg = lax.all_gather(x, axis, axis=0, tiled=False)          # [R, m_loc, d]
+    xg = lax.all_gather(x, axis, axis=0, tiled=False)  # [R, m_loc, d]
     idg = lax.all_gather(topk_ids, axis, axis=0, tiled=False)
     wg = lax.all_gather(topk_w, axis, axis=0, tiled=False)
     e_lo = rank * e_loc

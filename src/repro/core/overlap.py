@@ -14,7 +14,11 @@ There is exactly ONE schedule loop here: :func:`run_plan` executes any
 :class:`~repro.core.plan.TilePlan` — every workload kind is a per-tile compute
 callback plugged into it (GEMM tile, online-softmax tile, grouped-GEMM tile in
 ``core/moe_overlap.py``), so ``CommSpec.order``, ``num_channels``, and
-``CompSpec.accum_dtype`` behave identically across all kinds.
+``CompSpec.accum_dtype`` behave identically across all kinds.  The GEMM
+callbacks additionally honor a non-default ``CompSpec.tile`` by computing in
+explicit (tm, tn, tk) blocks (``core/comp_tiles.blocked_dot``) — the same
+decomposition the fused Pallas kernels use, so a tuned tile means the same
+thing on both backends.
 
 Every function here is a *per-shard* function: call it inside ``shard_map``
 (the model layers do, via ``parallel.ParallelContext``).
@@ -40,14 +44,19 @@ from jax import lax
 
 from repro.backend import axis_size
 from repro.core.channels import BlockChannel
+from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot
 from repro.core.mapping import effective_channels
 from repro.core.plan import TilePlan, build_plan
 
 __all__ = [
-    "run_plan", "TileContext",
-    "ag_matmul", "ag_matmul_baseline",
-    "matmul_rs", "matmul_rs_baseline",
-    "ring_attention", "ag_attention_baseline",
+    "run_plan",
+    "TileContext",
+    "ag_matmul",
+    "ag_matmul_baseline",
+    "matmul_rs",
+    "matmul_rs_baseline",
+    "ring_attention",
+    "ag_attention_baseline",
     "psum_scatter_ring",
 ]
 
@@ -55,6 +64,7 @@ __all__ = [
 # -----------------------------------------------------------------------------
 # The generic schedule executor
 # -----------------------------------------------------------------------------
+
 
 @dataclasses.dataclass(frozen=True)
 class TileContext:
@@ -72,8 +82,7 @@ class TileContext:
 
 
 def _permute(tree, axis, pairs):
-    return jax.tree_util.tree_map(
-        lambda t: lax.ppermute(t, axis, pairs), tree)
+    return jax.tree_util.tree_map(lambda t: lax.ppermute(t, axis, pairs), tree)
 
 
 def _tree_add(a, b):
@@ -110,7 +119,7 @@ def run_plan(
         channel's reduction to its home rank.  Returns the per-channel
         reductions.
     """
-    axis, world, nch = plan.axis, plan.world, plan.num_channels
+    axis, nch = plan.axis, plan.num_channels
     rank = lax.axis_index(axis)
     accs: List[Any] = [None] * nch
 
@@ -118,8 +127,9 @@ def run_plan(
         nxt = None
         if plan.flow in ("ag", "ag_rs") and s < plan.steps - 1:
             # producer: issue every channel's step s+1 transfer (tile_push_data)
-            nxt = [_permute(state[c], axis, plan.channels[c].flow_perm(s))
-                   for c in range(nch)]
+            nxt = [
+                _permute(state[c], axis, plan.channels[c].flow_perm(s)) for c in range(nch)
+            ]
         for c in range(nch):
             sched = plan.channels[c]
             if plan.flow == "rs":
@@ -129,8 +139,7 @@ def run_plan(
                     accs[c] = part
                 else:
                     # peer_tile_wait/notify: previous partial arrives and fuses
-                    accs[c] = _tree_add(
-                        _permute(accs[c], axis, sched.rs_perm(s - 1)), part)
+                    accs[c] = _tree_add(_permute(accs[c], axis, sched.rs_perm(s - 1)), part)
             else:
                 # consumer_tile_wait is the SSA dependence on state[c]
                 src = jnp.asarray(sched.source_table(s))[rank]
@@ -143,8 +152,8 @@ def run_plan(
                         accs[c] = part
                     else:
                         accs[c] = _tree_add(
-                            _permute(accs[c], axis, sched.flow_perm(s - 1)),
-                            part)
+                            _permute(accs[c], axis, sched.flow_perm(s - 1)), part
+                        )
         if nxt is not None:
             state = nxt
 
@@ -152,8 +161,7 @@ def run_plan(
         return carry
     if plan.flow == "ag_rs":
         # final hop: each channel's reduction goes home (rank it belongs to)
-        accs = [_permute(accs[c], axis, plan.channels[c].align_perm())
-                for c in range(nch)]
+        accs = [_permute(accs[c], axis, plan.channels[c].align_perm()) for c in range(nch)]
     return accs
 
 
@@ -166,9 +174,7 @@ def _plan_for(kind: str, channel: BlockChannel, axis: str, extent: int):
 
 def _dot(a, b, accum=jnp.float32):
     """MXU-friendly contraction of the last dim of a with first dim of b."""
-    return lax.dot_general(
-        a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=accum
-    )
+    return lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=accum)
 
 
 def _row_update(out, part, row):
@@ -187,6 +193,7 @@ def _row_slice(x, row, m):
 # -----------------------------------------------------------------------------
 # AG + GEMM  (column-parallel producer/consumer pair)
 # -----------------------------------------------------------------------------
+
 
 def ag_matmul(
     x: jnp.ndarray,
@@ -213,12 +220,18 @@ def ag_matmul(
     plan = _plan_for("ag_matmul", channel, axis, m_loc)
     m_sub = m_loc // plan.num_channels
     accum = jnp.dtype(channel.comp.accum_dtype)
+    comp_tile = tuple(channel.comp.tile)
 
     chunks = [_row_slice(x, c * m_sub, m_sub) for c in range(plan.num_channels)]
     out0 = jnp.zeros(x.shape[:-2] + (plan.world * m_loc, n_loc), dtype=out_dtype)
 
     def gemm_tile(ctx, tile, out):
-        part = _dot(tile, w, accum=accum).astype(out_dtype)
+        # CompSpec tile: the default means "XLA's own blocking" (one dot);
+        # a tuned (tm, tn, tk) forces that explicit block decomposition
+        if comp_tile != DEFAULT_TILE:
+            part = blocked_dot(tile, w, comp_tile, accum=accum, out_dtype=out_dtype)
+        else:
+            part = _dot(tile, w, accum=accum).astype(out_dtype)
         # f_S: the tile covers rows [src * m_loc + c * m_sub, ...) globally
         return _row_update(out, part, ctx.src * m_loc + ctx.channel * m_sub)
 
@@ -235,6 +248,7 @@ def ag_matmul_baseline(x, w, *, axis: str, out_dtype=None):
 # -----------------------------------------------------------------------------
 # GEMM + ring ReduceScatter  (paper Fig. 4)
 # -----------------------------------------------------------------------------
+
 
 def matmul_rs(
     x: jnp.ndarray,
@@ -267,10 +281,13 @@ def matmul_rs(
     m_loc = m_glob // plan.world
     n_sub = n // plan.num_channels
     flow = jnp.dtype(plan.flow_dtype)
+    comp_tile = tuple(channel.comp.tile)
 
     def gemm_tile(ctx, _tile, _carry):
         xs = _row_slice(x, ctx.src * m_loc, m_loc)
-        wc = w[..., ctx.channel * n_sub:(ctx.channel + 1) * n_sub]
+        wc = w[..., ctx.channel * n_sub : (ctx.channel + 1) * n_sub]
+        if comp_tile != DEFAULT_TILE:
+            return blocked_dot(xs, wc, comp_tile, accum=flow)
         return _dot(xs, wc, accum=flow)
 
     accs = run_plan(plan, gemm_tile)
@@ -301,7 +318,7 @@ def psum_scatter_ring(x, *, axis: str, channel: Optional[BlockChannel] = None):
 
     def slice_tile(ctx, _tile, _carry):
         seg = _row_slice(x, ctx.src * m_loc, m_loc)
-        return seg[..., ctx.channel * n_sub:(ctx.channel + 1) * n_sub]
+        return seg[..., ctx.channel * n_sub : (ctx.channel + 1) * n_sub]
 
     accs = run_plan(plan, slice_tile)
     return accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=-1)
@@ -310,6 +327,7 @@ def psum_scatter_ring(x, *, axis: str, channel: Optional[BlockChannel] = None):
 # -----------------------------------------------------------------------------
 # AG-KV + self-attention  (paper Fig. 6) — sequence parallel
 # -----------------------------------------------------------------------------
+
 
 def ring_attention(
     q: jnp.ndarray,
@@ -340,7 +358,7 @@ def ring_attention(
     b, h, s_loc, d = q.shape
     hkv = k.shape[1]
     rep = h // hkv
-    scale = scale if scale is not None else d ** -0.5
+    scale = scale if scale is not None else d**-0.5
 
     plan = _plan_for("ag_attention", channel, axis, s_loc)
     s_sub = s_loc // plan.num_channels
@@ -353,9 +371,10 @@ def ring_attention(
 
     q_pos = rank * s_loc + jnp.arange(s_loc)  # global query positions
 
-    chunks = [(k[:, :, c * s_sub:(c + 1) * s_sub],
-               v[:, :, c * s_sub:(c + 1) * s_sub])
-              for c in range(plan.num_channels)]
+    chunks = [
+        (k[:, :, c * s_sub : (c + 1) * s_sub], v[:, :, c * s_sub : (c + 1) * s_sub])
+        for c in range(plan.num_channels)
+    ]
 
     def softmax_tile(ctx, kv, carry):
         kc, vc = kv
@@ -365,7 +384,9 @@ def ring_attention(
         kr = jnp.repeat(kc, rep, axis=1) if rep > 1 else kc
         vr = jnp.repeat(vc, rep, axis=1) if rep > 1 else vc
         scores = jnp.einsum(
-            "bhqd,bhkd->bhqk", q32, kr.astype(jnp.float32),
+            "bhqd,bhkd->bhqk",
+            q32,
+            kr.astype(jnp.float32),
             preferred_element_type=accum,
         ).astype(jnp.float32)
         mask = None
@@ -384,19 +405,28 @@ def ring_attention(
         alpha = jnp.exp(jnp.where(jnp.isfinite(m_i), m_i - m_safe, -jnp.inf))
         l_new = l_i * alpha + p.sum(axis=-1, keepdims=True)
         o_new = o_i * alpha + jnp.einsum(
-            "bhqk,bhkd->bhqd", p, vr.astype(jnp.float32),
+            "bhqk,bhkd->bhqd",
+            p,
+            vr.astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
         return m_new, l_new, o_new
 
-    m_f, l_f, o_f = run_plan(plan, softmax_tile, state=chunks,
-                             carry=(m_i, l_i, o_i))
+    m_f, l_f, o_f = run_plan(plan, softmax_tile, state=chunks, carry=(m_i, l_i, o_i))
     out = o_f / jnp.maximum(l_f, 1e-30)
     return out.astype(q.dtype)
 
 
-def ag_attention_baseline(q, k, v, *, axis: str, causal: bool = False,
-                          scale: Optional[float] = None, window: Optional[int] = None):
+def ag_attention_baseline(
+    q,
+    k,
+    v,
+    *,
+    axis: str,
+    causal: bool = False,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+):
     """Non-overlapping reference: AllGather full KV, then one dense attention."""
     rank = lax.axis_index(axis)
     b, h, s_loc, d = q.shape
@@ -406,9 +436,11 @@ def ag_attention_baseline(q, k, v, *, axis: str, causal: bool = False,
     if rep > 1:
         kg = jnp.repeat(kg, rep, axis=1)
         vg = jnp.repeat(vg, rep, axis=1)
-    scale = scale if scale is not None else d ** -0.5
+    scale = scale if scale is not None else d**-0.5
     scores = jnp.einsum(
-        "bhqd,bhkd->bhqk", (q * scale).astype(jnp.float32), kg.astype(jnp.float32),
+        "bhqd,bhkd->bhqk",
+        (q * scale).astype(jnp.float32),
+        kg.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
     s_glob = kg.shape[2]

@@ -95,7 +95,8 @@ class ChannelSchedule:
         if len(inv) != self.world:
             raise ValueError(
                 f"order {self.order!r} is not a per-step permutation at "
-                f"step {step + 1} (world={self.world})")
+                f"step {step + 1} (world={self.world})"
+            )
         return tuple((j, inv[self.source(j, step)]) for j in range(self.world))
 
     def align_perm(self) -> Tuple[Tuple[int, int], ...]:
@@ -104,8 +105,7 @@ class ChannelSchedule:
         After the last step rank j holds the reduction for the tiles of rank
         sigma(j, world - 1); send it there (MoE double ring's last permute).
         """
-        return tuple((j, self.source(j, self.world - 1))
-                     for j in range(self.world))
+        return tuple((j, self.source(j, self.world - 1)) for j in range(self.world))
 
     # ---- reduce-scatter view (time-reversed sigma) --------------------------
     def rs_segment(self, rank: int, step: int) -> int:
@@ -126,8 +126,7 @@ class ChannelSchedule:
     def rs_perm(self, step: int) -> Tuple[Tuple[int, int], ...]:
         """ppermute pairs moving partials from ``step`` to ``step + 1``."""
         inv = {self.rs_segment(d, step + 1): d for d in range(self.world)}
-        return tuple((j, inv[self.rs_segment(j, step)])
-                     for j in range(self.world))
+        return tuple((j, inv[self.rs_segment(j, step)]) for j in range(self.world))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,9 +140,9 @@ class TilePlan:
     kind: str
     axis: str
     world: int
-    flow: str                      # "ag" | "rs" | "ag_rs"
-    num_channels: int              # effective (validated divisor of the extent)
-    flow_dtype: str                # CompSpec.accum_dtype — wire dtype of partials
+    flow: str  # "ag" | "rs" | "ag_rs"
+    num_channels: int  # effective (validated divisor of the extent)
+    flow_dtype: str  # CompSpec.accum_dtype — wire dtype of partials
     channels: Tuple[ChannelSchedule, ...]
 
     @property
@@ -156,8 +155,9 @@ class TilePlan:
     # of truth for both backends.
     def src_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
         """AG: origin rank (== gather-buffer slot) consumed per (c, step, rank)."""
-        return tuple(tuple(ch.source_table(s) for s in range(self.steps))
-                     for ch in self.channels)
+        return tuple(
+            tuple(ch.source_table(s) for s in range(self.steps)) for ch in self.channels
+        )
 
     def flow_dst_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
         """AG: remote rank each rank pushes its held tile to, per (c, step).
@@ -166,22 +166,29 @@ class TilePlan:
         """
         ident = tuple(range(self.world))
         return tuple(
-            tuple(tuple(dst for _, dst in ch.flow_perm(s)) if s < self.steps - 1
-                  else ident for s in range(self.steps))
-            for ch in self.channels)
+            tuple(
+                tuple(dst for _, dst in ch.flow_perm(s)) if s < self.steps - 1 else ident
+                for s in range(self.steps)
+            )
+            for ch in self.channels
+        )
 
     def rs_seg_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
         """RS: segment reduced per (c, step, rank)."""
-        return tuple(tuple(ch.rs_segment_table(s) for s in range(self.steps))
-                     for ch in self.channels)
+        return tuple(
+            tuple(ch.rs_segment_table(s) for s in range(self.steps)) for ch in self.channels
+        )
 
     def rs_dst_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
         """RS: remote rank each rank pushes its partial to, per (c, step)."""
         ident = tuple(range(self.world))
         return tuple(
-            tuple(tuple(dst for _, dst in ch.rs_perm(s)) if s < self.steps - 1
-                  else ident for s in range(self.steps))
-            for ch in self.channels)
+            tuple(
+                tuple(dst for _, dst in ch.rs_perm(s)) if s < self.steps - 1 else ident
+                for s in range(self.steps)
+            )
+            for ch in self.channels
+        )
 
 
 def _directions(order: str, num_channels: int) -> Tuple[int, ...]:
@@ -206,8 +213,7 @@ def _directions(order: str, num_channels: int) -> Tuple[int, ...]:
 
 
 @functools.lru_cache(maxsize=None)
-def build_plan(kind: str, channel: BlockChannel, world: int,
-               num_channels: int) -> TilePlan:
+def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) -> TilePlan:
     """Build (and cache) the tile plan for ``kind`` over ``world`` ranks.
 
     ``num_channels`` is the *effective* channel count — callers run the
@@ -215,12 +221,12 @@ def build_plan(kind: str, channel: BlockChannel, world: int,
     against the chunked extent first, so the cache key is exact.
     """
     if kind not in FLOW_OF_KIND:
-        raise ValueError(
-            f"unknown workload kind {kind!r}; one of {tuple(FLOW_OF_KIND)}")
+        raise ValueError(f"unknown workload kind {kind!r}; one of {tuple(FLOW_OF_KIND)}")
     order = channel.comm.order
     chans = tuple(
         ChannelSchedule(order=order, world=world, direction=d)
-        for d in _directions(order, num_channels))
+        for d in _directions(order, num_channels)
+    )
     return TilePlan(
         kind=kind,
         axis=channel.axis,

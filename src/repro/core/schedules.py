@@ -64,6 +64,7 @@ def bidir_ring_source(rank: int, step: int, world: int) -> int:
 
 # traced variants -------------------------------------------------------------
 
+
 def ring_rs_segment_t(rank, step, world):
     return jnp.remainder(rank + step + 1, world)
 

@@ -6,14 +6,25 @@ ag_gemm_shard, gemm_rs_shard.  Oracles live in ref.py; tests sweep shapes and
 dtypes against them.
 """
 from repro.kernels.ops import (
-    matmul, flash_attention, grouped_matmul,
-    ag_gemm_shard, gemm_rs_shard, ssd_chunked, ssd_intra_chunk,
+    matmul,
+    flash_attention,
+    grouped_matmul,
+    ag_gemm_shard,
+    gemm_rs_shard,
+    ssd_chunked,
+    ssd_intra_chunk,
     auto_interpret,
 )
 from repro.kernels import ref
 
 __all__ = [
-    "matmul", "flash_attention", "grouped_matmul",
-    "ag_gemm_shard", "gemm_rs_shard", "ssd_chunked", "ssd_intra_chunk",
-    "auto_interpret", "ref",
+    "matmul",
+    "flash_attention",
+    "grouped_matmul",
+    "ag_gemm_shard",
+    "gemm_rs_shard",
+    "ssd_chunked",
+    "ssd_intra_chunk",
+    "auto_interpret",
+    "ref",
 ]

@@ -12,8 +12,9 @@ tables, so ``CommSpec.order`` (ring / bidir_ring / all2all) and
     ``tile_push_data`` (``pltpu.make_async_remote_copy`` on the ICI DMA
     engine) while the MXU computes GEMM tiles on it — communication and
     computation tiles are *decoupled*: the comm tile is the [m_sub, K]
-    channel sub-chunk (f_C), the compute tile is (m_sub, bn) (CompSpec),
-    iterated in the inner grid dimension;
+    channel sub-chunk (f_C), the compute tile is the CompSpec (tm, bn, tk)
+    blocking of it (``core/comp_tiles.blocked_dot``; the default tile keeps
+    the whole-chunk dot), iterated in the inner grid dimension;
   * ``consumer_tile_wait`` is the ``wait_recv`` on the per-(step, channel)
     DMA semaphore — acquire semantics; loads of the gathered chunk are
     emitted only after it (paper §4.2's strict-dependency rule, enforced by
@@ -41,31 +42,54 @@ from repro import backend
 from repro.backend import pl
 from repro.core import primitives
 from repro.core.channels import BlockChannel
+from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
 from repro.core.plan import build_plan
 
 __all__ = ["ag_gemm_shard"]
 
 
-def _ag_gemm_kernel(x_ref, w_ref, src_tbl, dst_tbl, o_ref, buf, x_vmem, acc,
-                    out_tile, copy_sem, send_sem, recv_sems, out_sem, *,
-                    axis: str, world: int, nch: int, n_tiles: int,
-                    m_loc: int, m_sub: int, bn: int, accum):
+def _ag_gemm_kernel(
+    x_ref,
+    w_ref,
+    src_tbl,
+    dst_tbl,
+    o_ref,
+    buf,
+    x_vmem,
+    acc,
+    out_tile,
+    copy_sem,
+    send_sem,
+    recv_sems,
+    out_sem,
+    *,
+    axis: str,
+    world: int,
+    nch: int,
+    n_tiles: int,
+    m_loc: int,
+    m_sub: int,
+    tm: int,
+    bn: int,
+    tk: int,
+    accum,
+):
     s = pl.program_id(0)
     c = pl.program_id(1)
     j = pl.program_id(2)
     my = lax.axis_index(axis)
     flat = (c * world + s) * world + my
-    src = src_tbl[flat]          # origin (== gather slot) consumed this step
-    dst = dst_tbl[flat]          # peer the held tile is forwarded to
+    src = src_tbl[flat]  # origin (== gather slot) consumed this step
+    dst = dst_tbl[flat]  # peer the held tile is forwarded to
     slot = src * nch + c
 
     @pl.when(jnp.logical_and(s == 0, j == 0))
     def _local_seed():
         # stage channel c of the own shard into its gather slot (producer tile)
         cp = backend.make_async_copy(
-            x_ref.at[pl.ds(c * m_sub, m_sub), :], buf.at[my * nch + c],
-            copy_sem)
+            x_ref.at[pl.ds(c * m_sub, m_sub), :], buf.at[my * nch + c], copy_sem
+        )
         cp.start()
         cp.wait()
 
@@ -93,8 +117,10 @@ def _ag_gemm_kernel(x_ref, w_ref, src_tbl, dst_tbl, o_ref, buf, x_vmem, acc,
         def _():
             _fwd_rdma().start()
 
-    # compute tile j of the consumer GEMM (CompSpec tile, accum dtype)
-    acc[...] = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=accum)
+    # compute tile j of the consumer GEMM (CompSpec tile, accum dtype);
+    # a tuned (tm, tk) decomposes the [m_sub, k] x [k, bn] contraction into
+    # explicit MXU blocks, the default keeps the whole-chunk dot
+    acc[...] = blocked_dot(x_vmem[...], w_ref[...], (tm, bn, tk), accum=accum, unroll=True)
     out_tile[...] = acc[...].astype(out_tile.dtype)
     oc = backend.make_async_copy(
         out_tile,
@@ -123,31 +149,47 @@ def ag_gemm_shard(
     """Per-shard fused AG+GEMM. x: [m_loc, K], w: [K, n_loc] -> [R*m_loc, n_loc].
 
     Call inside shard_map over ``channel.axis``.  The schedule (order,
-    channels) and the accumulation dtype come from ``channel`` via the plan
-    layer; ``bn`` defaults to ``channel.comp.tile[1]``.  ``interpret=True``
-    runs the interpreter (CPU validation); False lowers to Mosaic on TPU
-    hosts — on a CPU-only host the emulated backend target interprets
-    regardless, since there is no Mosaic toolchain to compile with.
+    channels), the accumulation dtype, and the (tm, tn, tk) compute tile come
+    from ``channel`` via the plan layer; ``bn`` overrides
+    ``channel.comp.tile[1]``.  ``interpret=True`` runs the interpreter (CPU
+    validation); False lowers to Mosaic on TPU hosts — on a CPU-only host the
+    emulated backend target interprets regardless, since there is no Mosaic
+    toolchain to compile with.
     """
     channel = channel or BlockChannel(axis="model")
     axis = channel.axis
     m_loc, k = x.shape
     _, n_loc = w.shape
-    bn = bn or channel.comp.tile[1]
-    bn = min(bn, n_loc)
-    assert n_loc % bn == 0
+    comp_tile = tuple(channel.comp.tile)
+    bn = bn or comp_tile[1]
+    bn = largest_divisor(n_loc, bn)
     n_tiles = n_loc // bn
 
     nch = effective_channels(m_loc, channel.num_channels, kind="ag_matmul")
     plan = build_plan("ag_matmul", channel, world_size, nch)
     m_sub = m_loc // nch
+    if comp_tile == DEFAULT_TILE:
+        # sentinel: backend-chosen blocking — whole-chunk rows/contraction
+        tm, tk = m_sub, k
+    else:
+        tm = largest_divisor(m_sub, comp_tile[0])
+        tk = largest_divisor(k, comp_tile[2])
     accum = jnp.dtype(plan.flow_dtype)
     src_tbl = jnp.asarray(plan.src_tables(), jnp.int32).reshape(-1)
     dst_tbl = jnp.asarray(plan.flow_dst_tables(), jnp.int32).reshape(-1)
 
     kern = functools.partial(
-        _ag_gemm_kernel, axis=axis, world=world_size, nch=nch,
-        n_tiles=n_tiles, m_loc=m_loc, m_sub=m_sub, bn=bn, accum=accum,
+        _ag_gemm_kernel,
+        axis=axis,
+        world=world_size,
+        nch=nch,
+        n_tiles=n_tiles,
+        m_loc=m_loc,
+        m_sub=m_sub,
+        tm=tm,
+        bn=bn,
+        tk=tk,
+        accum=accum,
     )
     return backend.pallas_call(
         kern,
@@ -155,20 +197,20 @@ def ag_gemm_shard(
         in_specs=[
             pl.BlockSpec(memory_space=backend.ANY),
             pl.BlockSpec((k, bn), lambda s, c, j: (0, j)),
-            pl.BlockSpec(memory_space=backend.ANY),   # src schedule table
-            pl.BlockSpec(memory_space=backend.ANY),   # dst schedule table
+            pl.BlockSpec(memory_space=backend.ANY),  # src schedule table
+            pl.BlockSpec(memory_space=backend.ANY),  # dst schedule table
         ],
         out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((world_size * m_loc, n_loc), x.dtype),
         scratch_shapes=[
             backend.vmem_scratch((world_size * nch, m_sub, k), x.dtype),  # gather
-            backend.vmem_scratch((m_sub, k), x.dtype),   # current tile
-            backend.vmem_scratch((m_sub, bn), accum),    # accumulator
+            backend.vmem_scratch((m_sub, k), x.dtype),  # current tile
+            backend.vmem_scratch((m_sub, bn), accum),  # accumulator
             backend.vmem_scratch((m_sub, bn), x.dtype),  # cast staging tile
-            backend.dma_semaphore(),                     # local copies
-            backend.dma_semaphore(),                     # sends
+            backend.dma_semaphore(),  # local copies
+            backend.dma_semaphore(),  # sends
             backend.dma_semaphore((world_size * nch,)),  # per-(step, ch) recv
-            backend.dma_semaphore(),                     # out stores
+            backend.dma_semaphore(),  # out stores
         ],
         dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         interpret=interpret,

@@ -23,9 +23,24 @@ __all__ = ["flash_attention"]
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-               scale: float, causal: bool, window: Optional[int],
-               bq: int, bk: int, n_kv: int, sq: int, sk: int):
+def _fa_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    bq: int,
+    bk: int,
+    n_kv: int,
+    sq: int,
+    sk: int,
+):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -50,9 +65,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _compute():
         q = q_ref[0].astype(jnp.float32) * scale
         k = k_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )  # [bq, bk]
+        # scores [bq, bk]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
         mask = None
         if causal:
             mask = q_pos >= k_pos
@@ -67,7 +81,9 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p,
+            v_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new
@@ -81,22 +97,38 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     jax.jit,
     static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"),
 )
-def flash_attention(q, k, v, *, causal=False, window: Optional[int] = None,
-                    scale: Optional[float] = None, bq=128, bk=128,
-                    interpret=False):
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal=False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    bq=128,
+    bk=128,
+    interpret=False,
+):
     """q: [BH, Sq, D], k/v: [BHkv, Sk, D] -> [BH, Sq, D]."""
     bh, sq, d = q.shape
     bhkv, sk, _ = k.shape
     rep = bh // bhkv
-    scale = float(scale if scale is not None else d ** -0.5)
+    scale = float(scale if scale is not None else d**-0.5)
     bq = min(bq, sq)
     bk = min(bk, sk)
     assert sq % bq == 0 and sk % bk == 0
     n_kv = sk // bk
 
     kern = functools.partial(
-        _fa_kernel, scale=scale, causal=causal, window=window,
-        bq=bq, bk=bk, n_kv=n_kv, sq=sq, sk=sk,
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        n_kv=n_kv,
+        sq=sq,
+        sk=sk,
     )
     return backend.pallas_call(
         kern,

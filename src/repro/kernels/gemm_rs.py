@@ -5,8 +5,9 @@ plan's reduce-scatter view (the time reversal of the order's source schedule —
 for "ring" in the plan's default orientation exactly the paper's
 ``seg = (rank + stage + 1) % W``) is baked in
 as int32 segment/destination tables, so ``CommSpec.order``, ``num_channels``
-(column chunking, C independent flows) and ``CompSpec.accum_dtype`` (the flow
-dtype partials travel in) behave identically on both backends.
+(column chunking, C independent flows), ``CompSpec.accum_dtype`` (the flow
+dtype partials travel in) and the CompSpec (tm, tn, tk) compute tile behave
+identically on both backends.
 
 Stage ``s``, channel ``c`` at rank ``r``:
   1. ``consumer_tile_wait``   — wait for the partial pushed by the plan's
@@ -42,23 +43,46 @@ from repro import backend
 from repro.backend import pl
 from repro.core import primitives
 from repro.core.channels import BlockChannel
+from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
 from repro.core.plan import build_plan
 
 __all__ = ["gemm_rs_shard"]
 
 
-def _gemm_rs_kernel(x_ref, w_ref, seg_tbl, dst_tbl, o_ref, x_vmem, acc, prev,
-                    out_cast, copy_sem, send_sem, recv_sems, rbuf, *,
-                    axis: str, world: int, nch: int, n_tiles: int,
-                    m_loc: int, n_sub: int, bn: int, flow):
+def _gemm_rs_kernel(
+    x_ref,
+    w_ref,
+    seg_tbl,
+    dst_tbl,
+    o_ref,
+    x_vmem,
+    acc,
+    prev,
+    out_cast,
+    copy_sem,
+    send_sem,
+    recv_sems,
+    rbuf,
+    *,
+    axis: str,
+    world: int,
+    nch: int,
+    n_tiles: int,
+    m_loc: int,
+    n_sub: int,
+    tm: int,
+    bn: int,
+    tk: int,
+    flow,
+):
     s = pl.program_id(0)
     c = pl.program_id(1)
     j = pl.program_id(2)
     my = lax.axis_index(axis)
     flat = (c * world + s) * world + my
-    seg = seg_tbl[flat]          # segment this rank reduces at stage s
-    dst = dst_tbl[flat]          # peer that reduces it at stage s+1
+    seg = seg_tbl[flat]  # segment this rank reduces at stage s
+    dst = dst_tbl[flat]  # peer that reduces it at stage s+1
 
     def _push_rdma(stage):
         # identical descriptor on sender & receiver (SPMD) — sender start()s,
@@ -83,9 +107,7 @@ def _gemm_rs_kernel(x_ref, w_ref, seg_tbl, dst_tbl, o_ref, x_vmem, acc, prev,
         @pl.when(seg_is_stale)
         def _fetch_seg():
             # shape mapping f_S: bring segment `seg` of x into VMEM
-            cp = backend.make_async_copy(
-                x_ref.at[pl.ds(seg * m_loc, m_loc), :], x_vmem, copy_sem
-            )
+            cp = backend.make_async_copy(x_ref.at[pl.ds(seg * m_loc, m_loc), :], x_vmem, copy_sem)
             cp.start()
             cp.wait()
 
@@ -93,15 +115,16 @@ def _gemm_rs_kernel(x_ref, w_ref, seg_tbl, dst_tbl, o_ref, x_vmem, acc, prev,
         def _recv_prev():
             # consumer_tile_wait (acquire): stage s-1 partial for channel c
             _push_rdma(s - 1).wait_recv()
-            cp2 = backend.make_async_copy(
-                rbuf.at[(s - 1) * nch + c], prev, copy_sem)
+            cp2 = backend.make_async_copy(rbuf.at[(s - 1) * nch + c], prev, copy_sem)
             cp2.start()
             cp2.wait()
             # release: our stage s-1 push drained before acc cols are reused
             _push_rdma(s - 1).wait_send()
 
-    # GEMM tile j for segment `seg` (+ fused reduction of the incoming partial)
-    part = jnp.dot(x_vmem[...], w_ref[...], preferred_element_type=flow)
+    # GEMM tile j for segment `seg` (+ fused reduction of the incoming
+    # partial); a tuned (tm, tk) decomposes the [m_loc, k_loc] x [k_loc, bn]
+    # contraction into explicit MXU blocks, the default keeps one dot
+    part = blocked_dot(x_vmem[...], w_ref[...], (tm, bn, tk), accum=flow, unroll=True)
     col = c * n_sub + j * bn
 
     @pl.when(s > 0)
@@ -121,10 +144,8 @@ def _gemm_rs_kernel(x_ref, w_ref, seg_tbl, dst_tbl, o_ref, x_vmem, acc, prev,
         @pl.when(s == world - 1)
         def _store():
             # paper lines 22-23: final stage stores the reduced home segment
-            out_cast[...] = acc[:, pl.ds(c * n_sub, n_sub)].astype(
-                out_cast.dtype)
-            cp = backend.make_async_copy(
-                out_cast, o_ref.at[:, pl.ds(c * n_sub, n_sub)], copy_sem)
+            out_cast[...] = acc[:, pl.ds(c * n_sub, n_sub)].astype(out_cast.dtype)
+            cp = backend.make_async_copy(out_cast, o_ref.at[:, pl.ds(c * n_sub, n_sub)], copy_sem)
             cp.start()
             cp.wait()
 
@@ -141,10 +162,11 @@ def gemm_rs_shard(
     """Per-shard fused GEMM+RS. x: [M, k_loc], w: [k_loc, N] -> [M/R, N].
 
     Call inside shard_map over ``channel.axis``; the schedule (order,
-    channels) and the flow dtype partials accumulate/travel in come from
-    ``channel`` via the plan layer; ``bn`` defaults to ``channel.comp.tile[1]``.
-    ``interpret=False`` lowers to Mosaic only on TPU hosts — on a CPU-only
-    host the emulated backend target interprets regardless.
+    channels), the flow dtype partials accumulate/travel in, and the
+    (tm, tn, tk) compute tile come from ``channel`` via the plan layer;
+    ``bn`` overrides ``channel.comp.tile[1]``.  ``interpret=False`` lowers to
+    Mosaic only on TPU hosts — on a CPU-only host the emulated backend target
+    interprets regardless.
     """
     channel = channel or BlockChannel(axis="model")
     axis = channel.axis
@@ -156,17 +178,32 @@ def gemm_rs_shard(
     nch = effective_channels(n, channel.num_channels, kind="matmul_rs")
     plan = build_plan("matmul_rs", channel, world_size, nch)
     n_sub = n // nch
-    bn = bn or channel.comp.tile[1]
-    bn = min(bn, n_sub)
-    assert n_sub % bn == 0
+    comp_tile = tuple(channel.comp.tile)
+    bn = bn or comp_tile[1]
+    bn = largest_divisor(n_sub, bn)
     n_tiles = n_sub // bn
+    if comp_tile == DEFAULT_TILE:
+        # sentinel: backend-chosen blocking — whole-segment rows/contraction
+        tm, tk = m_loc, k_loc
+    else:
+        tm = largest_divisor(m_loc, comp_tile[0])
+        tk = largest_divisor(k_loc, comp_tile[2])
     flow = jnp.dtype(plan.flow_dtype)
     seg_tbl = jnp.asarray(plan.rs_seg_tables(), jnp.int32).reshape(-1)
     dst_tbl = jnp.asarray(plan.rs_dst_tables(), jnp.int32).reshape(-1)
 
     kern = functools.partial(
-        _gemm_rs_kernel, axis=axis, world=world_size, nch=nch,
-        n_tiles=n_tiles, m_loc=m_loc, n_sub=n_sub, bn=bn, flow=flow,
+        _gemm_rs_kernel,
+        axis=axis,
+        world=world_size,
+        nch=nch,
+        n_tiles=n_tiles,
+        m_loc=m_loc,
+        n_sub=n_sub,
+        tm=tm,
+        bn=bn,
+        tk=tk,
+        flow=flow,
     )
     return backend.pallas_call(
         kern,
@@ -174,19 +211,19 @@ def gemm_rs_shard(
         in_specs=[
             pl.BlockSpec(memory_space=backend.ANY),
             pl.BlockSpec((k_loc, bn), lambda s, c, j: (0, c * (n_sub // bn) + j)),
-            pl.BlockSpec(memory_space=backend.ANY),   # segment schedule table
-            pl.BlockSpec(memory_space=backend.ANY),   # push-dst schedule table
+            pl.BlockSpec(memory_space=backend.ANY),  # segment schedule table
+            pl.BlockSpec(memory_space=backend.ANY),  # push-dst schedule table
         ],
         out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((m_loc, n), x.dtype),
         scratch_shapes=[
-            backend.vmem_scratch((m_loc, k_loc), x.dtype),   # x segment
-            backend.vmem_scratch((m_loc, n), flow),          # stage accumulator
-            backend.vmem_scratch((m_loc, n_sub), flow),      # received partial
-            backend.vmem_scratch((m_loc, n_sub), x.dtype),   # final cast
-            backend.dma_semaphore(),                         # local copies
-            backend.dma_semaphore(),                         # sends
-            backend.dma_semaphore((world_size * nch,)),      # per-(stage,ch) recv
+            backend.vmem_scratch((m_loc, k_loc), x.dtype),  # x segment
+            backend.vmem_scratch((m_loc, n), flow),  # stage accumulator
+            backend.vmem_scratch((m_loc, n_sub), flow),  # received partial
+            backend.vmem_scratch((m_loc, n_sub), x.dtype),  # final cast
+            backend.dma_semaphore(),  # local copies
+            backend.dma_semaphore(),  # sends
+            backend.dma_semaphore((world_size * nch,)),  # per-(stage,ch) recv
             backend.vmem_scratch((world_size * nch, m_loc, n_sub), flow),  # rbuf
         ],
         dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),

@@ -23,11 +23,8 @@ from repro.backend import pl
 __all__ = ["grouped_matmul"]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("tile", "out_dtype", "interpret")
-)
-def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None,
-                   interpret=False):
+@functools.partial(jax.jit, static_argnames=("tile", "out_dtype", "interpret"))
+def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None, interpret=False):
     """x: [M, K] (expert-sorted), w: [E, K, N], tile_expert: [M // bm] i32.
 
     Returns [M, N] with rows of tile t multiplied by w[tile_expert[t]].
@@ -55,12 +52,13 @@ def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None,
 
     def _kernel(expert_ref, x_ref, w_ref, o_ref, acc_ref):
         del expert_ref  # consumed by the index_maps above
+
         @pl.when(pl.program_id(2) == 0)
         def _init():
             acc_ref[...] = jnp.zeros_like(acc_ref)
-        acc_ref[...] += jnp.dot(
-            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
-        )
+
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0], preferred_element_type=jnp.float32)
+
         @pl.when(pl.program_id(2) == n_k - 1)
         def _store():
             o_ref[...] = acc_ref[...].astype(o_ref.dtype)

@@ -24,18 +24,14 @@ def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
-    )
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _store():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("tile", "out_dtype", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("tile", "out_dtype", "interpret"))
 def matmul(x, w, *, tile=DEFAULT_TILE, out_dtype=None, interpret=False):
     """x: [M, K] @ w: [K, N] -> [M, N]; M/N/K must divide by the tile."""
     out_dtype = out_dtype or x.dtype

@@ -15,8 +15,13 @@ from repro.kernels.gemm_rs import gemm_rs_shard
 from repro.kernels.mamba_ssd import ssd_chunked, ssd_intra_chunk
 
 __all__ = [
-    "matmul", "flash_attention", "grouped_matmul",
-    "ag_gemm_shard", "gemm_rs_shard", "ssd_chunked", "ssd_intra_chunk",
+    "matmul",
+    "flash_attention",
+    "grouped_matmul",
+    "ag_gemm_shard",
+    "gemm_rs_shard",
+    "ssd_chunked",
+    "ssd_intra_chunk",
     "auto_interpret",
 ]
 

@@ -11,21 +11,27 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "matmul_ref", "flash_attention_ref", "grouped_matmul_ref",
-    "ag_gemm_ref", "gemm_rs_ref", "ssd_ref",
+    "matmul_ref",
+    "flash_attention_ref",
+    "grouped_matmul_ref",
+    "ag_gemm_ref",
+    "gemm_rs_ref",
+    "ssd_ref",
 ]
 
 
 def matmul_ref(x, w, out_dtype=None):
     out_dtype = out_dtype or x.dtype
     return jnp.dot(
-        x.astype(jnp.float32), w.astype(jnp.float32),
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ).astype(out_dtype)
 
 
-def flash_attention_ref(q, k, v, *, causal=False, window: Optional[int] = None,
-                        scale: Optional[float] = None):
+def flash_attention_ref(
+    q, k, v, *, causal=False, window: Optional[int] = None, scale: Optional[float] = None
+):
     """q: [BH, Sq, D], k/v: [BHkv, Sk, D] with BH % BHkv == 0 (GQA)."""
     bh, sq, d = q.shape
     bhkv, sk, _ = k.shape
@@ -33,9 +39,8 @@ def flash_attention_ref(q, k, v, *, causal=False, window: Optional[int] = None,
     if rep > 1:
         k = jnp.repeat(k, rep, axis=0)
         v = jnp.repeat(v, rep, axis=0)
-    scale = scale if scale is not None else d ** -0.5
-    s = jnp.einsum("bqd,bkd->bqk", (q * scale).astype(jnp.float32),
-                   k.astype(jnp.float32))
+    scale = scale if scale is not None else d**-0.5
+    s = jnp.einsum("bqd,bkd->bqk", (q * scale).astype(jnp.float32), k.astype(jnp.float32))
     qp = jnp.arange(sq)
     kp = jnp.arange(sk)
     mask = None
@@ -63,18 +68,16 @@ def grouped_matmul_ref(x, w, tile_expert, tile_m: int, out_dtype=None):
     out_dtype = out_dtype or x.dtype
     row_expert = jnp.repeat(tile_expert, tile_m)
     wx = w[row_expert]  # [M, K, N]
-    return jnp.einsum(
-        "mk,mkn->mn", x.astype(jnp.float32), wx.astype(jnp.float32)
-    ).astype(out_dtype)
+    out = jnp.einsum("mk,mkn->mn", x.astype(jnp.float32), wx.astype(jnp.float32))
+    return out.astype(out_dtype)
 
 
 def ag_gemm_ref(x_shards, w_shards):
     """Global oracle: x_shards [R, m_loc, K], w_shards [R, K, n_loc] ->
     per-rank outputs [R, R*m_loc, n_loc] (every rank holds AG(x) @ its w)."""
     xg = x_shards.reshape(-1, x_shards.shape[-1]).astype(jnp.float32)
-    return jnp.stack([xg @ w.astype(jnp.float32) for w in w_shards]).astype(
-        x_shards.dtype
-    )
+    out = jnp.stack([xg @ w.astype(jnp.float32) for w in w_shards])
+    return out.astype(x_shards.dtype)
 
 
 def gemm_rs_ref(x_shards, w_shards):
@@ -84,10 +87,7 @@ def gemm_rs_ref(x_shards, w_shards):
     Returns [R, M // R, N]: rank r's segment of sum_r(x_r @ w_r).
     """
     r, m, _ = x_shards.shape
-    full = sum(
-        x_shards[i].astype(jnp.float32) @ w_shards[i].astype(jnp.float32)
-        for i in range(r)
-    )
+    full = sum(x_shards[i].astype(jnp.float32) @ w_shards[i].astype(jnp.float32) for i in range(r))
     return full.reshape(r, m // r, -1).astype(x_shards.dtype)
 
 

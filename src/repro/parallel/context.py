@@ -16,10 +16,12 @@ channel count, flow dtype) is selected once here and honored by every layer
 
 With ``tune=True`` the design point is not fixed: each op resolves the best
 ``BlockChannel`` for its own operand shapes through the ``repro.tune``
-autotuner (persistent per-mesh cache; trace-safe cost-model ranking, or
-measured winners wherever the cache was pre-warmed with
-``repro.tune.autotune(..., ranker="measure")``).  Non-tuned fields of
-``pc.channel`` (comm resource/mode, tiles) are inherited by every winner.
+autotuner over the JOINT space — the comm half (order, C, flow dtype) and
+the compute half (the (tm, tn, tk) consumer tile) together (persistent
+per-mesh cache; trace-safe cost-model ranking, or measured winners wherever
+the cache was pre-warmed with ``repro.tune.autotune(..., ranker="measure")``).
+Non-tuned fields of ``pc.channel`` (comm resource/mode) are inherited by
+every winner.
 
 Layers call ``pc.ag_matmul`` / ``pc.matmul_rs`` / ``pc.psum`` on *per-shard*
 values while inside a manual region entered via ``pc.smap``.
@@ -137,12 +139,14 @@ class ParallelContext:
     def _op(self, kind: str, shapes: Tuple = ()) -> Callable:
         channel = self.channel
         if self.tune and self.mode == "overlap" and shapes:
-            from repro.tune import resolve_channel
+            from repro.tune import JOINT_SPACE, resolve_channel
 
-            # host-side: tuning-cache lookup / cost-model ranking (trace-safe)
+            # host-side: tuning-cache lookup / cost-model ranking (trace-safe);
+            # the JOINT space searches both halves — comm (order, C, flow
+            # dtype) and compute ((tm, tn, tk) consumer tile) — per op shape
             channel = resolve_channel(
                 kind, shapes=shapes, mesh=self.mesh, axis=self.axis,
-                base=self.channel, ranker=self.tune_ranker)
+                base=self.channel, ranker=self.tune_ranker, space=JOINT_SPACE)
         return compile_overlap(kind, channel, backend="xla",
                                overlapped=(self.mode == "overlap"))
 

@@ -1,18 +1,24 @@
-"""Schedule-space autotuner over the compiled frontend (ROADMAP "Next").
+"""Design-space autotuner over the compiled frontend (ROADMAP "Next").
 
 The paper's core argument (§3.1) is that communication and computation tune
 *independently*: the best ``(tile order, channel count f_C, flow dtype)``
-changes per shape and per mesh.  PR 2 made that space uniformly sweepable
-through ``compile_overlap``; this package searches it:
+on the comm half and the best ``(tm, tn, tk)`` consumer tile on the compute
+half both change per shape and per mesh.  PR 2 made that space uniformly
+sweepable through ``compile_overlap``; this package searches it:
 
     result = autotune("ag_matmul", signature=(1, 64, 32, 32), mesh=mesh)
     fn = compile_overlap("ag_matmul", result.channel)
 
 or transparently:
 
-    compile_overlap("ag_matmul", channel="auto")      # resolves per call shape
-    ParallelContext(mesh=mesh, tune=True)             # every op resolves tuned
+    compile_overlap("ag_matmul", channel="auto")      # comm half, per call shape
+    compile_overlap("ag_matmul", channel="auto", comp="auto")   # joint search
+    ParallelContext(mesh=mesh, tune=True)             # every op resolves joint
     nn.ffn.apply_seq(params, x, pc, cfg, tune=True)   # per-layer opt-in
+
+``DEFAULT_SPACE`` sweeps the comm half only; ``JOINT_SPACE`` adds the
+pruned compute-tile lattice (``tune/candidates.py``) — shape-, VMEM- and
+MXU-alignment-constrained via the ``repro.backend`` hardware probes.
 
 Rankers
 -------
@@ -48,11 +54,15 @@ from repro.tune import cache as _cache
 from repro.tune import cost as _cost
 from repro.tune import measure as _measure
 from repro.tune.candidates import (
+    COMP_TILE_LATTICE,
     DEFAULT_SPACE,
+    GEMM_TILE_KINDS,
+    JOINT_SPACE,
     Candidate,
     Space,
     TUNABLE_KINDS,
     chunk_extent,
+    comp_tile_candidates,
     enumerate_candidates,
     signature,
 )
@@ -64,15 +74,25 @@ __all__ = [
     "Space",
     "Candidate",
     "DEFAULT_SPACE",
+    "JOINT_SPACE",
+    "COMP_TILE_LATTICE",
+    "GEMM_TILE_KINDS",
     "TUNABLE_KINDS",
     "RANKERS",
+    "CACHE_SCHEMA",
     "signature",
     "enumerate_candidates",
+    "comp_tile_candidates",
     "chunk_extent",
 ]
 
 RANKERS = ("auto", "measure", "model")
 _ENV_RANKER = "REPRO_TUNE_RANKER"
+
+# record-format version.  v1 (PR 3) records are comm-only — no ``comp_tile``
+# field and no notion of the joint space; loading one under the new schema
+# re-tunes (a cheap model ranking) instead of guessing a compute half.
+CACHE_SCHEMA = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,6 +197,8 @@ def autotune(
 
     if not force:
         rec = _cache.load_entry(fp, key, directory=cache_dir)
+        if rec is not None and int(rec.get("schema", 1)) != CACHE_SCHEMA:
+            rec = None  # v1 (comm-only) record: re-tune under the joint schema
         if rec is not None and _wants_measure_upgrade(rec, ranker, mesh):
             rec = None  # explicit measure request upgrades a model-ranked entry
         if rec is not None:
@@ -184,6 +206,7 @@ def autotune(
                 order=rec["order"],
                 num_channels=int(rec["num_channels"]),
                 accum_dtype=rec["accum_dtype"],
+                comp_tile=tuple(int(t) for t in rec["comp_tile"]),
             )
             return TuneResult(
                 kind=kind,
@@ -198,7 +221,9 @@ def autotune(
             )
 
     use = _resolve_ranker(ranker, mesh)
-    cands = enumerate_candidates(kind, extent=chunk_extent(kind, sig), space=space)
+    cands = enumerate_candidates(
+        kind, extent=chunk_extent(kind, sig), space=space, sig=sig, world=world
+    )
     best: Optional[Candidate] = None
     best_score = float("inf")
     for cand in cands:
@@ -213,12 +238,14 @@ def autotune(
     assert best is not None
 
     record = {
+        "schema": CACHE_SCHEMA,
         "kind": kind,
         "signature": list(sig),
         "world": world,
         "order": best.order,
         "num_channels": best.num_channels,
         "accum_dtype": best.accum_dtype,
+        "comp_tile": list(best.comp_tile),
         "ranker": use,
         "score": best_score,
         "score_unit": "us_measured" if use == "measure" else "s_predicted",

@@ -1,39 +1,80 @@
 """Candidate enumeration — ONE design-space walk for both rankers.
 
-The tunable space is exactly the decoupled ``CommSpec x CompSpec`` surface
-the plan layer sweeps (paper §3.1): tile order x channel count (f_C) x flow
-dtype.  Both the measured ranker and the analytic cost model iterate the
-tuple returned by :func:`enumerate_candidates`, and the cache entry key
+The tunable space is the full decoupled ``CommSpec x CompSpec`` surface the
+plan layer sweeps (paper §3.1): tile order x channel count (f_C) x flow
+dtype on the comm half, and the (tm, tn, tk) consumer-kernel tile on the
+compute half.  Both the measured ranker and the analytic cost model iterate
+the tuple returned by :func:`enumerate_candidates`, and the cache entry key
 hashes the same :class:`Space` — so "which points were considered" is part
 of a result's identity and a narrowed sweep can never shadow a full one.
 
 Enumeration is deterministic (nested loops over the Space's ordered fields)
-and feasibility-aware: each requested channel count is pushed through
-``mapping.effective_channels`` against the kind's chunked extent, and
-candidates that clamp onto an already-seen effective point are dropped —
-the rankers never time the same realized schedule twice.
+and feasibility-aware:
+
+  * each requested channel count is pushed through
+    ``mapping.effective_channels`` against the kind's chunked extent;
+  * each requested compute tile is pruned against the operand shapes
+    (largest-divisor clamp, like the comm half), the dtype-dependent MXU
+    packing multiples, and the per-tile VMEM footprint — all probed through
+    ``repro.backend`` (``sublane_multiple``, ``lane_multiple``,
+    ``vmem_budget_bytes``), so tiles enumerated on an emulated host stay
+    valid on real TPUs;
+  * candidates that clamp onto an already-seen effective point are dropped —
+    the rankers never time the same realized schedule twice.
+
+``DEFAULT_SPACE`` sweeps the comm half only (the compute tile stays the
+backend-chosen default) — the PR-3 contract.  ``JOINT_SPACE`` adds the
+pruned (tm, tn, tk) lattice; ``compile_overlap(..., comp="auto")`` and
+``ParallelContext(tune=True)`` search it.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import math
-import warnings
 from typing import Optional, Sequence, Tuple
 
 from repro.core.channels import BlockChannel, ORDERS
+from repro.core.comp_tiles import DEFAULT_TILE, resolve_tile, tile_footprint_bytes
 from repro.core.mapping import effective_channels
 
 __all__ = [
     "Space",
     "Candidate",
     "DEFAULT_SPACE",
+    "JOINT_SPACE",
+    "COMP_TILE_LATTICE",
+    "GEMM_TILE_KINDS",
     "enumerate_candidates",
+    "comp_tile_candidates",
     "signature",
     "chunk_extent",
 ]
 
 TUNABLE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
+
+# kinds whose consumer compute is a plain GEMM the (tm, tn, tk) tile applies
+# to; the attention and MoE consumers keep the backend-chosen default tile
+GEMM_TILE_KINDS = ("ag_matmul", "matmul_rs")
+
+# requested (tm, tn, tk) lattice of the joint space, default tile FIRST so a
+# cost-model tie breaks toward the backend-chosen blocking.  Points are
+# pruned per shape signature before ranking (see comp_tile_candidates).
+COMP_TILE_LATTICE = (DEFAULT_TILE,) + tuple(
+    (tm, tn, tk)
+    for tm in (64, 128, 256)
+    for tn in (128, 256, 512)
+    for tk in (128, 256, 512)
+    if (tm, tn, tk) != DEFAULT_TILE
+)
+
+# fraction of the probed VMEM budget one compute tile's working set may
+# occupy (the rest holds the comm staging buffers and double-buffering)
+VMEM_TILE_FRACTION = 0.25
+
+# wire/operand bytes per element for footprint pruning (activations travel
+# bf16 on TPU — same convention as tune/cost.py)
+_IN_BYTES = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +84,7 @@ class Space:
     orders: Tuple[str, ...] = ORDERS
     channel_counts: Tuple[int, ...] = (1, 2, 4)
     accum_dtypes: Tuple[str, ...] = ("float32", "bfloat16")
+    comp_tiles: Tuple[Tuple[int, int, int], ...] = (DEFAULT_TILE,)
 
     def __post_init__(self):
         for o in self.orders:
@@ -50,22 +92,28 @@ class Space:
                 raise ValueError(f"unknown order {o!r}; one of {ORDERS}")
         if any(c < 1 for c in self.channel_counts):
             raise ValueError(f"channel counts must be >= 1: {self.channel_counts}")
+        for t in self.comp_tiles:
+            if len(t) != 3 or any(int(d) < 1 for d in t):
+                raise ValueError(f"comp tiles must be 3 positive ints, got {t}")
 
     def digest(self) -> str:
-        blob = repr((self.orders, self.channel_counts, self.accum_dtypes))
+        blob = repr((self.orders, self.channel_counts, self.accum_dtypes, self.comp_tiles))
         return hashlib.sha256(blob.encode()).hexdigest()[:8]
 
 
 DEFAULT_SPACE = Space()
+JOINT_SPACE = Space(comp_tiles=COMP_TILE_LATTICE)
 
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One design point; ``num_channels`` is already the effective divisor."""
+    """One design point; ``num_channels`` and ``comp_tile`` are already the
+    effective (feasibility-clamped) values."""
 
     order: str
     num_channels: int
     accum_dtype: str
+    comp_tile: Tuple[int, int, int] = DEFAULT_TILE
 
     def channel(self, axis: str, base: Optional[BlockChannel] = None) -> BlockChannel:
         """Realize as a BlockChannel, inheriting non-tuned fields of ``base``."""
@@ -74,21 +122,113 @@ class Candidate:
             axis=axis,
             num_channels=self.num_channels,
             comm=dataclasses.replace(base.comm, order=self.order),
-            comp=dataclasses.replace(base.comp, accum_dtype=self.accum_dtype),
+            comp=dataclasses.replace(
+                base.comp, accum_dtype=self.accum_dtype, tile=tuple(self.comp_tile)
+            ),
         )
 
     def label(self) -> str:
-        return f"{self.order}/C={self.num_channels}/{self.accum_dtype}"
+        tag = f"{self.order}/C={self.num_channels}/{self.accum_dtype}"
+        if tuple(self.comp_tile) != DEFAULT_TILE:
+            tm, tn, tk = self.comp_tile
+            tag += f"/tile={tm}x{tn}x{tk}"
+        return tag
+
+
+def _gemm_dims(
+    kind: str, sig: Sequence[int], world: Optional[int], nch: int
+) -> Optional[Tuple[int, int, int]]:
+    """Per-step per-channel GEMM extents (m, n, k) the compute tile divides."""
+    if kind == "ag_matmul":
+        _, m_loc, k, n_loc = sig
+        return max(1, m_loc // max(1, nch)), n_loc, k
+    if kind == "matmul_rs":
+        _, m_glob, k_loc, n = sig
+        m = max(1, m_glob // world) if world else m_glob
+        return m, max(1, n // max(1, nch)), k_loc
+    return None
+
+
+def comp_tile_candidates(
+    kind: str,
+    sig: Optional[Sequence[int]],
+    *,
+    world: Optional[int] = None,
+    nch: int = 1,
+    accum_dtype: str = "float32",
+    space: Space = DEFAULT_SPACE,
+) -> Tuple[Tuple[int, int, int], ...]:
+    """Feasible (tm, tn, tk) points for one comm-half design point.
+
+    Each requested tile is clamped to divisors of the per-step GEMM extents
+    (largest-divisor rule, mirroring ``effective_channels``), then dropped if
+    a clamped dim is neither the full extent nor a multiple of the MXU
+    packing multiple for its position (sublane for tm/tk, lane for tn), or
+    if the tile's VMEM working set exceeds ``VMEM_TILE_FRACTION`` of the
+    probed budget.  ``DEFAULT_TILE`` is a sentinel ("backend-chosen
+    blocking", what every op runs with when untuned) and passes through
+    unclamped and unpruned.  A single-tile space is an *explicit* request
+    (``compile_overlap(..., comp=<CompSpec>)``): its point is clamped but
+    never pruned — the kernels themselves clamp identically, so honoring it
+    matches what an explicit channel would run.  Non-GEMM kinds and unknown
+    signatures collapse to the sentinel.
+    """
+    import jax.numpy as jnp
+
+    from repro import backend
+
+    if kind not in GEMM_TILE_KINDS or sig is None:
+        return (DEFAULT_TILE,)
+    dims = _gemm_dims(kind, tuple(int(s) for s in sig), world, nch)
+    m, n, k = dims
+    sub = backend.sublane_multiple(accum_dtype)
+    lane = backend.lane_multiple()
+    budget = int(backend.vmem_budget_bytes() * VMEM_TILE_FRACTION)
+    acc_bytes = jnp.dtype(accum_dtype).itemsize
+
+    def aligned(t: int, extent: int, mult: int) -> bool:
+        return t == extent or t % mult == 0
+
+    explicit = len(space.comp_tiles) == 1
+    out, seen = [], set()
+    for req in space.comp_tiles:
+        req = tuple(int(d) for d in req)
+        if req == DEFAULT_TILE:
+            tile = DEFAULT_TILE  # sentinel: never clamped, never pruned
+        else:
+            tile = resolve_tile(req, m, n, k)
+            tm, tn, tk = tile
+            if not explicit:
+                if not (aligned(tm, m, sub) and aligned(tn, n, lane) and aligned(tk, k, sub)):
+                    continue
+                if tile_footprint_bytes(tile, _IN_BYTES, acc_bytes) > budget:
+                    continue
+        if tile in seen:
+            continue
+        seen.add(tile)
+        out.append(tile)
+    if not out:
+        # every lattice point was pruned (tiny budget / hostile extents):
+        # fall back to the sentinel so the comm half stays tunable
+        out.append(DEFAULT_TILE)
+    return tuple(out)
 
 
 def enumerate_candidates(
-    kind: str, *, extent: Optional[int] = None, space: Space = DEFAULT_SPACE
+    kind: str,
+    *,
+    extent: Optional[int] = None,
+    space: Space = DEFAULT_SPACE,
+    sig: Optional[Sequence[int]] = None,
+    world: Optional[int] = None,
 ) -> Tuple[Candidate, ...]:
     """Deterministic feasible design points for ``kind``.
 
     ``extent`` is the chunked extent ``num_channels`` must divide (see
     :func:`chunk_extent`); when known, infeasible counts are clamped through
-    ``mapping.effective_channels`` and deduplicated.
+    ``mapping.effective_channels`` and deduplicated.  ``sig``/``world``
+    enable the compute-tile pruning (without them the comp axis passes
+    through unclamped — extent-only callers keep the comm-only behavior).
     """
     if kind not in TUNABLE_KINDS:
         raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
@@ -96,18 +236,26 @@ def enumerate_candidates(
     for order in space.orders:
         for req in space.channel_counts:
             if extent is not None:
-                with warnings.catch_warnings():
-                    # the clamp warning is for silent runtime fallbacks; an
-                    # enumerator probing feasibility is not a surprise
-                    warnings.simplefilter("ignore")
-                    nch = effective_channels(extent, req, kind=kind)
+                # warn=False: an enumerator probing feasibility is not a
+                # surprise; the one-shot clamp warning stays armed for
+                # genuine runtime fallbacks
+                nch = effective_channels(extent, req, kind=kind, warn=False)
             else:
                 nch = req
             for accum in space.accum_dtypes:
-                cand = Candidate(order=order, num_channels=nch, accum_dtype=accum)
-                if cand not in seen:
-                    seen.add(cand)
-                    out.append(cand)
+                if sig is not None:
+                    tiles = comp_tile_candidates(
+                        kind, sig, world=world, nch=nch, accum_dtype=accum, space=space
+                    )
+                else:
+                    tiles = tuple(dict.fromkeys(tuple(int(d) for d in t) for t in space.comp_tiles))
+                for tile in tiles:
+                    cand = Candidate(
+                        order=order, num_channels=nch, accum_dtype=accum, comp_tile=tile
+                    )
+                    if cand not in seen:
+                        seen.add(cand)
+                        out.append(cand)
     return tuple(out)
 
 

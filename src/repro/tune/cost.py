@@ -21,23 +21,53 @@ pure AG flows the input tiles travel in their own dtype, so the model is
 flow-dtype-neutral there and the enumeration order (float32 first) breaks the
 tie deterministically.
 
-Hardware constants come from ``launch.roofline.HW`` (TPU v5e) — the model
-ranks relative candidates, so absolute calibration is not critical.
+Compute-tile terms (the CompSpec half): for the GEMM kinds ``t_comp`` is
+itself a per-tile roofline over the realized (tm, tn, tk) blocking —
+
+    t_comp = max(FLOPs / (peak * mxu_eff), bytes_touched / hbm_bw)
+           + beta * n_tiles
+
+where ``mxu_eff`` penalizes tiles narrower than the 128-wide systolic array,
+``bytes_touched`` counts the A/B operand tiles streamed from VMEM/HBM per
+block plus one accumulator write per (tm, tn) block (bigger tiles amortize
+operand re-reads), and ``beta`` is the fixed per-tile issue cost (grid
+iteration + copy descriptors) that keeps tiles from shrinking forever.  The
+VMEM budget bounds them from above (pruned in ``tune/candidates``).
+
+``alpha`` and ``beta`` are the calibratable constants of the classic
+alpha-beta model: defaults below, env overrides ``REPRO_TUNE_ALPHA`` /
+``REPRO_TUNE_BETA`` (seconds) for calibration against a real TPU.  Hardware
+constants come from ``launch.roofline.HW`` (TPU v5e) and the
+``repro.backend`` MXU probe — the model ranks relative candidates, so
+absolute calibration is not critical.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
+from repro.core.comp_tiles import DEFAULT_TILE, largest_divisor, resolve_tile
 from repro.launch.roofline import HW
-from repro.tune.candidates import Candidate, chunk_extent
+from repro.tune.candidates import Candidate, GEMM_TILE_KINDS, _gemm_dims, chunk_extent
 
-__all__ = ["ALPHA_S", "step_terms", "predict_cost"]
+__all__ = [
+    "ALPHA_S",
+    "BETA_TILE_S",
+    "step_terms",
+    "realized_tile",
+    "comp_step_time",
+    "predict_cost",
+]
 
 # per-transfer launch/synchronization latency (seconds); the alpha of a
 # classic alpha-beta model.  ~1us per DMA descriptor + semaphore round.
-ALPHA_S = 1e-6
+ALPHA_S = float(os.environ.get("REPRO_TUNE_ALPHA", 1e-6))
+
+# fixed per-compute-tile issue cost (seconds): one grid iteration's control
+# flow + operand copy descriptors.  The beta of the compute half.
+BETA_TILE_S = float(os.environ.get("REPRO_TUNE_BETA", 2e-7))
 
 # bytes per element flowing tiles travel in (activations; bf16 on TPU)
 _TILE_BYTES = 2
@@ -81,9 +111,57 @@ def step_terms(
     return float(wire), float(flops)
 
 
+def realized_tile(
+    kind: str, sig: Tuple[int, ...], world: int, cand: Candidate
+) -> Tuple[int, int, int]:
+    """The blocking a candidate's compute tile actually executes as.
+
+    The DEFAULT_TILE sentinel realizes as what the fused kernels run when
+    untuned — whole-chunk rows and contraction, 128-wide output columns —
+    NOT as a literal 128^3 decomposition, so the default is never charged
+    per-tile costs its execution does not incur (a tuned tile must beat the
+    real thing).  Non-default tiles clamp like everywhere else.
+    """
+    m, n, k = _gemm_dims(kind, tuple(sig), world, max(1, cand.num_channels))
+    if tuple(cand.comp_tile) == DEFAULT_TILE:
+        return m, largest_divisor(n, 128), k
+    return resolve_tile(tuple(cand.comp_tile), m, n, k)
+
+
+def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
+    """Per-step compute time for one candidate, tile blocking included.
+
+    For the GEMM kinds the candidate's realized (tm, tn, tk) blocking (see
+    :func:`realized_tile`) drives a per-tile roofline (module docstring);
+    the other kinds keep the plain FLOPs-over-peak term.
+    """
+    _, flops = step_terms(kind, sig, world, cand.accum_dtype)
+    if kind not in GEMM_TILE_KINDS:
+        return flops / HW["peak_flops"]
+
+    from repro import backend
+
+    nch = max(1, cand.num_channels)
+    m, n, k = _gemm_dims(kind, tuple(sig), world, nch)
+    tm, tn, tk = realized_tile(kind, sig, world, cand)
+    mxu = backend.mxu_dim()
+    eff = (min(tm, mxu) / mxu) * (min(tn, mxu) / mxu)
+    lead = max(1, int(sig[0]))
+    # all C channels run their blocks each step
+    blocks_mn = (m // tm) * (n // tn) * nch * lead
+    n_tiles = blocks_mn * (k // tk)
+    # output tiles are written in the activation dtype — the MXU accumulates
+    # f32 natively, so the flow dtype must not bias the compute term (it
+    # already prices the wire for flows whose partials travel)
+    bytes_touched = (n_tiles * (tm * tk + tk * tn) + blocks_mn * tm * tn) * _TILE_BYTES
+    t_flops = flops / (HW["peak_flops"] * eff)
+    t_mem = bytes_touched / HW["hbm_bw"]
+    return max(t_flops, t_mem) + BETA_TILE_S * n_tiles
+
+
 def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
     """Predicted makespan (seconds) of one candidate; lower is better."""
-    wire, flops = step_terms(kind, sig, world, cand.accum_dtype)
+    wire, _ = step_terms(kind, sig, world, cand.accum_dtype)
     steps = world
 
     # per-link effective bytes for this tile order
@@ -91,7 +169,7 @@ def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -
     hops = max(1.0, world / 4.0) if cand.order == "all2all" else 1.0
 
     t_comm = wire * hops / (HW["link_bw"] * dirs)
-    t_comp = flops / HW["peak_flops"]
+    t_comp = comp_step_time(kind, sig, world, cand)
 
     steady = (steps - 1) * max(t_comm, t_comp)
     fill = (t_comm + t_comp) / cand.num_channels
@@ -103,9 +181,13 @@ def explain(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> Dic
     """Itemized terms for reports/benchmarks (same math as predict_cost)."""
     wire, flops = step_terms(kind, sig, world, cand.accum_dtype)
     ext = chunk_extent(kind, sig)
-    return {
+    out = {
         "wire_bytes_per_step": wire,
         "flops_per_step": flops,
         "chunk_extent": float(ext),
+        "comp_step_s": comp_step_time(kind, sig, world, cand),
         "predicted_s": predict_cost(kind, sig, world, cand),
     }
+    if kind in GEMM_TILE_KINDS:
+        out["realized_tile"] = realized_tile(kind, sig, world, cand)
+    return out

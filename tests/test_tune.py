@@ -1,14 +1,18 @@
 """Autotuner subsystem: enumeration, cache contract, channel="auto" parity.
 
-The contract under test (ISSUE 3 acceptance):
+The contract under test (ISSUE 3 + ISSUE 4 acceptance):
   * candidate enumeration is deterministic and honors
     ``mapping.effective_channels`` divisibility;
-  * cache entries survive a save/load round-trip (memo AND disk);
+  * the joint space's compute-tile lattice respects shape-divisibility,
+    MXU-alignment, and VMEM-footprint pruning;
+  * cache entries survive a save/load round-trip (memo AND disk), and v1
+    (comm-only) records re-tune under the v2 joint schema instead of
+    crashing;
   * a mesh-fingerprint mismatch invalidates (re-tunes) instead of silently
     reusing another mesh's winner;
   * a fingerprint hit never re-measures;
-  * ``channel="auto"`` output is parity-equal to the explicit-``BlockChannel``
-    path for all four kinds on the 4-rank emulated mesh.
+  * ``channel="auto"`` / ``comp="auto"`` output is parity-equal to the
+    default-tile path on both backends on the 4-rank emulated mesh.
 """
 import dataclasses
 import json
@@ -21,7 +25,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import tune
 from repro.compat import make_mesh, shard_map
-from repro.core import BlockChannel, compile_overlap, effective_channels
+from repro.core import BlockChannel, CompSpec, compile_overlap, effective_channels
+from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot
 from repro.core.moe_overlap import moe_router
 from repro.tune import cache as tune_cache
 from repro.tune import measure as tune_measure
@@ -84,6 +89,70 @@ def test_signature_canonicalization():
     assert att == (1, 4, 2, 16, 8)
     sig = tune.signature("ag_moe", [(16, 8), (16, 2), (16, 2), (4, 8, 32), (4, 16, 8)])
     assert sig == (16, 8, 2, 4, 16)
+
+
+# ---- joint space: compute-tile lattice (ISSUE 4) ----------------------------
+
+
+def test_joint_enumeration_divisibility():
+    sig = (1, 256, 512, 384)  # (lead, m_loc, k, n_loc); n=384 defeats tn=256
+    cands = tune.enumerate_candidates(
+        "ag_matmul", extent=256, space=tune.JOINT_SPACE, sig=sig, world=4
+    )
+    assert cands == tune.enumerate_candidates(
+        "ag_matmul", extent=256, space=tune.JOINT_SPACE, sig=sig, world=4
+    )  # deterministic
+    for c in cands:
+        tm, tn, tk = c.comp_tile
+        if c.comp_tile == DEFAULT_TILE:
+            continue  # sentinel: backend-chosen blocking, never clamped
+        m_sub = 256 // c.num_channels
+        assert m_sub % tm == 0 and 384 % tn == 0 and 512 % tk == 0
+        # MXU alignment: clamped dims are full-extent or packing multiples
+        assert tn == 384 or tn % 128 == 0
+    # the 256-request on n=384 clamps to 192, which is neither the full
+    # extent nor lane-aligned — the pruner must have dropped it
+    assert all(c.comp_tile[1] != 192 for c in cands)
+    # a genuinely non-default tile survives for this shape
+    assert any(c.comp_tile != DEFAULT_TILE for c in cands)
+
+
+def test_joint_enumeration_vmem_pruning(monkeypatch):
+    sig = (1, 256, 512, 256)
+    full = tune.comp_tile_candidates("ag_matmul", sig, world=4, space=tune.JOINT_SPACE)
+    assert len(full) > 1
+    monkeypatch.setenv("REPRO_VMEM_BYTES", "1000")  # nothing fits
+    pruned = tune.comp_tile_candidates("ag_matmul", sig, world=4, space=tune.JOINT_SPACE)
+    assert pruned == (DEFAULT_TILE,)  # only the unprunable sentinel survives
+
+
+def test_joint_space_collapses_for_non_gemm_kinds():
+    # attention/MoE consumers keep the backend-chosen tile: the joint space
+    # must not multiply their candidate count
+    sig = SIGS["ag_attention"]
+    cands = tune.enumerate_candidates(
+        "ag_attention", extent=16, space=tune.JOINT_SPACE, sig=sig, world=R
+    )
+    assert len(cands) == 18
+    assert all(c.comp_tile == DEFAULT_TILE for c in cands)
+
+
+def test_joint_winner_differs_from_default_tile(mesh4):
+    # the acceptance shape: big enough that explicit MXU blocking beats the
+    # 128^3 default under the per-tile cost terms
+    res = tune.autotune(
+        "ag_matmul", signature=(1, 256, 512, 256), mesh=mesh4, space=tune.JOINT_SPACE
+    )
+    assert res.candidate.comp_tile != DEFAULT_TILE
+    assert res.channel.comp.tile == res.candidate.comp_tile
+    assert "tile=" in res.candidate.label()
+
+
+def test_blocked_dot_matches_plain_dot():
+    a = np.asarray(jax.random.normal(KEY, (2, 24, 32)), np.float32)
+    b = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (32, 16)), np.float32)
+    got = np.asarray(blocked_dot(jax.numpy.asarray(a), jax.numpy.asarray(b), (8, 8, 8)))
+    np.testing.assert_allclose(got, a @ b, atol=1e-5, rtol=1e-5)
 
 
 # ---- cache contract ---------------------------------------------------------
@@ -213,11 +282,42 @@ def test_store_merges_external_writes(mesh4):
     assert len(entries) == 3
 
 
+def test_cache_v1_schema_migration_retunes(mesh4):
+    # a PR-3 cache file (comm-only records: no "schema", no "comp_tile")
+    # must re-tune under the v2 joint schema, never crash or half-apply
+    first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    digest = tune_cache.fingerprint_digest(first.fingerprint)
+    path = os.path.join(tune_cache.cache_dir(), digest + ".json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    for rec in payload["entries"].values():  # downgrade every record to v1
+        rec.pop("schema", None)
+        rec.pop("comp_tile", None)
+    with open(path, "w") as fh:
+        json.dump(payload, fh)
+
+    tune_cache.clear_memo()
+    redo = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert not redo.cache_hit  # v1 record rejected -> re-tuned
+    assert redo.candidate == first.candidate
+
+    # the re-tune healed the record to the current schema
+    tune_cache.clear_memo()
+    healed = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert healed.cache_hit
+    with open(path) as fh:
+        entries = json.load(fh)["entries"]
+    assert all(rec.get("schema") == tune.CACHE_SCHEMA for rec in entries.values())
+    assert all("comp_tile" in rec for rec in entries.values())
+
+
 def test_auto_keeps_unsupported_backend_loud():
-    # PR-2 contract: unsupported (kind, backend) raises at BUILD time — the
-    # auto path must not defer it into the first trace
+    # PR-2 contract: unsupported (kind, backend) raises at BUILD time — no
+    # resolution mode may defer it into the first trace
     with pytest.raises(NotImplementedError, match="copy engine"):
         compile_overlap("ag_attention", "auto", backend="pallas")
+    with pytest.raises(NotImplementedError, match="copy engine"):
+        compile_overlap("ag_attention", BlockChannel(axis="model"), comp="auto", backend="pallas")
 
 
 def test_space_is_part_of_entry_key(mesh4):
@@ -316,6 +416,112 @@ def test_channel_auto_parity(kind, mesh4):
     else:
         tol = dict(atol=8e-2, rtol=3e-2)
     np.testing.assert_allclose(got, base, **tol)
+
+
+def test_comp_auto_parity_xla(mesh4):
+    # comp="auto" (joint search) must match the default-tile lowering; the
+    # shape is big enough that the winner's tile genuinely differs
+    m_loc, k, n = 256, 512, 256
+    x = jax.random.normal(KEY, (R * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    specs = dict(in_specs=(P("model", None), P(None, None)), out_specs=P(None, None))
+
+    joint = jax.jit(shard_map(compile_overlap("ag_matmul", "auto", comp="auto"), mesh4, **specs))
+    got = np.asarray(joint(x, w), np.float32)  # resolves the joint winner
+
+    res = tune.autotune("ag_matmul", signature=(1, m_loc, k, n), world=R, space=tune.JOINT_SPACE)
+    assert res.cache_hit and res.candidate.comp_tile != DEFAULT_TILE  # joint hit
+
+    default = res.channel.with_(comp=dataclasses.replace(res.channel.comp, tile=DEFAULT_TILE))
+    ref_fn = jax.jit(shard_map(compile_overlap("ag_matmul", default), mesh4, **specs))
+    want = np.asarray(ref_fn(x, w), np.float32)
+    if res.candidate.accum_dtype == "float32":
+        tol = dict(atol=2e-4, rtol=2e-3)
+    else:
+        tol = dict(atol=8e-2, rtol=3e-2)
+    np.testing.assert_allclose(got, want, **tol)
+
+
+def test_comp_explicit_tile_parity_pallas(mesh4):
+    # the fused Pallas kernels must honor a non-default (tm, tn, tk); parity
+    # vs the default-tile kernel on both fused kinds
+    m_loc, k, n = 16, 32, 32
+    x = jax.random.normal(KEY, (R * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n))
+    specs = dict(in_specs=(P("model", None), P(None, None)), out_specs=P(None, None))
+
+    def pallas_fn(comp):
+        ch = BlockChannel(axis="model")
+        fn = compile_overlap("ag_matmul", ch, comp=comp, backend="pallas", world_size=R)
+        return jax.jit(shard_map(fn, mesh4, **specs))
+
+    tiled = np.asarray(pallas_fn((8, 16, 16))(x, w), np.float32)
+    ref = np.asarray(pallas_fn(None)(x, w), np.float32)
+    np.testing.assert_allclose(tiled, ref, atol=2e-4, rtol=2e-3)
+
+    xr = jax.random.normal(KEY, (R * 16, R * 8))
+    wr = jax.random.normal(jax.random.PRNGKey(3), (R * 8, 32))
+    rs_specs = dict(in_specs=(P(None, "model"), P("model", None)), out_specs=P("model", None))
+
+    def rs_fn(comp):
+        ch = BlockChannel(axis="model")
+        fn = compile_overlap("matmul_rs", ch, comp=comp, backend="pallas", world_size=R)
+        return jax.jit(shard_map(fn, mesh4, **rs_specs))
+
+    tiled_rs = np.asarray(rs_fn((8, 16, 4))(xr, wr), np.float32)
+    ref_rs = np.asarray(rs_fn(None)(xr, wr), np.float32)
+    np.testing.assert_allclose(tiled_rs, ref_rs, atol=2e-4, rtol=2e-3)
+
+
+def test_comp_auto_parity_pallas(mesh4):
+    # joint resolution through the fused backend: the tuned winner (whatever
+    # tile it picks) must stay parity-equal to the plain local matmul
+    m_loc, k, n = 16, 32, 32
+    x = jax.random.normal(KEY, (R * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n))
+    fn = compile_overlap(
+        "ag_matmul", "auto", comp="auto", backend="pallas", mesh=mesh4, world_size=R
+    )
+    specs = dict(in_specs=(P("model", None), P(None, None)), out_specs=P(None, None))
+    sm = jax.jit(shard_map(fn, mesh4, **specs))
+    np.testing.assert_allclose(np.asarray(sm(x, w)), np.asarray(x @ w), atol=2e-4, rtol=2e-3)
+
+
+def test_comp_rejects_bad_values():
+    with pytest.raises(ValueError, match="comp must be"):
+        compile_overlap("ag_matmul", BlockChannel(axis="model"), comp="fastest")
+    with pytest.raises(ValueError, match="comp must be"):
+        compile_overlap("ag_matmul", "auto", comp=(128, 128))
+    # explicit CompSpec replaces the whole compute half (tile AND flow dtype)
+    fn = compile_overlap("ag_matmul", BlockChannel(axis="model"), comp=CompSpec(tile=(64, 64, 64)))
+    assert fn.keywords["channel"].comp.tile == (64, 64, 64)
+    assert fn.keywords["channel"].comp.accum_dtype == "float32"
+    # a bare tuple pins the TILE only — the channel's flow dtype survives
+    bf16 = BlockChannel(axis="model", comp=CompSpec(accum_dtype="bfloat16"))
+    fn2 = compile_overlap("matmul_rs", bf16, comp=(64, 64, 64))
+    assert fn2.keywords["channel"].comp.tile == (64, 64, 64)
+    assert fn2.keywords["channel"].comp.accum_dtype == "bfloat16"
+
+
+def test_auto_channel_with_pinned_comp_honors_tile(mesh4):
+    # channel="auto" + explicit comp: the comm half is searched, the tile is
+    # pinned — the resolved lowering must actually carry the (clamped)
+    # explicit tile, not the backend-chosen sentinel
+    m_loc, k, n = 16, 32, 32
+    x = jax.random.normal(KEY, (R * m_loc, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    specs = dict(in_specs=(P("model", None), P(None, None)), out_specs=P(None, None))
+    fn = jax.jit(shard_map(compile_overlap("ag_matmul", "auto", comp=(8, 16, 16)), mesh4, **specs))
+    np.testing.assert_allclose(np.asarray(fn(x, w)), np.asarray(x @ w), atol=2e-4, rtol=2e-3)
+    res = tune.autotune(
+        "ag_matmul",
+        signature=(1, m_loc, k, n),
+        world=R,
+        space=tune.Space(comp_tiles=((8, 16, 16),)),  # tile pinned, rest swept
+    )
+    assert res.cache_hit  # the traced call resolved exactly this pinned space
+    assert res.candidate.comp_tile == (8, 16, 16)
+    assert res.channel.comp.tile == (8, 16, 16)
 
 
 def test_auto_resolves_without_mesh_inside_shard_map(mesh4):
