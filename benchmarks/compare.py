@@ -17,14 +17,20 @@ Rules, applied to every ``BENCH_*.json`` present in the baseline:
     speedups and derived ratios are never gated (they move with the
     baseline term).  CI-runner noise above the tolerance is exactly what
     the gate exists to surface — re-run the job if you believe it is noise.
-  * invariants — candidate counts (``considered``) compare EXACTLY: the
-    design space may not shrink or grow without the reviewer seeing it (an
-    intentional space change makes this gate red until it merges to main
-    and becomes the new baseline; say so in the PR).  Boolean health flags
-    (``cache_round_trip``, ``ok``) may not regress True -> False.
-  * coverage — an entry present in the baseline but missing from the
-    current run is a failure (a silently dropped design point); entries new
-    in the current run are reported as notices only.
+  * invariants — candidate counts (``considered``) and the measured-sweep
+    pruning ledger (``total``/``screened``/``timed``/``pruned``) compare
+    EXACTLY when present in BOTH runs: the design space and the pruning
+    behavior may not drift without the reviewer seeing it (an intentional
+    change makes this gate red until it merges to main and becomes the new
+    baseline; say so in the PR).  Boolean health flags (``cache_round_trip``,
+    ``ok``) may not regress True -> False.
+  * coverage — asymmetric by design: an entry present in the baseline but
+    missing from the current run is a FAILURE (a silently dropped design
+    point), but an entry present only in the current run — a new kind, a
+    new stat block — is a "new entry" NOTICE, never a failure, even for the
+    exact-gated invariant leaves above: a PR that widens coverage must not
+    be punished by its own new entries.  New subtrees are reported once,
+    not once per leaf.
 
 No baseline (first run on a fresh repo/fork, expired artifacts) passes with
 a loud notice — the gate arms itself on the next main-branch run.
@@ -37,6 +43,13 @@ import json
 import os
 import sys
 from typing import Dict, Tuple
+
+# leaf names gated exactly when present in both runs; a key carrying one of
+# these that exists only in the current run is a "new entry" notice instead
+EXACT_LEAVES = ("considered", "total", "screened", "timed", "pruned")
+
+# boolean health flags that may never regress True -> False
+HEALTH_LEAVES = ("cache_round_trip", "ok")
 
 
 def flatten(obj, prefix: str = "") -> Dict[str, object]:
@@ -90,19 +103,29 @@ def compare_file(
                     f"(+{100.0 * (c - b) / max(b, 1e-9):.0f}%, tolerance "
                     f"{100.0 * tolerance:.0f}%)"
                 )
-        elif leaf == "considered":
+        elif leaf in EXACT_LEAVES:
             if cval != bval:
                 failures.append(
-                    f"{tag}: candidate count changed {bval} -> {cval} (design "
-                    "space drift; if intentional, say so in the PR — this "
-                    "gate stays red until the change is the main baseline)"
+                    f"{tag}: exact invariant changed {bval} -> {cval} (design-"
+                    "space/pruning drift; if intentional, say so in the PR — "
+                    "this gate stays red until the change is the main baseline)"
                 )
-        elif leaf in ("cache_round_trip", "ok"):
+        elif leaf in HEALTH_LEAVES:
             if bool(bval) and not bool(cval):
                 failures.append(f"{tag}: health flag regressed True -> False")
-    for key in cur:
-        if key not in base:
-            notices.append(f"{name}:{key}: new in this run (not in baseline)")
+    # entries only the PR run has: a "new entry" notice, NEVER a failure —
+    # grouped per subtree so a new kind/stat block reports once, not per leaf
+    new = [key for key in cur if key not in base]
+    groups: Dict[str, int] = {}
+    for key in new:
+        prefix = key.rsplit("/", 1)[0] if "/" in key else key
+        groups[prefix] = groups.get(prefix, 0) + 1
+    for prefix in sorted(groups):
+        noun = "leaf" if groups[prefix] == 1 else "leaves"
+        notices.append(
+            f"{name}:{prefix}: new entry ({groups[prefix]} {noun} not in the "
+            "baseline — gated once a main run makes it the baseline)"
+        )
     return failures, notices
 
 

@@ -39,12 +39,26 @@ DEFAULT_TILE = (128, 128, 128)
 
 
 def largest_divisor(extent: int, cap: int) -> int:
-    """Largest divisor of ``extent`` that is <= ``cap`` (>= 1)."""
+    """Largest divisor of ``extent`` that is <= ``cap`` (>= 1).
+
+    Divisors are enumerated in factor pairs up to ``sqrt(extent)`` —
+    O(sqrt(extent)) always — instead of decrementing from ``cap``, which is
+    O(extent) when ``extent`` is prime and ``cap`` is large (a vocab-sized
+    prime dim would spin for seconds per lattice probe).
+    """
     extent = max(1, int(extent))
-    c = min(max(1, int(cap)), extent)
-    while extent % c:
-        c -= 1
-    return c
+    cap = min(max(1, int(cap)), extent)
+    best = 1
+    d = 1
+    while d * d <= extent:
+        if extent % d == 0:
+            if d <= cap and d > best:
+                best = d
+            pair = extent // d
+            if pair <= cap and pair > best:
+                best = pair
+        d += 1
+    return best
 
 
 def resolve_tile(tile: Tuple[int, int, int], m: int, n: int, k: int) -> Tuple[int, int, int]:

@@ -27,7 +27,7 @@ group-GEMM with explicit dynamic mapping tables instead.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ from jax import lax
 
 from repro.backend import axis_size
 from repro.core.channels import BlockChannel
+from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot
 from repro.core.overlap import _plan_for, run_plan
 
 __all__ = ["ag_moe", "ag_moe_baseline", "local_expert_ffn", "moe_router"]
@@ -73,11 +74,27 @@ def _dispatch_tables(local_ids, valid, e_loc: int, cap: int, dtype):
     return disp.reshape(m, k, e_loc, cap).astype(dtype)
 
 
-def local_expert_ffn(x, topk_ids, topk_w, w_gu, w_down, *, e_lo: int, cap: int, act=jax.nn.silu):
+def local_expert_ffn(
+    x,
+    topk_ids,
+    topk_w,
+    w_gu,
+    w_down,
+    *,
+    e_lo: int,
+    cap: int,
+    act=jax.nn.silu,
+    tile: Optional[Tuple[int, int, int]] = None,
+):
     """FFN through the experts hosted locally; zeros for foreign-routed tokens.
 
     x: [m, d]; topk_ids/topk_w: [m, k]; w_gu: [E_loc, d, 2f] fused gate+up;
     w_down: [E_loc, f, d].  Returns [m, d] partial combined output.
+
+    ``tile``: an optional CompSpec (tm, tn, tk) — non-default tiles run the
+    per-expert GEMMs through ``core/comp_tiles.blocked_dot`` (clamped per
+    extents), the same decomposition the Pallas grouped-matmul kernel
+    blocks with, so a tuned MoE tile means the same thing on both backends.
     """
     e_loc = w_gu.shape[0]
     local = topk_ids - e_lo
@@ -90,9 +107,19 @@ def local_expert_ffn(x, topk_ids, topk_w, w_gu, w_down, *, e_lo: int, cap: int, 
 
     x_e = jnp.einsum("mec,md->ecd", disp, x)  # gather to [E_loc, cap, d]
     f = w_down.shape[1]
-    h = jnp.einsum("ecd,edf->ecf", x_e, w_gu, preferred_element_type=jnp.float32)
-    h = (act(h[..., :f]) * h[..., f:]).astype(x.dtype)
-    y_e = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32)
+    if tile is not None and tuple(tile) != DEFAULT_TILE:
+        tile = tuple(tile)
+
+        def expert_dot(a, b):
+            return blocked_dot(a, b, tile, accum=jnp.float32)
+
+        h = jax.vmap(expert_dot)(x_e, w_gu)  # [E_loc, cap, 2f] f32
+        h = (act(h[..., :f]) * h[..., f:]).astype(x.dtype)
+        y_e = jax.vmap(expert_dot)(h, w_down)
+    else:
+        h = jnp.einsum("ecd,edf->ecf", x_e, w_gu, preferred_element_type=jnp.float32)
+        h = (act(h[..., :f]) * h[..., f:]).astype(x.dtype)
+        y_e = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32)
     return jnp.einsum("mec,ecd->md", comb, y_e.astype(x.dtype))
 
 
@@ -125,6 +152,7 @@ def ag_moe(
     m_sub = m_loc // plan.num_channels
     cap = _capacity(m_sub, k, e_total, capacity_factor)
     flow = jnp.dtype(plan.flow_dtype)
+    comp_tile = tuple(channel.comp.tile)  # per-expert GEMM blocking (CompSpec)
     e_lo = rank * e_loc
 
     # token tiles + their dynamic routing tables flow together per channel
@@ -139,7 +167,9 @@ def ag_moe(
 
     def moe_tile(ctx, tile, _carry):
         xs, ids, wts = tile
-        part = local_expert_ffn(xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act)
+        part = local_expert_ffn(
+            xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act, tile=comp_tile
+        )
         return part.astype(flow)  # reduction travels in the flow dtype
 
     accs = run_plan(plan, moe_tile, state=chunks)

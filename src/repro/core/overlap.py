@@ -14,11 +14,15 @@ There is exactly ONE schedule loop here: :func:`run_plan` executes any
 :class:`~repro.core.plan.TilePlan` — every workload kind is a per-tile compute
 callback plugged into it (GEMM tile, online-softmax tile, grouped-GEMM tile in
 ``core/moe_overlap.py``), so ``CommSpec.order``, ``num_channels``, and
-``CompSpec.accum_dtype`` behave identically across all kinds.  The GEMM
-callbacks additionally honor a non-default ``CompSpec.tile`` by computing in
-explicit (tm, tn, tk) blocks (``core/comp_tiles.blocked_dot``) — the same
-decomposition the fused Pallas kernels use, so a tuned tile means the same
-thing on both backends.
+``CompSpec.accum_dtype`` behave identically across all kinds.  Every
+callback additionally honors a non-default ``CompSpec.tile``: the GEMM
+callbacks compute in explicit (tm, tn, tk) blocks
+(``core/comp_tiles.blocked_dot``), the attention callback maps (tm, tk)
+onto (block_q, block_kv) of its online-softmax update, and the MoE callback
+(``core/moe_overlap.py``) blocks its per-expert grouped GEMMs — the same
+decompositions the fused Pallas kernels use (``kernels/flash_attention.py``,
+``kernels/grouped_matmul.py``), so a tuned tile means the same thing on
+both backends.
 
 Every function here is a *per-shard* function: call it inside ``shard_map``
 (the model layers do, via ``parallel.ParallelContext``).
@@ -44,7 +48,7 @@ from jax import lax
 
 from repro.backend import axis_size
 from repro.core.channels import BlockChannel
-from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot
+from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
 from repro.core.plan import TilePlan, build_plan
 
@@ -342,58 +346,79 @@ def ring_attention(
 ):
     """Overlapped sequence-parallel attention with online softmax.
 
-    Per-shard shapes: ``q``: [B, H, s_loc, D], ``k``/``v``: [B, Hkv, s_loc, D]
-    (sequence sharded over ``axis``).  KV tiles rotate per the plan's order
-    (``num_channels`` splits each shard's KV along the sequence into
-    independent flows) while flash-style online softmax consumes each arrived
-    tile — the TileLink AG-KV + flash-attention kernel with the AG mapped to
-    the ICI DMA engine.  Online-softmax statistics stay fp32; the score and
-    PV contractions accumulate in ``channel.comp.accum_dtype``.
+    Per-shard shapes: ``k``/``v``: [B, Hkv, s_loc, D] (sequence sharded over
+    ``axis``); ``q``: [B, H, s_loc, D] (queries sharded alongside the KV) OR
+    [B, H, R * s_loc, D] (queries already gathered — the AG-Q + ring-KV form
+    the TP-sharded nn layer uses, where every rank attends the full query
+    range with its local heads while only the KV rotates).  KV tiles rotate
+    per the plan's order (``num_channels`` splits each shard's KV along the
+    sequence into independent flows) while flash-style online softmax
+    consumes each arrived tile — the TileLink AG-KV + flash-attention kernel
+    with the AG mapped to the ICI DMA engine.  Online-softmax statistics
+    stay fp32; the score and PV contractions accumulate in
+    ``channel.comp.accum_dtype``.  A non-default ``channel.comp.tile``
+    blocks the consumer: (tm, tk) become (block_q, block_kv), clamped to
+    divisors of the query/KV extents — the same blocking
+    ``kernels/flash_attention.py`` derives from a tile.
 
     ``causal`` masks with *global* positions (rank-offset aware).
     ``window`` (sliding-window attention) masks keys outside the window.
     """
     channel = channel or BlockChannel(axis=axis)
     rank = lax.axis_index(axis)
-    b, h, s_loc, d = q.shape
-    hkv = k.shape[1]
+    b, h, sq, d = q.shape
+    hkv, s_loc = k.shape[1], k.shape[2]
     rep = h // hkv
     scale = scale if scale is not None else d**-0.5
 
     plan = _plan_for("ag_attention", channel, axis, s_loc)
+    if sq == s_loc:
+        q_off = rank * s_loc  # queries sharded like the KV: rank offset
+    elif sq == plan.world * s_loc:
+        q_off = 0  # gathered queries: the full global range
+    else:
+        raise ValueError(
+            f"ring_attention: query rows {sq} must equal the KV shard rows "
+            f"{s_loc} or the gathered extent {plan.world * s_loc}"
+        )
     s_sub = s_loc // plan.num_channels
     accum = jnp.dtype(channel.comp.accum_dtype)
+    comp_tile = tuple(channel.comp.tile)
+    if comp_tile != DEFAULT_TILE:
+        # CompSpec tile: (tm, ·, tk) -> (block_q, block_kv), clamped by the
+        # same largest-divisor rule every consumer applies; the default
+        # sentinel keeps the whole-chunk update below
+        bq = largest_divisor(sq, comp_tile[0])
+        bk = largest_divisor(s_sub, comp_tile[2])
+    else:
+        bq, bk = sq, s_sub
 
     q32 = (q * scale).astype(jnp.float32)
-    m_i = jnp.full((b, h, s_loc, 1), -jnp.inf, jnp.float32)
-    l_i = jnp.zeros((b, h, s_loc, 1), jnp.float32)
-    o_i = jnp.zeros((b, h, s_loc, d), jnp.float32)
+    m_i = jnp.full((b, h, sq, 1), -jnp.inf, jnp.float32)
+    l_i = jnp.zeros((b, h, sq, 1), jnp.float32)
+    o_i = jnp.zeros((b, h, sq, d), jnp.float32)
 
-    q_pos = rank * s_loc + jnp.arange(s_loc)  # global query positions
+    q_pos = q_off + jnp.arange(sq)  # global query positions
 
     chunks = [
         (k[:, :, c * s_sub : (c + 1) * s_sub], v[:, :, c * s_sub : (c + 1) * s_sub])
         for c in range(plan.num_channels)
     ]
 
-    def softmax_tile(ctx, kv, carry):
-        kc, vc = kv
+    def online_update(q_blk, qp, kr, vr, kp, carry):
+        """One (block_q, block_kv) online-softmax update of (m, l, o)."""
         m_i, l_i, o_i = carry
-        k_pos = ctx.src * s_loc + ctx.channel * s_sub + jnp.arange(s_sub)
-
-        kr = jnp.repeat(kc, rep, axis=1) if rep > 1 else kc
-        vr = jnp.repeat(vc, rep, axis=1) if rep > 1 else vc
         scores = jnp.einsum(
             "bhqd,bhkd->bhqk",
-            q32,
+            q_blk,
             kr.astype(jnp.float32),
             preferred_element_type=accum,
         ).astype(jnp.float32)
         mask = None
         if causal:
-            mask = q_pos[:, None] >= k_pos[None, :]
+            mask = qp[:, None] >= kp[None, :]
         if window is not None:
-            wmask = (q_pos[:, None] - k_pos[None, :]) < window
+            wmask = (qp[:, None] - kp[None, :]) < window
             mask = wmask if mask is None else (mask & wmask)
         if mask is not None:
             scores = jnp.where(mask[None, None], scores, -jnp.inf)
@@ -411,6 +436,34 @@ def ring_attention(
             preferred_element_type=jnp.float32,
         )
         return m_new, l_new, o_new
+
+    def softmax_tile(ctx, kv, carry):
+        kc, vc = kv
+        k_pos = ctx.src * s_loc + ctx.channel * s_sub + jnp.arange(s_sub)
+        kr = jnp.repeat(kc, rep, axis=1) if rep > 1 else kc
+        vr = jnp.repeat(vc, rep, axis=1) if rep > 1 else vc
+        if bq == sq and bk == s_sub:
+            return online_update(q32, q_pos, kr, vr, k_pos, carry)
+        # blocked consumer (the tuned CompSpec half): query blocks update
+        # independently; KV blocks fold sequentially through the same
+        # online-softmax rescaling, so any (bq, bk) computes the same result
+        m_i, l_i, o_i = carry
+        m_out, l_out, o_out = [], [], []
+        for qi in range(sq // bq):
+            qs = slice(qi * bq, (qi + 1) * bq)
+            blk = (m_i[:, :, qs], l_i[:, :, qs], o_i[:, :, qs])
+            for ki in range(s_sub // bk):
+                ks = slice(ki * bk, (ki + 1) * bk)
+                blk = online_update(
+                    q32[:, :, qs], q_pos[qs], kr[:, :, ks], vr[:, :, ks], k_pos[ks], blk
+                )
+            m_out.append(blk[0])
+            l_out.append(blk[1])
+            o_out.append(blk[2])
+        def cat(xs):
+            return xs[0] if len(xs) == 1 else jnp.concatenate(xs, axis=2)
+
+        return cat(m_out), cat(l_out), cat(o_out)
 
     m_f, l_f, o_f = run_plan(plan, softmax_tile, state=chunks, carry=(m_i, l_i, o_i))
     out = o_f / jnp.maximum(l_f, 1e-30)

@@ -10,13 +10,14 @@ innermost; m/l/acc VMEM scratch persists across the KV dimension.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import backend
 from repro.backend import pl
+from repro.core.comp_tiles import DEFAULT_TILE, largest_divisor
 
 __all__ = ["flash_attention"]
 
@@ -95,7 +96,7 @@ def _fa_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"),
+    static_argnames=("causal", "window", "scale", "bq", "bk", "tile", "interpret"),
 )
 def flash_attention(
     q,
@@ -107,16 +108,26 @@ def flash_attention(
     scale: Optional[float] = None,
     bq=128,
     bk=128,
+    tile: Optional[Tuple[int, int, int]] = None,
     interpret=False,
 ):
-    """q: [BH, Sq, D], k/v: [BHkv, Sk, D] -> [BH, Sq, D]."""
+    """q: [BH, Sq, D], k/v: [BHkv, Sk, D] -> [BH, Sq, D].
+
+    ``tile``: an optional CompSpec (tm, tn, tk) — the tuner's compute half.
+    A non-default tile derives ``block_q``/``block_kv`` from (tm, tk),
+    overriding ``bq``/``bk``; the (128, 128, 128) default is the
+    backend-chosen sentinel and leaves them untouched.  Blocks clamp to
+    divisors of the sequence extents (the shared largest-divisor rule), so
+    any tuned tile runs instead of refusing on an awkward shape.
+    """
     bh, sq, d = q.shape
     bhkv, sk, _ = k.shape
     rep = bh // bhkv
     scale = float(scale if scale is not None else d**-0.5)
-    bq = min(bq, sq)
-    bk = min(bk, sk)
-    assert sq % bq == 0 and sk % bk == 0
+    if tile is not None and tuple(tile) != DEFAULT_TILE:
+        bq, bk = int(tile[0]), int(tile[2])
+    bq = largest_divisor(sq, min(bq, sq))
+    bk = largest_divisor(sk, min(bk, sk))
     n_kv = sk // bk
 
     kern = functools.partial(

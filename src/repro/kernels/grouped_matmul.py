@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro import backend
 from repro.backend import pl
+from repro.core.comp_tiles import largest_divisor
 
 __all__ = ["grouped_matmul"]
 
@@ -28,13 +29,19 @@ def grouped_matmul(x, w, tile_expert, *, tile=(128, 128, 128), out_dtype=None, i
     """x: [M, K] (expert-sorted), w: [E, K, N], tile_expert: [M // bm] i32.
 
     Returns [M, N] with rows of tile t multiplied by w[tile_expert[t]].
+
+    ``tile`` accepts any tuner-resolved (tm, tn, tk): each dim clamps to the
+    largest divisor of its extent (the shared CompSpec degrade rule) instead
+    of refusing non-dividing requests — note the row tile must still match
+    the ``tile_expert`` table the mapping was built with.
     """
     out_dtype = out_dtype or x.dtype
     m, k = x.shape
     _, k2, n = w.shape
     assert k == k2
-    bm, bn, bk = (min(tile[0], m), min(tile[1], n), min(tile[2], k))
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    bm = largest_divisor(m, min(int(tile[0]), m))
+    bn = largest_divisor(n, min(int(tile[1]), n))
+    bk = largest_divisor(k, min(int(tile[2]), k))
     assert tile_expert.shape == (m // bm,), (tile_expert.shape, m, bm)
     n_k = k // bk
 

@@ -31,8 +31,8 @@ from repro.nn.layers import (
 )
 
 __all__ = [
-    "init", "specs", "grad_masks", "apply_seq", "apply_decode", "init_cache",
-    "chunked_attention",
+    "init", "specs", "grad_masks", "apply_seq", "apply_seq_ring", "apply_decode",
+    "init_cache", "chunked_attention",
 ]
 
 
@@ -225,6 +225,64 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
     if return_kv:
         return y, {"k": k, "v": v}
     return y
+
+
+def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
+                   rope_theta=None, tune=False):
+    """AG-Q + ring-KV attention block body (paper Fig. 6 layer form).
+
+    Where :func:`apply_seq` gathers the WHOLE qkv projection through the
+    AG+GEMM producer and attends on fully-resident KV, this path gathers
+    only the (narrow) query projection; K/V project LOCALLY on the sequence
+    shard and stay resident while their tiles rotate through
+    ``pc.ring_attention`` — the overlapped AG-KV + online-softmax tile plan,
+    whose consumer honors the CompSpec tile as (block_q, block_kv).  Every
+    rank attends the full query range with its local heads, so the output
+    projection is the same GEMM+RS consumer as :func:`apply_seq`.
+    x: [B, s_loc, D] -> [B, s_loc, D] (residual added).  ``tune=True``
+    resolves each collective's BlockChannel (including the attention compute
+    tile) per shape via repro.tune; results match :func:`apply_seq` up to fp
+    reassociation.
+
+    Requires MQA (one padded KV head): the rotating tiles must be the SAME
+    kv head's rows on every rank, which the GQALayout replication gives
+    exactly when ``kv_pad == 1`` — with genuinely sharded KV heads each
+    rank's local projection is a different head, and a ring would mix them.
+    """
+    if tune and not pc.tune:
+        pc = dataclasses.replace(pc, tune=True)
+    lay = _lay(cfg, pc.tp)
+    if lay.kv_pad != 1:
+        raise ValueError(
+            "apply_seq_ring needs MQA (padded n_kv_heads == 1, so every rank "
+            f"holds the same KV head); got kv_pad={lay.kv_pad} — use apply_seq")
+    hd = cfg.hd
+    b, s_loc, _ = x.shape
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+
+    q = pc.ag_matmul(h, params["wq"])             # [B, S, h_loc*hd] gathered
+    kv = jnp.einsum("bsd,dn->bsn", h, params["wkv"])  # [B, s_loc, ...] local
+    if "bq" in params:
+        q = q + params["bq"]
+        kv = kv + params["bkv"]
+    s_glob = q.shape[1]
+    q = q.reshape(b, s_glob, lay.h_loc, hd)
+    kv = kv.reshape(b, s_loc, 2 * lay.kv_loc, hd)
+    k = kv[:, :, : lay.kv_loc]
+    v = kv[:, :, lay.kv_loc:]
+
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    q, _ = rope(q, q, jnp.arange(s_glob), theta)
+    k_pos = pc.axis_index() * s_loc + jnp.arange(s_loc)  # global KV positions
+    _, k = rope(k, k, k_pos, theta)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    o = pc.ring_attention(q, k, v, causal=causal, window=window)
+    o_flat = o.transpose(0, 2, 1, 3).reshape(b, s_glob, lay.h_loc * hd)
+    out = pc.matmul_rs(o_flat, params["wo"])      # [B, s_loc, D]
+    return x + out
 
 
 def apply_cross_seq(params, x, enc, pc, cfg):

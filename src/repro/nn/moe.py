@@ -5,7 +5,10 @@ Fig. 5 workload: the router fills the dynamic lookup tables; the overlapped
 "ag_rs" tile plan in core/moe_overlap.py (an AG flow of token tiles + a
 reduction riding the same permutes, run by the generic schedule executor)
 gathers token chunks and reduce-scatters combined outputs while local experts
-compute — under whatever tile order / channel count ``pc.channel`` selects.
+compute — under whatever tile order / channel count ``pc.channel`` selects,
+and with the per-expert grouped GEMMs blocked by the CompSpec (tm, tn, tk)
+tile when one is set (or tuner-resolved via ``tune=True`` — the attention/MoE
+consumers have a compute-tile axis in the joint search space).
 Shared experts (DeepSeek-style) run as a dense TP MLP in parallel with the
 routed path (paper §7.3 does the same for Qwen1.5's shared experts).
 

@@ -22,8 +22,12 @@ MXU-alignment-constrained via the ``repro.backend`` hardware probes.
 
 Rankers
 -------
-``ranker="measure"``  times each candidate through ``compile_overlap`` under
-                      shard_map on the target mesh (``tune/measure.py``);
+``ranker="measure"``  times candidates through ``compile_overlap`` under
+                      shard_map on the target mesh (``tune/measure.py``:
+                      AOT-split compilation, (median, iqr) scores) — pruned
+                      by the successive-halving early-exit sweep in
+                      ``tune/sweep.py`` (``REPRO_TUNE_SWEEP*`` knobs; the
+                      v3 cache record keeps the pruning ledger);
 ``ranker="model"``    ranks with the analytic bytes-on-wire vs. per-tile-FLOPs
                       cost model (``tune/cost.py``);
 ``ranker="auto"``     (default) measures on a real TPU target, models
@@ -53,6 +57,7 @@ from repro.core.channels import BlockChannel
 from repro.tune import cache as _cache
 from repro.tune import cost as _cost
 from repro.tune import measure as _measure
+from repro.tune import sweep as _sweep
 from repro.tune.candidates import (
     COMP_TILE_LATTICE,
     DEFAULT_SPACE,
@@ -89,10 +94,12 @@ __all__ = [
 RANKERS = ("auto", "measure", "model")
 _ENV_RANKER = "REPRO_TUNE_RANKER"
 
-# record-format version.  v1 (PR 3) records are comm-only — no ``comp_tile``
-# field and no notion of the joint space; loading one under the new schema
-# re-tunes (a cheap model ranking) instead of guessing a compute half.
-CACHE_SCHEMA = 2
+# record-format version.  v1 (PR 3) records are comm-only (no ``comp_tile``);
+# v2 (PR 4) records predate the measured-sweep stats and the attention/MoE
+# compute-tile axes, so their winners were chosen from a *smaller* joint
+# space.  Loading any older (or malformed) record re-tunes — a cheap model
+# ranking — instead of guessing; it never crashes and never half-applies.
+CACHE_SCHEMA = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,10 +111,12 @@ class TuneResult:
     candidate: Candidate
     channel: BlockChannel
     ranker: str  # ranker that PRODUCED the record
-    score: float  # predicted seconds or measured us
+    score: float  # predicted seconds or measured median us
     cache_hit: bool
     fingerprint: Dict[str, Any]
-    considered: int  # candidates scored (0 on a hit)
+    considered: int  # candidates enumerated (0 on a hit)
+    score_iqr: float = 0.0  # measured noise estimate (us); 0.0 for the model
+    sweep: Optional[Dict[str, Any]] = None  # pruning ledger (measured sweeps)
 
 
 def _entry_key(kind: str, axis: str, world: int, sig: Sequence[int], space: Space) -> str:
@@ -144,6 +153,36 @@ def _wants_measure_upgrade(rec: Dict[str, Any], ranker: Optional[str], mesh) -> 
         and mesh is not None
         and not _tracing()
     )
+
+
+def _parse_record(rec: Any) -> Optional[Dict[str, Any]]:
+    """Validated view of a cache record, or None when it must re-tune.
+
+    Every way a record can be unusable degrades identically — to a re-tune:
+    a v1/v2 record from an older schema (whose winner was picked from a
+    smaller joint space, pre sweep-stats), or a malformed record (junk file,
+    hand-edited entry, torn write).  Nothing here may raise.
+    """
+    try:
+        if int(rec.get("schema", 1)) != CACHE_SCHEMA:
+            return None
+        cand = Candidate(
+            order=rec["order"],
+            num_channels=int(rec["num_channels"]),
+            accum_dtype=rec["accum_dtype"],
+            comp_tile=tuple(int(t) for t in rec["comp_tile"]),
+        )
+        cand.channel("_probe")  # spec construction validates order/dtype/tile
+        sweep = rec.get("sweep")
+        return {
+            "candidate": cand,
+            "ranker": str(rec["ranker"]),
+            "score": float(rec["score"]),
+            "score_iqr": float(rec.get("score_iqr_us", 0.0)),
+            "sweep": dict(sweep) if isinstance(sweep, dict) else None,
+        }
+    except (AttributeError, KeyError, TypeError, ValueError):
+        return None
 
 
 def _resolve_ranker(ranker: Optional[str], mesh) -> str:
@@ -197,44 +236,49 @@ def autotune(
 
     if not force:
         rec = _cache.load_entry(fp, key, directory=cache_dir)
-        if rec is not None and int(rec.get("schema", 1)) != CACHE_SCHEMA:
-            rec = None  # v1 (comm-only) record: re-tune under the joint schema
+        if rec is not None:
+            rec = _parse_record(rec)  # old schema / malformed -> None (re-tune)
         if rec is not None and _wants_measure_upgrade(rec, ranker, mesh):
             rec = None  # explicit measure request upgrades a model-ranked entry
         if rec is not None:
-            cand = Candidate(
-                order=rec["order"],
-                num_channels=int(rec["num_channels"]),
-                accum_dtype=rec["accum_dtype"],
-                comp_tile=tuple(int(t) for t in rec["comp_tile"]),
-            )
+            cand = rec["candidate"]
             return TuneResult(
                 kind=kind,
                 signature=sig,
                 candidate=cand,
                 channel=cand.channel(axis, base),
                 ranker=rec["ranker"],
-                score=float(rec["score"]),
+                score=rec["score"],
                 cache_hit=True,
                 fingerprint=fp,
                 considered=0,
+                score_iqr=rec["score_iqr"],
+                sweep=rec["sweep"],
             )
 
     use = _resolve_ranker(ranker, mesh)
     cands = enumerate_candidates(
         kind, extent=chunk_extent(kind, sig), space=space, sig=sig, world=world
     )
-    best: Optional[Candidate] = None
-    best_score = float("inf")
-    for cand in cands:
-        if use == "measure":
-            score = _measure.measure_channel(
-                kind, cand.channel(axis, base), mesh, sig, repeats=repeats, warmup=warmup
-            )
-        else:
+    best_iqr = 0.0
+    sweep_stats: Optional[Dict[str, Any]] = None
+    if use == "measure":
+        # one CaseTimer per search: operands are synthesized once and shared
+        # by every candidate; compile time is AOT-split out of every score
+        case = _measure.CaseTimer(kind, mesh, axis, sig)
+
+        def timer(cand, *, repeats=repeats, warmup=warmup):
+            return case.time(cand.channel(axis, base), repeats=repeats, warmup=warmup)
+
+        sw = _sweep.measured_sweep(kind, sig, world, cands, timer, repeats=repeats, warmup=warmup)
+        best, best_score, best_iqr = sw.winner, sw.median_us, sw.iqr_us
+        sweep_stats = sw.stats
+    else:
+        best, best_score = None, float("inf")
+        for cand in cands:
             score = _cost.predict_cost(kind, sig, world, cand)
-        if score < best_score:  # strict: ties keep enumeration order
-            best, best_score = cand, score
+            if score < best_score:  # strict: ties keep enumeration order
+                best, best_score = cand, score
     assert best is not None
 
     record = {
@@ -251,6 +295,9 @@ def autotune(
         "score_unit": "us_measured" if use == "measure" else "s_predicted",
         "considered": len(cands),
     }
+    if use == "measure":
+        record["score_iqr_us"] = best_iqr
+        record["sweep"] = sweep_stats
     _cache.store_entry(fp, key, record, directory=cache_dir)
     return TuneResult(
         kind=kind,
@@ -262,6 +309,8 @@ def autotune(
         cache_hit=False,
         fingerprint=fp,
         considered=len(cands),
+        score_iqr=best_iqr,
+        sweep=sweep_stats,
     )
 
 

@@ -53,8 +53,10 @@ __all__ = [
 
 TUNABLE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
 
-# kinds whose consumer compute is a plain GEMM the (tm, tn, tk) tile applies
-# to; the attention and MoE consumers keep the backend-chosen default tile
+# kinds whose consumer compute is a plain GEMM the (tm, tn, tk) tile blocks
+# directly; the attention and MoE consumers interpret the same tile through
+# their own dims (see _tile_dims) — attention maps (tm, tk) onto
+# (block_q, block_kv), MoE onto the per-expert grouped GEMMs
 GEMM_TILE_KINDS = ("ag_matmul", "matmul_rs")
 
 # requested (tm, tn, tk) lattice of the joint space, default tile FIRST so a
@@ -135,17 +137,33 @@ class Candidate:
         return tag
 
 
-def _gemm_dims(
+def _tile_dims(
     kind: str, sig: Sequence[int], world: Optional[int], nch: int
 ) -> Optional[Tuple[int, int, int]]:
-    """Per-step per-channel GEMM extents (m, n, k) the compute tile divides."""
+    """Per-step per-channel consumer extents (m, n, k) the tile must divide.
+
+    GEMM kinds: the per-step GEMM itself.  ``ag_attention``: queries x head
+    dim x per-channel KV rows — tm is block_q, tk is block_kv, tn clamps to
+    the head dim (the flash-attention blocking).  ``ag_moe``: per-expert
+    token rows x fused gate+up width x d_model (the first expert GEMM; the
+    down projection reuses the same blocking, clamped to its own extents).
+    Unknown kinds/signatures return None (the lattice collapses to the
+    sentinel).
+    """
+    nch = max(1, nch)
     if kind == "ag_matmul":
         _, m_loc, k, n_loc = sig
-        return max(1, m_loc // max(1, nch)), n_loc, k
+        return max(1, m_loc // nch), n_loc, k
     if kind == "matmul_rs":
         _, m_glob, k_loc, n = sig
         m = max(1, m_glob // world) if world else m_glob
-        return m, max(1, n // max(1, nch)), k_loc
+        return m, max(1, n // nch), k_loc
+    if kind == "ag_attention":
+        _b, _h, _hkv, s_loc, d = sig
+        return s_loc, d, max(1, s_loc // nch)
+    if kind == "ag_moe":
+        m_loc, d_model, _top_k, _e_loc, d_exp = sig
+        return max(1, m_loc // nch), 2 * d_exp, d_model
     return None
 
 
@@ -170,16 +188,19 @@ def comp_tile_candidates(
     unclamped and unpruned.  A single-tile space is an *explicit* request
     (``compile_overlap(..., comp=<CompSpec>)``): its point is clamped but
     never pruned — the kernels themselves clamp identically, so honoring it
-    matches what an explicit channel would run.  Non-GEMM kinds and unknown
-    signatures collapse to the sentinel.
+    matches what an explicit channel would run.  Every tunable kind has a
+    tile axis (the per-kind dims live in :func:`_tile_dims`); unknown kinds
+    and signatures collapse to the sentinel.
     """
     import jax.numpy as jnp
 
     from repro import backend
 
-    if kind not in GEMM_TILE_KINDS or sig is None:
+    if sig is None:
         return (DEFAULT_TILE,)
-    dims = _gemm_dims(kind, tuple(int(s) for s in sig), world, nch)
+    dims = _tile_dims(kind, tuple(int(s) for s in sig), world, nch)
+    if dims is None:
+        return (DEFAULT_TILE,)
     m, n, k = dims
     sub = backend.sublane_multiple(accum_dtype)
     lane = backend.lane_multiple()
@@ -276,7 +297,9 @@ def signature(kind: str, shapes: Sequence[Tuple[int, ...]]) -> Tuple[int, ...]:
         return (lead, x[-2], x[-1], w[-1])  # (lead, m_glob, k_loc, n)
     if kind == "ag_attention":
         q, k = shapes[0], shapes[1]
-        return (q[0], q[1], k[1], q[2], q[3])  # (b, h, hkv, s_loc, d)
+        # s_loc comes from K: the KV shard is the ring extent — queries may
+        # arrive gathered (the AG-Q + ring-KV layer form)
+        return (q[0], q[1], k[1], k[2], q[3])  # (b, h, hkv, s_loc, d)
     if kind == "ag_moe":
         x, ids, w_gu = shapes[0], shapes[1], shapes[3]
         # (m_loc, d_model, top_k, e_loc, d_expert)

@@ -34,6 +34,16 @@ operand re-reads), and ``beta`` is the fixed per-tile issue cost (grid
 iteration + copy descriptors) that keeps tiles from shrinking forever.  The
 VMEM budget bounds them from above (pruned in ``tune/candidates``).
 
+The attention consumer prices (tm, tk) as (block_q, block_kv): a per-tile
+softmax+MXU roofline — the QK^T score tile's MXU utilization, a VPU term
+for the fp32 online-softmax work, and a score-spill term (a whole-chunk
+score matrix that cannot stay VMEM-resident pays an fp32 HBM round-trip —
+exactly what a flash-style tile removes).  The MoE consumer prices the
+per-expert grouped GEMMs with a tile-occupancy term: expert groups are
+capacity-sized, so the last row tile of each expert pads to tm and wastes
+MXU cycles.  All compute terms are accum-dtype-free — the flow dtype only
+prices the wire — so AG flows keep the deterministic f32 tie-break.
+
 ``alpha`` and ``beta`` are the calibratable constants of the classic
 alpha-beta model: defaults below, env overrides ``REPRO_TUNE_ALPHA`` /
 ``REPRO_TUNE_BETA`` (seconds) for calibration against a real TPU.  Hardware
@@ -48,9 +58,9 @@ from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.comp_tiles import DEFAULT_TILE, largest_divisor, resolve_tile
+from repro.core.comp_tiles import DEFAULT_TILE, largest_divisor, resolve_tile, tile_footprint_bytes
 from repro.launch.roofline import HW
-from repro.tune.candidates import Candidate, GEMM_TILE_KINDS, _gemm_dims, chunk_extent
+from repro.tune.candidates import Candidate, GEMM_TILE_KINDS, _tile_dims, chunk_extent
 
 __all__ = [
     "ALPHA_S",
@@ -71,6 +81,17 @@ BETA_TILE_S = float(os.environ.get("REPRO_TUNE_BETA", 2e-7))
 
 # bytes per element flowing tiles travel in (activations; bf16 on TPU)
 _TILE_BYTES = 2
+
+# online-softmax statistics and score tiles stay fp32 regardless of the flow
+# dtype (core/overlap.ring_attention) — NOT the candidate's accum dtype, so
+# the compute term stays accum-dtype-free and AG flows keep the f32 tie-break
+_SCORE_BYTES = 4
+
+# VPU elementwise ops per attention score (max, sub, exp, the running l/o
+# rescale) and the VPU's throughput relative to the MXU peak — the softmax
+# half of the attention roofline
+_SOFTMAX_OPS = 8.0
+_VPU_FRACTION = 1.0 / 16.0
 
 
 def _flow_bytes(accum_dtype: str) -> int:
@@ -116,45 +137,114 @@ def realized_tile(
 ) -> Tuple[int, int, int]:
     """The blocking a candidate's compute tile actually executes as.
 
-    The DEFAULT_TILE sentinel realizes as what the fused kernels run when
-    untuned — whole-chunk rows and contraction, 128-wide output columns —
-    NOT as a literal 128^3 decomposition, so the default is never charged
-    per-tile costs its execution does not incur (a tuned tile must beat the
-    real thing).  Non-default tiles clamp like everywhere else.
+    The DEFAULT_TILE sentinel realizes as what the consumers run when
+    untuned — for the GEMM kinds whole-chunk rows and contraction with
+    128-wide output columns; for attention the whole-chunk online-softmax
+    update; for MoE the whole per-expert grouped GEMM — NOT as a literal
+    128^3 decomposition, so the default is never charged per-tile costs its
+    execution does not incur (a tuned tile must beat the real thing).
+    Non-default tiles clamp like everywhere else.
     """
-    m, n, k = _gemm_dims(kind, tuple(sig), world, max(1, cand.num_channels))
+    m, n, k = _tile_dims(kind, tuple(sig), world, max(1, cand.num_channels))
     if tuple(cand.comp_tile) == DEFAULT_TILE:
-        return m, largest_divisor(n, 128), k
+        if kind in GEMM_TILE_KINDS:
+            return m, largest_divisor(n, 128), k
+        return m, n, k  # native: one whole-chunk consumer block
     return resolve_tile(tuple(cand.comp_tile), m, n, k)
+
+
+def _spill_bytes(tm: int, tn: int, tk: int, acc_bytes: int) -> float:
+    """Extra HBM round-trip a blocking pays when it cannot stay VMEM-resident.
+
+    A blocking whose working set fits the probed budget keeps its
+    accumulator (GEMM) or score tile (attention) on-chip; one that does not
+    spills it to HBM — write + read-back.  This is the term a tuned
+    flash-style tile exists to remove, and it is what lets a non-default
+    attention/MoE tile beat the whole-chunk native blocking on shapes whose
+    chunk no longer fits.
+    """
+    from repro import backend
+
+    if tile_footprint_bytes((tm, tn, tk), _TILE_BYTES, acc_bytes) <= backend.vmem_budget_bytes():
+        return 0.0
+    return 2.0 * tm * tn * acc_bytes
 
 
 def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
     """Per-step compute time for one candidate, tile blocking included.
 
-    For the GEMM kinds the candidate's realized (tm, tn, tk) blocking (see
-    :func:`realized_tile`) drives a per-tile roofline (module docstring);
-    the other kinds keep the plain FLOPs-over-peak term.
+    Every tunable kind prices its realized (tm, tn, tk) blocking (see
+    :func:`realized_tile`) with a per-tile roofline: the GEMM kinds as in
+    the module docstring; attention as a per-tile softmax+MXU roofline
+    (score-tile MXU utilization, a VPU softmax term, score-spill bytes);
+    MoE as per-expert tile occupancy (last-row-tile padding waste over the
+    capacity-sized expert groups).  All terms are accum-dtype-free so AG
+    flows keep the deterministic f32 tie-break.
     """
     _, flops = step_terms(kind, sig, world, cand.accum_dtype)
-    if kind not in GEMM_TILE_KINDS:
+    sig = tuple(sig)
+    nch = max(1, cand.num_channels)
+    dims = _tile_dims(kind, sig, world, nch)
+    if dims is None:
         return flops / HW["peak_flops"]
 
     from repro import backend
 
-    nch = max(1, cand.num_channels)
-    m, n, k = _gemm_dims(kind, tuple(sig), world, nch)
+    m, n, k = dims
     tm, tn, tk = realized_tile(kind, sig, world, cand)
     mxu = backend.mxu_dim()
-    eff = (min(tm, mxu) / mxu) * (min(tn, mxu) / mxu)
-    lead = max(1, int(sig[0]))
-    # all C channels run their blocks each step
-    blocks_mn = (m // tm) * (n // tn) * nch * lead
-    n_tiles = blocks_mn * (k // tk)
-    # output tiles are written in the activation dtype — the MXU accumulates
-    # f32 natively, so the flow dtype must not bias the compute term (it
-    # already prices the wire for flows whose partials travel)
-    bytes_touched = (n_tiles * (tm * tk + tk * tn) + blocks_mn * tm * tn) * _TILE_BYTES
+
+    if kind in GEMM_TILE_KINDS:
+        eff = (min(tm, mxu) / mxu) * (min(tn, mxu) / mxu)
+        lead = max(1, int(sig[0]))
+        # all C channels run their blocks each step
+        blocks_mn = (m // tm) * (n // tn) * nch * lead
+        n_tiles = blocks_mn * (k // tk)
+        # output tiles are written in the activation dtype — the MXU
+        # accumulates f32 natively, so the flow dtype must not bias the
+        # compute term (it already prices the wire for travelling partials)
+        bytes_touched = (n_tiles * (tm * tk + tk * tn) + blocks_mn * tm * tn) * _TILE_BYTES
+        bytes_touched += blocks_mn * _spill_bytes(tm, tn, tk, 4)
+        t_flops = flops / (HW["peak_flops"] * eff)
+        t_mem = bytes_touched / HW["hbm_bw"]
+        return max(t_flops, t_mem) + BETA_TILE_S * n_tiles
+
+    if kind == "ag_attention":
+        b, h, _hkv, s_loc, d = sig
+        # (tm, tk) block the (block_q, block_kv) score tile; tn clamps to the
+        # head dim.  Per step each channel consumes one s_sub KV chunk for
+        # every (batch, head).
+        blocks = b * h * (m // tm) * (k // tk) * nch
+        n_tiles = blocks * max(1, n // tn)
+        eff = (min(tm, mxu) / mxu) * (min(tk, mxu) / mxu)  # QK^T -> (tm, tk)
+        t_flops = flops / (HW["peak_flops"] * eff)
+        # softmax is VPU work over every score element, fp32 regardless of
+        # the flow dtype (the compute term must stay accum-dtype-free)
+        scores = float(b) * h * m * k * nch
+        t_soft = _SOFTMAX_OPS * scores / (HW["peak_flops"] * _VPU_FRACTION)
+        # per block: Q tile + K and V tiles in, one accumulator update out;
+        # a whole-chunk score tile that cannot stay resident spills fp32
+        bytes_touched = blocks * (2.0 * tm * n + 2.0 * tk * n) * _TILE_BYTES
+        bytes_touched += blocks * _spill_bytes(tm, tk, n, _SCORE_BYTES)
+        t_mem = bytes_touched / HW["hbm_bw"]
+        return max(t_flops + t_soft, t_mem) + BETA_TILE_S * n_tiles
+
+    # ag_moe: per-expert grouped GEMMs over capacity-sized token groups
+    m_loc, d_model, top_k, e_loc, _d_exp = sig
+    e_total = max(1, e_loc * world)
+    m_sub = max(1, m_loc // nch)
+    # per-expert row count: the capacity proxy (moe_overlap._capacity with
+    # factor 1 — rounded up to the 8-row sublane)
+    rows = max(8, ((m_sub * max(1, top_k) + e_total - 1) // e_total + 7) // 8 * 8)
+    tm_e = min(tm, rows)
+    row_tiles = -(-rows // tm_e)
+    occupancy = rows / float(row_tiles * tm_e)  # last-row-tile padding waste
+    blocks = e_loc * nch * row_tiles * max(1, n // tn)
+    n_tiles = blocks * max(1, k // tk) * 2  # gate+up AND down projections
+    eff = (min(tm_e, mxu) / mxu) * (min(tn, mxu) / mxu) * occupancy
     t_flops = flops / (HW["peak_flops"] * eff)
+    bytes_touched = (n_tiles * (tm_e * tk + tk * tn) + blocks * tm_e * tn) * _TILE_BYTES
+    bytes_touched += blocks * _spill_bytes(tm_e, tn, tk, 4)
     t_mem = bytes_touched / HW["hbm_bw"]
     return max(t_flops, t_mem) + BETA_TILE_S * n_tiles
 
@@ -188,6 +278,6 @@ def explain(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> Dic
         "comp_step_s": comp_step_time(kind, sig, world, cand),
         "predicted_s": predict_cost(kind, sig, world, cand),
     }
-    if kind in GEMM_TILE_KINDS:
+    if _tile_dims(kind, tuple(sig), world, max(1, cand.num_channels)) is not None:
         out["realized_tile"] = realized_tile(kind, sig, world, cand)
     return out

@@ -7,6 +7,22 @@ on synthetic operands reconstructed from the shape signature.  The signature
 is per-shard (what the ops see inside the manual region), so global operands
 scale the sharded dim by the mesh's axis size.
 
+Timing discipline (the Triton-distributed-style pitfalls, PAPERS.md):
+
+  * compilation is split from measurement via the AOT path —
+    ``jit(...).lower(*args).compile()`` — so jit compile time can never land
+    inside a timed window and ONE compiled executable is reused across every
+    warmup and repeat of a candidate;
+  * ``warmup >= 1`` is enforced: even a pre-compiled executable's first call
+    pays one-time costs (buffer donation bookkeeping, allocator warm-up)
+    that are not steady state, so a cold call must never be scored;
+  * :func:`time_fn` reports ``(median_us, iqr_us)`` — the interquartile
+    range is the noise estimate the early-exit sweep (``tune/sweep.py``)
+    reasons with when deciding whether an incumbent can still be beaten;
+  * :class:`CaseTimer` synthesizes the operands ONCE per ``(kind, mesh,
+    signature)`` and shares them across every candidate of a sweep, so
+    candidate scores differ only by the design point, never by the data.
+
 Wall time is only a meaningful perf signal on a real accelerator target —
 on the emulated CPU target the analytic model (``tune/cost.py``) should rank
 instead (``ranker="auto"`` does this; see ``repro.tune.autotune``).  The
@@ -25,20 +41,53 @@ from repro import compat
 from repro.core.channels import BlockChannel
 from repro.tune.candidates import TUNABLE_KINDS
 
-__all__ = ["build_case", "measure_channel", "time_fn"]
+__all__ = ["build_case", "measure_channel", "time_fn", "CaseTimer"]
 
 
-def time_fn(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall time per call in microseconds (blocking on results)."""
+def _aot_compile(fn, *args):
+    """Ahead-of-time compile ``fn`` for ``args`` when it has an AOT surface.
+
+    Jitted callables go through ``lower(*args).compile()`` so the executable
+    exists before the first timed window; plain callables (already-compiled
+    executables, host functions in tests) are returned as-is.
+    """
+    lower = getattr(fn, "lower", None)
+    if lower is None:
+        return fn
+    try:
+        return lower(*args).compile()
+    except Exception:  # version-moved AOT surface: fall back to the jit cache
+        return fn
+
+
+def time_fn(fn, *args, repeats: int = 3, warmup: int = 1) -> Tuple[float, float]:
+    """``(median_us, iqr_us)`` wall time per call, compile time excluded.
+
+    ``fn`` is AOT-compiled first (see :func:`_aot_compile`) and the ONE
+    compiled executable serves every warmup and timed call.  ``warmup`` must
+    be >= 1 so a cold first call can never be scored; ``iqr_us`` is the
+    spread between the upper and lower quartile of the timed repeats (0.0
+    for a single repeat) — the pruner's noise estimate.
+    """
+    if warmup < 1:
+        raise ValueError(
+            f"time_fn needs warmup >= 1 (a cold call must never be scored), got {warmup}"
+        )
+    if repeats < 1:
+        raise ValueError(f"time_fn needs repeats >= 1, got {repeats}")
+    compiled = _aot_compile(fn, *args)
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(compiled(*args))
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(compiled(*args))
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    n = len(ts)
+    median = ts[n // 2]
+    iqr = ts[min(n - 1, (3 * n) // 4)] - ts[n // 4]
+    return median * 1e6, iqr * 1e6
 
 
 def build_case(kind: str, mesh, axis: str, sig: Tuple[int, ...]):
@@ -122,6 +171,24 @@ def build_case(kind: str, mesh, axis: str, sig: Tuple[int, ...]):
     raise ValueError(f"kind {kind!r} is not measurable; one of {TUNABLE_KINDS}")
 
 
+class CaseTimer:
+    """One ``(kind, mesh, signature)`` measurement context for a whole sweep.
+
+    ``build_case`` runs ONCE — the synthetic operands are shared by every
+    candidate, so scores differ only by the design point.  Each candidate
+    still compiles its own executable (a different design point is a
+    different program) through the AOT split in :func:`time_fn`.
+    """
+
+    def __init__(self, kind: str, mesh, axis: str, sig: Tuple[int, ...]):
+        self.kind = kind
+        self._build, self._args = build_case(kind, mesh, axis, sig)
+
+    def time(self, channel: BlockChannel, *, repeats: int = 3, warmup: int = 1):
+        """``(median_us, iqr_us)`` for one realized candidate."""
+        return time_fn(self._build(channel), *self._args, repeats=repeats, warmup=warmup)
+
+
 def measure_channel(
     kind: str,
     channel: BlockChannel,
@@ -130,7 +197,6 @@ def measure_channel(
     *,
     repeats: int = 3,
     warmup: int = 1,
-) -> float:
-    """Wall time (us/call) of one realized candidate on ``mesh``."""
-    build, args = build_case(kind, mesh, channel.axis, sig)
-    return time_fn(build(channel), *args, repeats=repeats, warmup=warmup)
+) -> Tuple[float, float]:
+    """``(median_us, iqr_us)`` of one realized candidate on ``mesh``."""
+    return CaseTimer(kind, mesh, channel.axis, sig).time(channel, repeats=repeats, warmup=warmup)

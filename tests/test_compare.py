@@ -1,0 +1,117 @@
+"""bench-gate contract (benchmarks/compare.py) — pure host logic, no jax.
+
+The asymmetric coverage rule is the load-bearing part (ISSUE 5): entries
+present in the baseline but missing from the PR run are failures; entries
+new in the PR run — a new kind, a new sweep-stats block — are "new entry"
+notices and must never fail the gate, even for the exact-gated invariant
+leaves.  Exact invariants (candidate counts, the sweep pruning ledger) gate
+only when both runs carry them.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_compare",
+    os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks", "compare.py"),
+)
+compare = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(compare)
+
+
+def _cmp(base, cur, **kw):
+    kw.setdefault("tolerance", 0.2)
+    kw.setdefault("floor_us", 200.0)
+    return compare.compare_file(
+        "BENCH_x.json", compare.flatten(base), compare.flatten(cur), **kw
+    )
+
+
+BASE = {
+    "ag_matmul": {"considered": 18, "us": 100.0, "cache_round_trip": True},
+}
+
+
+def test_identical_runs_pass():
+    failures, notices = _cmp(BASE, BASE)
+    assert not failures and not notices
+
+
+def test_new_entries_are_notices_not_failures():
+    cur = dict(
+        BASE,
+        ag_attention={"joint": {"considered": 54, "us": 10.0}},
+        sweep={"total": 222, "screened": 89, "timed": 1, "pruned": 133},
+    )
+    failures, notices = _cmp(BASE, cur)
+    assert not failures  # exact-gated leaves in NEW entries must not fail
+    assert any("new entry" in n for n in notices)
+    # grouped per subtree: one notice per new block, not one per leaf
+    assert len(notices) == 2
+
+
+def test_missing_from_pr_run_stays_a_failure():
+    cur = {"ag_matmul": {"us": 100.0, "cache_round_trip": True}}  # no considered
+    failures, _ = _cmp(BASE, cur)
+    assert any("considered" in f and "missing" in f for f in failures)
+
+
+def test_exact_invariants_gate_when_present_in_both():
+    cur = dict(BASE, ag_matmul={"considered": 20, "us": 100.0, "cache_round_trip": True})
+    failures, _ = _cmp(BASE, cur)
+    assert any("exact invariant changed 18 -> 20" in f for f in failures)
+
+    base = {"k": {"sweep": {"pruned": 133, "timed": 1}}}
+    cur = {"k": {"sweep": {"pruned": 40, "timed": 1}}}
+    failures, _ = _cmp(base, cur)
+    assert any("pruned" in f for f in failures)
+
+
+def test_timing_tolerance_and_floor():
+    slow = dict(BASE, ag_matmul=dict(BASE["ag_matmul"], us=180.0))
+    failures, _ = _cmp(BASE, slow)
+    assert not failures  # +80% but under the 200us jitter floor
+
+    base = {"k": {"us": 10_000.0}}
+    failures, _ = _cmp(base, {"k": {"us": 13_000.0}})
+    assert any("timing regression" in f for f in failures)
+    failures, _ = _cmp(base, {"k": {"us": 11_000.0}})
+    assert not failures  # within 20%
+
+
+def test_health_flags_may_not_regress():
+    cur = dict(BASE, ag_matmul=dict(BASE["ag_matmul"], cache_round_trip=False))
+    failures, _ = _cmp(BASE, cur)
+    assert any("health flag regressed" in f for f in failures)
+
+
+def test_main_no_baseline_passes_with_notice(tmp_path, capsys, monkeypatch):
+    cur_dir = tmp_path / "current"
+    cur_dir.mkdir()
+    with open(cur_dir / "BENCH_x.json", "w") as fh:
+        json.dump(BASE, fh)
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        ["compare.py", "--baseline", str(tmp_path / "nope"), "--current", str(cur_dir)],
+    )
+    assert compare.main() == 0
+    assert "no baseline" in capsys.readouterr().out
+
+
+def test_main_new_bench_file_is_a_notice(tmp_path, capsys, monkeypatch):
+    base_dir, cur_dir = tmp_path / "baseline", tmp_path / "current"
+    base_dir.mkdir()
+    cur_dir.mkdir()
+    with open(base_dir / "BENCH_x.json", "w") as fh:
+        json.dump(BASE, fh)
+    with open(cur_dir / "BENCH_x.json", "w") as fh:
+        json.dump(BASE, fh)
+    with open(cur_dir / "BENCH_new.json", "w") as fh:  # added by the PR
+        json.dump({"kind": {"considered": 7}}, fh)
+    monkeypatch.setattr(
+        sys, "argv", ["compare.py", "--baseline", str(base_dir), "--current", str(cur_dir)]
+    )
+    assert compare.main() == 0
+    assert "new bench artifact" in capsys.readouterr().out

@@ -38,6 +38,37 @@ def test_flash_attention_sweep(causal, window, gqa):
     allclose(y, r, atol=2e-4, rtol=2e-3)
 
 
+def test_flash_attention_comp_tile():
+    # the tuner's CompSpec (tm, ., tk) derives (block_q, block_kv); tk=96
+    # clamps to the largest divisor of Sk (the shared degrade rule)
+    bh, s, d = 2, 256, 64
+    q = jax.random.normal(KEY, (bh, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, s, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, s, d), jnp.float32)
+    y = kernels.flash_attention(q, k, v, causal=True, tile=(64, 128, 96),
+                                interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=True)
+    allclose(y, r, atol=2e-4, rtol=2e-3)
+    # the default sentinel leaves bq/bk untouched (backend-chosen blocking)
+    y0 = kernels.flash_attention(q, k, v, causal=True, tile=(128, 128, 128),
+                                 interpret=True)
+    yn = kernels.flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(yn))
+
+
+def test_grouped_matmul_clamps_non_dividing_tile():
+    # tuner-resolved tiles may not divide awkward extents: bn=48 / bk=64
+    # clamp via largest_divisor (40, 48) instead of refusing
+    e, m, k, n, bm = 4, 256, 96, 80, 64
+    tile_expert = jnp.array([0, 1, 3, 3], jnp.int32)
+    x = jax.random.normal(KEY, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (e, k, n), jnp.float32)
+    y = kernels.grouped_matmul(x, w, tile_expert, tile=(bm, 48, 64),
+                               interpret=True)
+    r = ref.grouped_matmul_ref(x, w, tile_expert, bm)
+    allclose(y, r, atol=1e-4, rtol=1e-4)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_grouped_matmul_dynamic_mapping(dtype):
     e, m, k, n, bm = 6, 512, 128, 256, 128

@@ -8,6 +8,7 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.comp_tiles import largest_divisor
 from repro.core.mapping import StaticTileMapping, build_moe_dynamic_mapping
 from repro.core import schedules
 from repro.core.moe_overlap import _dispatch_tables, _capacity
@@ -15,6 +16,40 @@ from repro.nn.layers import gqa_layout
 from repro.training.compression import compress_with_feedback, dequantize_int8
 
 SET = settings(max_examples=40, deadline=None)
+
+
+# ---- largest_divisor (sqrt-enumeration rewrite vs the old decrement loop) ----
+
+def _largest_divisor_decrement(extent: int, cap: int) -> int:
+    """The pre-rewrite O(extent) reference: decrement cap until it divides."""
+    extent = max(1, int(extent))
+    c = min(max(1, int(cap)), extent)
+    while extent % c:
+        c -= 1
+    return c
+
+
+@settings(max_examples=200, deadline=None)
+@given(extent=st.integers(-3, 50_000), cap=st.integers(-3, 50_000))
+def test_largest_divisor_matches_old_behavior(extent, cap):
+    got = largest_divisor(extent, cap)
+    assert got == _largest_divisor_decrement(extent, cap)
+    # contract: a divisor, within cap (when cap is positive), >= 1
+    e = max(1, extent)
+    assert e % got == 0 and 1 <= got <= max(1, min(max(1, cap), e))
+
+
+def test_largest_divisor_fast_on_large_primes():
+    # the decrement loop walks cap..1 on primes — O(extent); the rewrite
+    # enumerates divisor pairs up to sqrt(extent).  2**31 - 1 is prime: the
+    # old loop would spin for ~2**31 iterations here.
+    import time as _time
+
+    t0 = _time.perf_counter()
+    assert largest_divisor(2**31 - 1, 2**31 - 2) == 1
+    assert largest_divisor(179_424_673, 179_424_672) == 1  # 10-millionth prime
+    assert largest_divisor(151_936, 151_000) == 75_968  # qwen2 vocab, big cap
+    assert _time.perf_counter() - t0 < 1.0
 
 
 # ---- static tile mapping (paper §4.1 affine formulas) ------------------------

@@ -1,18 +1,24 @@
 """Autotuner subsystem: enumeration, cache contract, channel="auto" parity.
 
-The contract under test (ISSUE 3 + ISSUE 4 acceptance):
+The contract under test (ISSUE 3 + ISSUE 4 + ISSUE 5 acceptance):
   * candidate enumeration is deterministic and honors
     ``mapping.effective_channels`` divisibility;
   * the joint space's compute-tile lattice respects shape-divisibility,
-    MXU-alignment, and VMEM-footprint pruning;
-  * cache entries survive a save/load round-trip (memo AND disk), and v1
-    (comm-only) records re-tune under the v2 joint schema instead of
+    MXU-alignment, and VMEM-footprint pruning — for the GEMM kinds AND the
+    attention/MoE consumers;
+  * the measured ranker's timing path is trustworthy: compile time is
+    AOT-split out of every score, ``time_fn`` reports (median, iqr) and
+    refuses cold calls, and the successive-halving sweep prunes the joint
+    space while agreeing with the exhaustive sweep's winner;
+  * cache entries survive a save/load round-trip (memo AND disk); v1/v2 and
+    malformed/corrupt records re-tune under the v3 schema instead of
     crashing;
   * a mesh-fingerprint mismatch invalidates (re-tunes) instead of silently
     reusing another mesh's winner;
   * a fingerprint hit never re-measures;
   * ``channel="auto"`` / ``comp="auto"`` output is parity-equal to the
-    default-tile path on both backends on the 4-rank emulated mesh.
+    default-tile path on both backends on the 4-rank emulated mesh, for the
+    GEMM kinds and the tiled attention/MoE consumers alike.
 """
 import dataclasses
 import json
@@ -30,6 +36,7 @@ from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot
 from repro.core.moe_overlap import moe_router
 from repro.tune import cache as tune_cache
 from repro.tune import measure as tune_measure
+from repro.tune import sweep as tune_sweep
 
 R = 4
 KEY = jax.random.PRNGKey(0)
@@ -43,7 +50,20 @@ SIGS = {
 
 TINY_SPACE = tune.Space(orders=("ring",), channel_counts=(1,), accum_dtypes=("float32",))
 
-MEASURE_KW = dict(ranker="measure", space=TINY_SPACE, repeats=1, warmup=0)
+MEASURE_KW = dict(ranker="measure", space=TINY_SPACE, repeats=1, warmup=1)
+
+
+class FakeCaseTimer:
+    """Drop-in for measure.CaseTimer: deterministic scores, no wall clock."""
+
+    calls = []
+
+    def __init__(self, kind, mesh, axis, sig):
+        self.kind = kind
+
+    def time(self, channel, *, repeats=3, warmup=1):
+        type(self).calls.append((self.kind, repeats))
+        return 1.0, 0.0
 
 
 @pytest.fixture(scope="module")
@@ -126,15 +146,38 @@ def test_joint_enumeration_vmem_pruning(monkeypatch):
     assert pruned == (DEFAULT_TILE,)  # only the unprunable sentinel survives
 
 
-def test_joint_space_collapses_for_non_gemm_kinds():
-    # attention/MoE consumers keep the backend-chosen tile: the joint space
-    # must not multiply their candidate count
-    sig = SIGS["ag_attention"]
-    cands = tune.enumerate_candidates(
-        "ag_attention", extent=16, space=tune.JOINT_SPACE, sig=sig, world=R
+def test_joint_space_extends_to_attention_and_moe():
+    # ISSUE 5: the attention/MoE consumers have a compute-tile axis too —
+    # tiles clamp to their own dims (attention: queries x head dim x
+    # per-channel KV rows; MoE: per-expert rows x 2f x d_model)
+    att_sig = (1, 2, 1, 64, 32)
+    att = tune.enumerate_candidates(
+        "ag_attention", extent=64, space=tune.JOINT_SPACE, sig=att_sig, world=R
     )
-    assert len(cands) == 18
-    assert all(c.comp_tile == DEFAULT_TILE for c in cands)
+    assert len(att) > 18  # the joint space genuinely grew past comm-only
+    assert any(c.comp_tile != DEFAULT_TILE for c in att)
+    for c in att:
+        if c.comp_tile == DEFAULT_TILE:
+            continue
+        tm, tn, tk = c.comp_tile
+        s_sub = 64 // c.num_channels
+        assert 64 % tm == 0 and 32 % tn == 0 and s_sub % tk == 0
+
+    moe_sig = (32, 16, 2, 2, 16)
+    moe = tune.enumerate_candidates(
+        "ag_moe", extent=32, space=tune.JOINT_SPACE, sig=moe_sig, world=R
+    )
+    assert len(moe) > 18
+    assert any(c.comp_tile != DEFAULT_TILE for c in moe)
+    for c in moe:
+        if c.comp_tile == DEFAULT_TILE:
+            continue
+        tm, tn, tk = c.comp_tile
+        m_sub = 32 // c.num_channels
+        assert m_sub % tm == 0 and 32 % tn == 0 and 16 % tk == 0
+
+    # an unknown signature still collapses to the sentinel
+    assert tune.comp_tile_candidates("ag_attention", None, world=R) == (DEFAULT_TILE,)
 
 
 def test_joint_winner_differs_from_default_tile(mesh4):
@@ -207,10 +250,11 @@ def test_cache_hit_never_remeasures(mesh4, monkeypatch):
     first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
     assert not first.cache_hit and first.ranker == "measure"
 
-    def boom(*a, **k):
-        raise AssertionError("cache hit must not re-measure")
+    class Boom:
+        def __init__(self, *a, **k):
+            raise AssertionError("cache hit must not re-measure")
 
-    monkeypatch.setattr(tune_measure, "measure_channel", boom)
+    monkeypatch.setattr(tune_measure, "CaseTimer", Boom)
     tune_cache.clear_memo()  # disk hit, not memo hit
     hit = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
     assert hit.cache_hit and hit.candidate == first.candidate
@@ -222,13 +266,9 @@ def test_explicit_measure_upgrades_model_entry(mesh4, monkeypatch):
     model = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, space=TINY_SPACE)
     assert not model.cache_hit and model.ranker == "model"
 
-    calls = []
-
-    def fake_measure(kind, channel, mesh, sig, **kw):
-        calls.append(kind)
-        return 1.0
-
-    monkeypatch.setattr(tune_measure, "measure_channel", fake_measure)
+    calls = FakeCaseTimer.calls
+    calls.clear()
+    monkeypatch.setattr(tune_measure, "CaseTimer", FakeCaseTimer)
     up = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4, **MEASURE_KW)
     assert not up.cache_hit and up.ranker == "measure" and calls
 
@@ -284,7 +324,7 @@ def test_store_merges_external_writes(mesh4):
 
 def test_cache_v1_schema_migration_retunes(mesh4):
     # a PR-3 cache file (comm-only records: no "schema", no "comp_tile")
-    # must re-tune under the v2 joint schema, never crash or half-apply
+    # must re-tune under the v3 schema, never crash or half-apply
     first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
     digest = tune_cache.fingerprint_digest(first.fingerprint)
     path = os.path.join(tune_cache.cache_dir(), digest + ".json")
@@ -309,6 +349,336 @@ def test_cache_v1_schema_migration_retunes(mesh4):
         entries = json.load(fh)["entries"]
     assert all(rec.get("schema") == tune.CACHE_SCHEMA for rec in entries.values())
     assert all("comp_tile" in rec for rec in entries.values())
+
+
+def test_cache_v2_schema_migration_retunes(mesh4):
+    # a PR-4 record (schema 2: joint winner, but chosen from the smaller
+    # pre-sweep space with no attention/MoE tile axes) re-tunes under v3
+    first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    digest = tune_cache.fingerprint_digest(first.fingerprint)
+    path = os.path.join(tune_cache.cache_dir(), digest + ".json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    for rec in payload["entries"].values():  # downgrade every record to v2
+        rec["schema"] = 2
+        rec.pop("sweep", None)
+        rec.pop("score_iqr_us", None)
+    with open(path, "w") as fh:
+        json.dump(payload, fh)
+
+    tune_cache.clear_memo()
+    redo = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert not redo.cache_hit  # v2 record rejected -> re-tuned
+    assert redo.candidate == first.candidate
+
+    tune_cache.clear_memo()
+    healed = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert healed.cache_hit
+    with open(path) as fh:
+        entries = json.load(fh)["entries"]
+    assert all(rec.get("schema") == tune.CACHE_SCHEMA for rec in entries.values())
+
+
+def test_cache_corrupt_file_and_records_retune(mesh4):
+    # a junk cache file (truncated JSON) and a malformed record (hand-edited
+    # entry) both degrade to a re-tune — load must never raise
+    first = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    digest = tune_cache.fingerprint_digest(first.fingerprint)
+    path = os.path.join(tune_cache.cache_dir(), digest + ".json")
+
+    with open(path, "w") as fh:  # truncated/binary junk: not JSON at all
+        fh.write('{"fingerprint": {"mesh_sh\x00\x01garbage')
+    tune_cache.clear_memo()
+    redo = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert not redo.cache_hit and redo.candidate == first.candidate
+
+    # valid JSON, garbage records: wrong types, missing fields, junk values
+    with open(path) as fh:
+        payload = json.load(fh)
+    (key,) = payload["entries"].keys()
+    for bad in ("not-a-record", {"schema": tune.CACHE_SCHEMA}, {"schema": "x"}, 7, None):
+        payload["entries"][key] = bad
+        with open(path, "w") as fh:
+            json.dump(payload, fh)
+        tune_cache.clear_memo()
+        redo = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+        assert not redo.cache_hit and redo.candidate == first.candidate
+        with open(path) as fh:  # the re-tune healed the record
+            payload = json.load(fh)
+
+    # a record whose winner fails spec validation (junk order) also re-tunes
+    payload["entries"][key] = dict(
+        schema=tune.CACHE_SCHEMA,
+        order="zigzag",
+        num_channels=1,
+        accum_dtype="float32",
+        comp_tile=[128, 128, 128],
+        ranker="model",
+        score=1.0,
+    )
+    with open(path, "w") as fh:
+        json.dump(payload, fh)
+    tune_cache.clear_memo()
+    redo = tune.autotune("ag_matmul", signature=SIGS["ag_matmul"], mesh=mesh4)
+    assert not redo.cache_hit and redo.candidate == first.candidate
+
+
+# ---- measured ranker: timing contract + early-exit sweep (ISSUE 5) ----------
+
+
+def test_time_fn_stats_and_warmup_guard():
+    calls = []
+
+    def fn(x):
+        calls.append(1)
+        return x
+
+    med, iqr = tune_measure.time_fn(fn, 1.0, repeats=5, warmup=2)
+    assert len(calls) == 7  # warmup + repeats, one shared callable
+    assert med >= 0.0 and iqr >= 0.0
+    with pytest.raises(ValueError, match="warmup >= 1"):
+        tune_measure.time_fn(fn, 1.0, warmup=0)
+    with pytest.raises(ValueError, match="repeats >= 1"):
+        tune_measure.time_fn(fn, 1.0, repeats=0)
+
+
+def test_time_fn_aot_splits_compile_from_measurement():
+    import jax.numpy as jnp
+
+    traces = []
+
+    @jax.jit
+    def f(x):
+        traces.append(1)
+        return x + 1.0
+
+    med, iqr = tune_measure.time_fn(f, jnp.ones((8,)), repeats=3, warmup=1)
+    # lower().compile() traced exactly once; the compiled executable served
+    # every warmup and timed call — compile time can never enter a score
+    assert len(traces) == 1
+    assert med > 0.0 and iqr >= 0.0
+
+
+def _oracle(kind, sig, world):
+    """Deterministic fake timer: analytic cost in us + stable per-point skew."""
+    import hashlib
+
+    def timer(cand, *, repeats=3, warmup=1):
+        from repro.tune import cost as tune_cost
+
+        j = int(hashlib.sha256(cand.label().encode()).hexdigest()[:4], 16) % 97
+        return tune_cost.predict_cost(kind, sig, world, cand) * 1e6 * (1.0 + j / 9700.0), 0.0
+
+    return timer
+
+
+def test_measured_sweep_prunes_and_matches_exhaustive():
+    sig = (1, 256, 512, 256)
+    cands = tune.enumerate_candidates(
+        "ag_matmul", extent=256, space=tune.JOINT_SPACE, sig=sig, world=R
+    )
+    timer = _oracle("ag_matmul", sig, R)
+    cfg = tune_sweep.SweepConfig()
+    sw = tune_sweep.measured_sweep("ag_matmul", sig, R, cands, timer, config=cfg)
+    ex = tune_sweep.measured_sweep(
+        "ag_matmul", sig, R, cands, timer, config=tune_sweep.SweepConfig(enabled=False)
+    )
+    assert sw.winner == ex.winner  # pruning never changes the winner here
+    assert sw.stats["total"] == len(cands) == ex.stats["total"]
+    assert sw.stats["screened"] <= len(cands) // 2  # timed <= 50% of the space
+    assert sw.stats["pruned"] >= len(cands) - len(cands) // 2
+    assert sw.stats["timed"] < sw.stats["screened"]  # full repeats: a handful
+    assert ex.stats == {
+        "total": len(cands),
+        "screened": len(cands),
+        "timed": len(cands),
+        "pruned": 0,
+        "early_exit": False,
+    }
+
+
+def test_measured_sweep_early_exit_on_incumbent_bound():
+    sig = (1, 256, 512, 256)
+    cands = tune.enumerate_candidates(
+        "ag_matmul", extent=256, space=tune.JOINT_SPACE, sig=sig, world=R
+    )
+    timer = _oracle("ag_matmul", sig, R)
+    sw = tune_sweep.measured_sweep("ag_matmul", sig, R, cands, timer)
+    # deterministic oracle: iqr == 0, so after the first full timing the
+    # incumbent's lower bound equals its median and beats every later screen
+    assert sw.stats["early_exit"] and sw.stats["timed"] == 1
+
+
+def test_measured_sweep_noise_widens_the_search():
+    # the early exit must use the incumbent's UPPER bound (median + iqr): a
+    # candidate whose screen sits inside the incumbent's noise band is still
+    # plausibly faster and must be fully timed — exiting on the optimistic
+    # lower bound (median - iqr) would prune the true winner exactly when
+    # measurements are noisy
+    sig = (1, 256, 512, 256)
+    cands = tune.enumerate_candidates(
+        "ag_matmul", extent=256, space=tune.JOINT_SPACE, sig=sig, world=R
+    )
+    from repro.tune import cost as tune_cost
+
+    order = sorted(cands, key=lambda c: tune_cost.predict_cost("ag_matmul", sig, R, c))
+    c0, c1 = order[0], order[1]
+
+    def timer(cand, *, repeats=3, warmup=1):
+        if repeats == 1:  # the 1-repeat screen: c0 looks best, c1 second
+            return (50.0, 0.0) if cand == c0 else (70.0, 0.0) if cand == c1 else (500.0, 0.0)
+        return (100.0, 40.0) if cand == c0 else (70.0, 1.0)  # full repeats
+
+    sw = tune_sweep.measured_sweep("ag_matmul", sig, R, cands, timer)
+    assert sw.stats["timed"] >= 2  # c1's 70us screen < 100 + 40: must be timed
+    assert sw.winner == c1 and sw.median_us == 70.0
+
+
+def test_sweep_env_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_SWEEP", "0")
+    assert not tune_sweep.sweep_config_from_env().enabled
+    monkeypatch.setenv("REPRO_TUNE_SWEEP", "1")
+    monkeypatch.setenv("REPRO_TUNE_SWEEP_SCREEN", "0.25")
+    monkeypatch.setenv("REPRO_TUNE_SWEEP_KEEP", "0.5")
+    cfg = tune_sweep.sweep_config_from_env()
+    assert cfg.enabled and cfg.screen_fraction == 0.25 and cfg.keep_fraction == 0.5
+    with pytest.raises(ValueError, match="fractions"):
+        tune_sweep.SweepConfig(screen_fraction=0.0)
+
+
+def test_measured_record_carries_sweep_stats(mesh4, monkeypatch):
+    monkeypatch.setattr(tune_measure, "CaseTimer", FakeCaseTimer)
+    res = tune.autotune(
+        "ag_matmul",
+        signature=(1, 64, 64, 64),
+        mesh=mesh4,
+        ranker="measure",
+        space=tune.JOINT_SPACE,
+    )
+    assert res.ranker == "measure" and res.sweep is not None
+    assert res.sweep["total"] == res.considered
+    assert res.sweep["pruned"] >= 1  # the joint space is big enough to prune
+
+    # the pruning ledger is part of the v3 record and survives the round-trip
+    tune_cache.clear_memo()
+    hit = tune.autotune(
+        "ag_matmul",
+        signature=(1, 64, 64, 64),
+        mesh=mesh4,
+        ranker="measure",
+        space=tune.JOINT_SPACE,
+    )
+    assert hit.cache_hit and hit.sweep == res.sweep and hit.score_iqr == res.score_iqr
+
+
+# ---- tiled attention/MoE consumers: parity on both backends (ISSUE 5) --------
+
+
+def _attention_case(mesh4):
+    b, h, hkv, s_loc, d = 1, 2, 1, 16, 8
+    q = jax.random.normal(KEY, (b, h, R * s_loc, d))
+    kv = jax.random.normal(jax.random.PRNGKey(3), (b, hkv, R * s_loc, d))
+    spec = P(None, None, "model", None)
+
+    def build(ch, comp=None):
+        fn = compile_overlap("ag_attention", ch, comp=comp, causal=True)
+        return jax.jit(shard_map(fn, mesh4, in_specs=(spec,) * 3, out_specs=spec))
+
+    return build, (q, kv, kv)
+
+
+def test_tiled_attention_parity_xla(mesh4):
+    build, args = _attention_case(mesh4)
+    base = BlockChannel(axis="model", num_channels=2)
+    ref = np.asarray(build(base)(*args), np.float32)
+    # an explicit (tm, ., tk) blocks (block_q, block_kv); tk=6 clamps to 4
+    tiled = np.asarray(build(base, comp=(8, 128, 6))(*args), np.float32)
+    np.testing.assert_allclose(tiled, ref, atol=2e-5, rtol=2e-5)
+
+    # tuner-resolved joint winner: ag_attention is an AG flow, so the f32
+    # tie-break must hold (the cost model's compute term is accum-dtype-free)
+    res = tune.autotune(
+        "ag_attention", signature=(1, 2, 1, 16, 8), mesh=mesh4, space=tune.JOINT_SPACE
+    )
+    assert res.candidate.accum_dtype == "float32"
+    got = np.asarray(build(res.channel)(*args), np.float32)
+    np.testing.assert_allclose(got, ref, atol=2e-4, rtol=2e-3)
+
+
+def test_tiled_moe_parity_xla(mesh4):
+    m_loc, dm, top_k, e_loc, f = 16, 8, 2, 2, 8
+    e = e_loc * R
+    x = jax.random.normal(KEY, (R * m_loc, dm)) * 0.5
+    wgu = jax.random.normal(jax.random.PRNGKey(5), (e, dm, 2 * f)) * 0.1
+    wdn = jax.random.normal(jax.random.PRNGKey(6), (e, f, dm)) * 0.1
+    wr = jax.random.normal(jax.random.PRNGKey(4), (dm, e))
+    specs = dict(
+        in_specs=(P("model", None), P("model", None, None), P("model", None, None)),
+        out_specs=P("model", None),
+    )
+
+    def build(ch, comp=None):
+        g = compile_overlap("ag_moe", ch, comp=comp, capacity_factor=8.0)
+
+        def f_(xs, wgu_, wdn_):
+            ids, wts, _ = moe_router(xs, wr, num_experts=e, top_k=top_k)
+            return g(xs, ids, wts, wgu_, wdn_)
+
+        return jax.jit(shard_map(f_, mesh4, **specs))
+
+    base = BlockChannel(axis="model")
+    ref = np.asarray(build(base)(x, wgu, wdn), np.float32)
+    tiled = np.asarray(build(base, comp=(8, 8, 4))(x, wgu, wdn), np.float32)
+    np.testing.assert_allclose(tiled, ref, atol=2e-5, rtol=2e-5)
+
+    # tuner-resolved joint winner (ag_rs flow: the tuner may pick a bf16
+    # flow dtype — the bf16 tolerance rule applies then)
+    res = tune.autotune(
+        "ag_moe", signature=(16, 8, 2, 2, 8), mesh=mesh4, space=tune.JOINT_SPACE
+    )
+    got = np.asarray(build(res.channel)(x, wgu, wdn), np.float32)
+    if res.candidate.accum_dtype == "float32":
+        tol = dict(atol=2e-4, rtol=2e-3)
+    else:
+        tol = dict(atol=8e-2, rtol=3e-2)
+    np.testing.assert_allclose(got, ref, **tol)
+
+
+def test_apply_seq_ring_matches_apply_seq(mesh4):
+    from repro.configs.base import ArchConfig
+    from repro.nn import attention as nn_attention
+    from repro.parallel.context import ParallelContext
+
+    cfg = ArchConfig(
+        name="tiny",
+        family="dense",
+        n_layers=1,
+        d_model=32,
+        n_heads=8,
+        n_kv_heads=1,  # MQA: the ring form needs every rank on the same KV head
+        d_ff=64,
+        vocab_size=64,
+    )
+    pc = ParallelContext(mesh=mesh4, axis="model", dp_axes=())
+    params = nn_attention.init(KEY, cfg, pc.tp, dtype=jax.numpy.float32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, R * 16, 32)) * 0.5
+    full = nn_attention.specs(cfg, pc.tp, pc.dp_spec())
+    sp = {k: pc.manual(v) for k, v in full.items()}
+
+    def run(fn):
+        sm = pc.smap(
+            lambda p, xs: fn(p, xs, pc, cfg), (sp, P(None, "model", None)), P(None, "model", None)
+        )
+        return np.asarray(jax.jit(sm)(params, x), np.float32)
+
+    ring = run(nn_attention.apply_seq_ring)
+    seq = run(nn_attention.apply_seq)
+    np.testing.assert_allclose(ring, seq, atol=2e-4, rtol=2e-3)
+
+    # sharded KV heads would make the ring mix different heads' tiles: loud
+    gqa = dataclasses.replace(cfg, n_kv_heads=4)
+    with pytest.raises(ValueError, match="MQA"):
+        nn_attention.apply_seq_ring(params, x, pc, gqa)
 
 
 def test_auto_keeps_unsupported_backend_loud():
