@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from repro import tune
 from repro.core import BlockChannel
 from repro.core.comp_tiles import DEFAULT_TILE
+from repro.core.plan import plan_cache_info
 from repro.tune import cache as tune_cache
 from repro.tune import cost as tune_cost
 from repro.tune import sweep as tune_sweep
@@ -267,6 +268,17 @@ def smoke(out_path: str = "BENCH_autotune.json") -> int:
     except Exception as exc:  # loud: the real timing path must work on CPU
         failures.append(f"measured: {type(exc).__name__}: {exc}")
         results["measured"] = {"error": str(exc)}
+
+    # plan-layer cache growth (bounded LRU since the static-verifier PR):
+    # hits/misses are informational (ungated leaves); "ok" gates boundedness
+    info = plan_cache_info()
+    results["plan_cache"] = {
+        "hits": info.hits,
+        "misses": info.misses,
+        "currsize": info.currsize,
+        "maxsize": info.maxsize,
+        "ok": info.maxsize is not None,
+    }
 
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2, sort_keys=True)

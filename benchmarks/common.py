@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.compat import make_mesh
 
-SCALE = 8          # divide paper dims by this
+SCALE = 8  # divide paper dims by this
 REPEATS = 5
 WARMUP = 2
 

@@ -40,5 +40,5 @@ def main() -> None:
         raise SystemExit(f"benchmark failures: {failures}")
 
 
-if __name__ == '__main__':
+if __name__ == "__main__":
     main()

@@ -25,6 +25,7 @@ wr = jax.random.normal(jax.random.PRNGKey(1), (D, E))
 wgu = jax.random.normal(jax.random.PRNGKey(2), (E, D, 2 * F)) * 0.1
 wdn = jax.random.normal(jax.random.PRNGKey(3), (E, F, D)) * 0.1
 
+
 def moe(xs, wgu_, wdn_):
     ids, wts, aux = moe_router(xs, wr, num_experts=E, top_k=TOPK)
     return ag_moe(xs, ids, wts, wgu_, wdn_, axis="model", capacity_factor=8.0)

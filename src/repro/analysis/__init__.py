@@ -1,0 +1,29 @@
+"""Static analysis of the tile-centric IR — no device required.
+
+Three passes over every plan the repo can emit (see ``ISSUE``/README):
+
+  1. ``analysis.schedule`` — schedule legality of the baked tables;
+  2. ``analysis.protocol`` — semaphore-protocol model checking (signal/wait
+     counts, deadlock freedom, RAW/WAR races at double-buffer depth);
+  3. ``analysis.lint``     — AST layering rules for the repo itself.
+
+``verify_plan`` is called on every ``build_plan`` miss (``REPRO_VERIFY=0``
+opts out); ``check_candidate`` gates tuner candidates;
+``python -m repro.analysis.verify --all`` proves the shipped space.
+
+Layering: this package must stay importable from ``repro.core.plan`` —
+submodules import ``repro.core`` only lazily, inside functions.
+"""
+from repro.analysis.errors import PlanVerificationError, VerificationReport
+from repro.analysis.ir import PlanTables
+from repro.analysis.verify import check_candidate, verify_plan, verify_space, verify_tables
+
+__all__ = [
+    "PlanVerificationError",
+    "VerificationReport",
+    "PlanTables",
+    "check_candidate",
+    "verify_plan",
+    "verify_space",
+    "verify_tables",
+]

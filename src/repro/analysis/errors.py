@@ -1,0 +1,92 @@
+"""Structured diagnostics for the plan-IR static verifier.
+
+This module is the bottom of the analysis layering and must stay import-free
+of ``repro.core``: ``core/plan.py`` imports :class:`PlanVerificationError` so
+the executor (``ChannelSchedule.flow_perm``) and the tuner's candidate filter
+raise the *same* structured diagnosis instead of a bare ``ValueError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["PlanVerificationError", "VerificationReport"]
+
+
+class PlanVerificationError(ValueError):
+    """A plan (or its baked schedule tables) violates a static invariant.
+
+    Subclasses ``ValueError`` so pre-existing callers that caught the old bare
+    errors keep working; carries the failing coordinate so the tuner, the
+    executor and the CLI all report the same diagnosis.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        check: str,
+        kind: Optional[str] = None,
+        order: Optional[str] = None,
+        world: Optional[int] = None,
+        step: Optional[int] = None,
+        rank: Optional[int] = None,
+        channel: Optional[int] = None,
+    ):
+        self.check = check
+        self.kind = kind
+        self.order = order
+        self.world = world
+        self.step = step
+        self.rank = rank
+        self.channel = channel
+        where = ", ".join(
+            f"{name}={val!r}"
+            for name, val in (
+                ("kind", kind),
+                ("order", order),
+                ("world", world),
+                ("channel", channel),
+                ("step", step),
+                ("rank", rank),
+            )
+            if val is not None
+        )
+        super().__init__(f"[{check}] {message}" + (f" ({where})" if where else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class VerificationReport:
+    """What the verifier proved about one plan.
+
+    ``effective_channels`` is the channel count the verified tables actually
+    use — when ``mapping.effective_channels`` clamped a request to the largest
+    divisor of the extent, ``requested_channels`` records the original ask so
+    tune-cache records and verifier output cannot silently disagree.
+    """
+
+    kind: str
+    order: str
+    world: int
+    flow: str
+    effective_channels: int
+    requested_channels: Optional[int] = None
+    passes: Tuple[str, ...] = ()
+    checks: int = 0  # individual assertions evaluated
+    events: int = 0  # protocol events simulated (0 if the pass did not run)
+
+    @property
+    def clamped(self) -> bool:
+        return (
+            self.requested_channels is not None
+            and self.requested_channels != self.effective_channels
+        )
+
+    def summary(self) -> str:
+        ch = str(self.effective_channels)
+        if self.clamped:
+            ch += f" (requested {self.requested_channels})"
+        return (
+            f"{self.kind:<13} {self.order:<10} world={self.world:<3} C={ch:<18} "
+            f"passes={'+'.join(self.passes)} checks={self.checks} events={self.events}"
+        )

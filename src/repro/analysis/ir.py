@@ -1,0 +1,77 @@
+"""Table-level view of a plan — the IR the static passes operate on.
+
+:class:`PlanTables` snapshots the exact nested int tuples a
+:class:`~repro.core.plan.TilePlan` bakes into the executors (``src_tables`` /
+``flow_dst_tables`` / ``rs_seg_tables`` / ``rs_dst_tables`` / ``align_perm``),
+so the verifier checks what ships, not a re-derivation.  It is duck-typed on
+the plan object (no ``repro.core`` import) to keep the analysis layer free of
+circular imports — ``core/plan.py`` imports ``analysis.errors``.
+
+The mutation test-suite pokes these tables via ``dataclasses.replace`` to
+seed schedule bugs the verifier must flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+Table = Tuple[Tuple[Tuple[int, ...], ...], ...]  # [channel][step][rank]
+
+__all__ = ["PlanTables", "Table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanTables:
+    """Baked schedule tables for one plan, indexed ``[channel][step][rank]``.
+
+    ``flow_dst`` / ``rs_dst`` may be ``None`` when the plan could not derive
+    them (a source schedule that is not a per-step permutation) — the schedule
+    pass then reports the root cause from ``src`` instead of crashing during
+    table construction.
+    """
+
+    kind: str
+    order: str
+    flow: str  # "ag" | "rs" | "ag_rs"
+    world: int
+    num_channels: int
+    src: Table  # AG origin rank consumed per (c, step, rank)
+    rs_seg: Table  # RS segment reduced per (c, step, rank)
+    flow_dst: Optional[Table]  # AG push destination (last row identity, unused)
+    rs_dst: Optional[Table]  # RS push destination (last row identity, unused)
+    align: Tuple[Tuple[int, ...], ...]  # [channel][rank] ag_rs final-hop dst
+
+    @classmethod
+    def from_plan(cls, plan) -> "PlanTables":
+        """Snapshot the tables a TilePlan-compatible object emits."""
+        try:
+            flow_dst = plan.flow_dst_tables()
+            rs_dst = plan.rs_dst_tables()
+        except ValueError:
+            # not a per-step permutation; the schedule pass reports precisely
+            flow_dst = rs_dst = None
+        return cls(
+            kind=plan.kind,
+            order=plan.channels[0].order,
+            flow=plan.flow,
+            world=plan.world,
+            num_channels=plan.num_channels,
+            src=plan.src_tables(),
+            rs_seg=plan.rs_seg_tables(),
+            flow_dst=flow_dst,
+            rs_dst=rs_dst,
+            align=tuple(tuple(d for _, d in ch.align_perm()) for ch in plan.channels),
+        )
+
+    # ---- mutation helpers (test suite) --------------------------------------
+    def poke(self, table: str, channel: int, step: int, rank: int, value: int) -> "PlanTables":
+        """Return a copy with one entry of ``table`` replaced by ``value``."""
+        rows = [[list(r) for r in ch] for ch in getattr(self, table)]
+        rows[channel][step][rank] = value
+        frozen = tuple(tuple(tuple(r) for r in ch) for ch in rows)
+        return dataclasses.replace(self, **{table: frozen})
+
+    def poke_align(self, channel: int, rank: int, value: int) -> "PlanTables":
+        rows = [list(ch) for ch in self.align]
+        rows[channel][rank] = value
+        return dataclasses.replace(self, align=tuple(tuple(ch) for ch in rows))

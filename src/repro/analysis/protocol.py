@@ -1,0 +1,376 @@
+"""Pass 2 — semaphore-protocol verification of the fused-kernel schedules.
+
+Reconstructs, from a plan's baked int32 tables, the per-(rank, step, channel)
+abstract instruction streams the fused Pallas kernels execute
+(``kernels/ag_gemm.py`` for "ag" flows, ``kernels/gemm_rs.py`` for "rs") —
+local buffer reads/writes, remote-DMA starts, and semaphore waits — then
+model-checks them:
+
+  * ``sem_count``   — every semaphore slot has matched signal/wait totals;
+  * ``deadlock``    — a happens-before simulation (vector clocks, counting
+                      semaphores) runs every rank to completion; a stuck
+                      state is reported with the blocked rank + slot.  A
+                      completed simulation certifies the signal/wait graph is
+                      cycle-free (the constructed happens-before relation is
+                      a partial order by construction);
+  * RAW/WAR/WAW     — every pair of conflicting accesses to a buffer slot
+                      must be ordered by happens-before *through a resolved
+                      semaphore wait*: ``read_before_signal`` (a recv-buffer
+                      slot read without an ordering signal), ``overwritten_
+                      before_wait`` (a slot overwritten while an outstanding
+                      DMA may still be reading it — double-buffer depth
+                      violations), ``double_write`` (two unordered writers).
+
+Counting-semaphore soundness: a wait resolves a DMA's completion (and gains
+its happens-before edge) only when *every* signal that could satisfy it is
+accounted for — the n-th wait on a slot resolves outstanding signals only if
+exactly n have started.  With more starts than consumed credits the credits
+are interchangeable, no completion is learned, and any dependent access is
+flagged.  This is precisely the rule that rejects sharing one send semaphore
+across channels (each channel's ``wait_send`` could consume the other
+channel's completion credit while its own push is still reading the
+accumulator columns — see ``tests/test_analysis.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.errors import PlanVerificationError
+from repro.analysis.ir import PlanTables
+
+__all__ = [
+    "build_streams",
+    "check_streams",
+    "check_protocol",
+    "DmaStart",
+    "Wait",
+    "LocalRead",
+    "LocalWrite",
+]
+
+
+# ---- abstract ops (locations and sems are (name, index), local to a rank) ---
+@dataclasses.dataclass(frozen=True)
+class LocalWrite:
+    loc: Tuple[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalRead:
+    loc: Tuple[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class DmaStart:
+    """Async remote copy: reads ``src`` locally until the send semaphore is
+    signaled; writes ``dst`` at ``dst_rank`` until the recv semaphore is."""
+
+    src: Tuple[str, int]
+    dst_rank: int
+    dst: Tuple[str, int]
+    send_sem: Tuple[str, int]
+    recv_sem: Tuple[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Wait:
+    sem: Tuple[str, int]
+
+
+def build_streams(t: PlanTables, *, shared_rs_send_sem: bool = False) -> Dict[int, list]:
+    """Abstract per-rank instruction streams implied by the plan tables.
+
+    "ag" / "ag_rs" flows model ``kernels/ag_gemm.py`` (the ag_rs double-ring's
+    tile-following reduction is XLA-only, so its semaphore realization is the
+    forward tile flow); "rs" models ``kernels/gemm_rs.py``.
+
+    ``shared_rs_send_sem=True`` reproduces the pre-fix gemm_rs protocol that
+    shared one send semaphore across channels — kept so the test suite can
+    demonstrate the WAR race the verifier flags on it.
+    """
+    if t.flow in ("ag", "ag_rs"):
+        return _ag_streams(t)
+    if t.flow == "rs":
+        return _rs_streams(t, shared_send_sem=shared_rs_send_sem)
+    raise ValueError(f"unknown flow {t.flow!r}")
+
+
+def _ag_streams(t: PlanTables) -> Dict[int, list]:
+    world, nch = t.world, t.num_channels
+    streams = {}
+    for r in range(world):
+        ops: list = []
+        for s in range(world):
+            for c in range(nch):
+                slot = t.src[c][s][r] * nch + c
+                if s == 0:
+                    # stage channel c of the own shard into its gather slot
+                    ops.append(LocalWrite(("gather", r * nch + c)))
+                # consumer_tile_wait's load: gather slot -> VMEM staging
+                ops.append(LocalRead(("gather", slot)))
+                ops.append(LocalWrite(("x_vmem", 0)))
+                if s < world - 1:
+                    # tile_push_data: forward the held tile to the next consumer
+                    d = t.flow_dst[c][s][r]
+                    ops.append(
+                        DmaStart(
+                            src=("x_vmem", 0),
+                            dst_rank=d,
+                            dst=("gather", slot),
+                            send_sem=("send", 0),
+                            recv_sem=("recv", s * nch + c),
+                        )
+                    )
+                ops.append(LocalRead(("x_vmem", 0)))  # MXU consumes the tile
+                if s < world - 1:
+                    ops.append(Wait(("send", 0)))  # x_vmem drained
+                    ops.append(Wait(("recv", s * nch + c)))  # next tile arrived
+        streams[r] = ops
+    return streams
+
+
+def _rs_streams(t: PlanTables, *, shared_send_sem: bool = False) -> Dict[int, list]:
+    world, nch = t.world, t.num_channels
+    streams = {}
+    for r in range(world):
+        ops: list = []
+        for s in range(world):
+            for c in range(nch):
+                send = ("send", 0 if shared_send_sem else c)
+                if s > 0:
+                    # consumer_tile_wait (acquire): stage s-1 partial arrived
+                    ops.append(Wait(("recv", (s - 1) * nch + c)))
+                    ops.append(LocalRead(("rbuf", (s - 1) * nch + c)))
+                    # release: our stage s-1 push drained before acc reuse
+                    ops.append(Wait(send))
+                ops.append(LocalWrite(("acc", c)))  # stage GEMM (+ add prev)
+                if s < world - 1:
+                    d = t.rs_dst[c][s][r]
+                    ops.append(
+                        DmaStart(
+                            src=("acc", c),
+                            dst_rank=d,
+                            dst=("rbuf", s * nch + c),
+                            send_sem=send,
+                            recv_sem=("recv", s * nch + c),
+                        )
+                    )
+                else:
+                    ops.append(LocalRead(("acc", c)))  # final store
+        streams[r] = ops
+    return streams
+
+
+# ---- happens-before model ---------------------------------------------------
+@dataclasses.dataclass
+class _Dma:
+    idx: int
+    rank: int
+    op: DmaStart
+    start: Optional[Tuple[int, ...]] = None
+    send_done: Optional[Tuple[int, ...]] = None
+    recv_done: Optional[Tuple[int, ...]] = None
+
+
+@dataclasses.dataclass
+class _Access:
+    """One access to a global location: a half-open interval [start, done]."""
+
+    is_write: bool
+    rank: int
+    descr: str
+    _start: Optional[Tuple[int, ...]] = None
+    _dma: Optional[_Dma] = None
+    _dma_field: str = ""
+
+    def start(self):
+        return self._dma.start if self._dma is not None else self._start
+
+    def done(self):
+        return getattr(self._dma, self._dma_field) if self._dma is not None else self._start
+
+
+def _dominates(a, b) -> bool:
+    return all(x <= y for x, y in zip(a, b))
+
+
+def _err(message, *, check, t: PlanTables, **kw):
+    raise PlanVerificationError(
+        message, check=check, kind=t.kind, order=t.order, world=t.world, **kw
+    )
+
+
+def check_streams(streams: Dict[int, list], t: PlanTables) -> Tuple[int, int]:
+    """Model-check abstract streams; returns (assertions, events simulated)."""
+    world = t.world
+    checks = 0
+
+    # -- matched signal/wait totals per semaphore slot ------------------------
+    signals: Counter = Counter()
+    waits: Counter = Counter()
+    for r, ops in streams.items():
+        for op in ops:
+            if isinstance(op, DmaStart):
+                signals[(r,) + op.send_sem] += 1
+                signals[(op.dst_rank,) + op.recv_sem] += 1
+            elif isinstance(op, Wait):
+                waits[(r,) + op.sem] += 1
+    for slot in sorted(set(signals) | set(waits)):
+        if signals[slot] != waits[slot]:
+            _err(
+                f"semaphore slot {slot[1]}[{slot[2]}] gets {signals[slot]} "
+                f"signal(s) but {waits[slot]} wait(s)",
+                check="sem_count",
+                t=t,
+                rank=slot[0],
+            )
+        checks += 1
+
+    # -- happens-before simulation (vector clocks, counting semaphores) -------
+    clocks = {r: [0] * world for r in streams}
+    pc = {r: 0 for r in streams}
+    slot_started: Dict[tuple, List[Tuple[_Dma, str]]] = defaultdict(list)
+    slot_consumed: Counter = Counter()
+    slot_wait_events: Dict[tuple, List[Tuple[tuple, bool]]] = defaultdict(list)
+    accesses: Dict[tuple, List[_Access]] = defaultdict(list)
+    dmas: List[_Dma] = []
+    events = 0
+
+    def _tick(r, joins=()):
+        clk = clocks[r]
+        for j in joins:
+            for i in range(world):
+                clk[i] = max(clk[i], j[i])
+        clk[r] += 1
+        return tuple(clk)
+
+    progress = True
+    while progress:
+        progress = False
+        for r in sorted(streams):
+            ops = streams[r]
+            while pc[r] < len(ops):
+                op = ops[pc[r]]
+                if isinstance(op, Wait):
+                    slot = (r,) + op.sem
+                    if len(slot_started[slot]) <= slot_consumed[slot]:
+                        break  # blocked: no unconsumed signal can fire yet
+                    n = slot_consumed[slot]
+                    slot_consumed[slot] += 1
+                    started = slot_started[slot]
+                    resolved = []
+                    if len(started) == n + 1:
+                        # every signal that could satisfy this wait is
+                        # accounted for: all of them fired before it returned
+                        resolved = [
+                            (d, f)
+                            for d, f in started
+                            if getattr(d, f + "_done") is None
+                        ]
+                    ev = _tick(r, joins=[d.start for d, _ in resolved])
+                    for d, f in resolved:
+                        setattr(d, f + "_done", ev)
+                    slot_wait_events[slot].append((ev, bool(resolved)))
+                elif isinstance(op, DmaStart):
+                    d = _Dma(idx=len(dmas), rank=r, op=op)
+                    d.start = _tick(r)
+                    dmas.append(d)
+                    slot_started[(r,) + op.send_sem].append((d, "send"))
+                    slot_started[(op.dst_rank,) + op.recv_sem].append((d, "recv"))
+                    accesses[(r,) + op.src].append(
+                        _Access(False, r, f"dma read by rank {r}", _dma=d, _dma_field="send_done")
+                    )
+                    accesses[(op.dst_rank,) + op.dst].append(
+                        _Access(True, r, f"dma write from rank {r}", _dma=d, _dma_field="recv_done")
+                    )
+                else:
+                    ev = _tick(r)
+                    accesses[(r,) + op.loc].append(
+                        _Access(isinstance(op, LocalWrite), r, "local access", _start=ev)
+                    )
+                pc[r] += 1
+                events += 1
+                progress = True
+    blocked = [r for r in streams if pc[r] < len(streams[r])]
+    if blocked:
+        r = blocked[0]
+        op = streams[r][pc[r]]
+        _err(
+            f"no rank can advance; rank {r} blocked on semaphore "
+            f"{op.sem if isinstance(op, Wait) else op} "
+            f"(stuck ranks: {blocked})",
+            check="deadlock",
+            t=t,
+            rank=r,
+        )
+    checks += 1
+
+    # -- post-check: no wait resolved a signal it could not uniquely claim ----
+    for slot, wait_events in slot_wait_events.items():
+        started = slot_started[slot]
+        for idx, (ev, did_resolve) in enumerate(wait_events):
+            if not did_resolve:
+                continue
+            candidates = sum(
+                1 for d, _f in started if not (_dominates(ev, d.start) and ev != d.start)
+            )
+            if candidates > idx + 1:
+                _err(
+                    f"semaphore slot {slot[1]}[{slot[2]}] is over-subscribed: "
+                    f"wait #{idx + 1} could be satisfied by {candidates} signals",
+                    check="ambiguous_wait",
+                    t=t,
+                    rank=slot[0],
+                )
+            checks += 1
+
+    # -- data races: every conflicting pair must be HB-ordered ----------------
+    def _ordered(a: _Access, b: _Access) -> bool:
+        return a.done() is not None and _dominates(a.done(), b.start())
+
+    for gloc in sorted(accesses):
+        accs = accesses[gloc]
+        loc_name = f"{gloc[1]}[{gloc[2]}] at rank {gloc[0]}"
+        for i, a in enumerate(accs):
+            if not a.is_write:
+                if not any(w.is_write and _ordered(w, a) for w in accs):
+                    _err(
+                        f"{loc_name} is read ({a.descr}) with no signal "
+                        "ordering it after any write",
+                        check="read_before_signal",
+                        t=t,
+                        rank=gloc[0],
+                    )
+                checks += 1
+            for b in accs[i + 1 :]:
+                if not (a.is_write or b.is_write):
+                    continue
+                if _ordered(a, b) or _ordered(b, a):
+                    checks += 1
+                    continue
+                if a.is_write and b.is_write:
+                    check = "double_write"
+                    msg = f"{loc_name} has two unordered writers ({a.descr} / {b.descr})"
+                else:
+                    rd, wr = (a, b) if not a.is_write else (b, a)
+                    if rd._dma is not None:
+                        check = "overwritten_before_wait"
+                        msg = (
+                            f"{loc_name} is overwritten ({wr.descr}) while an "
+                            f"outstanding DMA ({rd.descr}) may still be reading it"
+                        )
+                    else:
+                        check = "read_before_signal"
+                        msg = (
+                            f"{loc_name} read ({rd.descr}) races with an "
+                            f"unordered write ({wr.descr})"
+                        )
+                _err(msg, check=check, t=t, rank=gloc[0])
+    return checks, events
+
+
+def check_protocol(t: PlanTables) -> Tuple[int, int]:
+    """Build the flow's streams from the tables and model-check them."""
+    return check_streams(build_streams(t), t)

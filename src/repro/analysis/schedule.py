@@ -1,0 +1,203 @@
+"""Pass 1 — schedule legality for the baked plan tables.
+
+Checks, per channel (raising :class:`PlanVerificationError` on the first
+violation, with the failing (kind, order, world, channel, step, rank)):
+
+  * ``per_step_permutation``  — sigma(., step) is a permutation of ranks;
+  * ``seed_identity``         — sigma(r, 0) == r (the flow starts local);
+  * ``ag_coverage``           — every rank consumes every origin exactly once;
+  * ``flow_composition``      — flow_perm(step) delivers sigma(., step + 1):
+                                src[dst(j)] at step+1 == src[j] at step, and
+                                each dst row is itself a permutation;
+  * ``rs_time_reversal``      — rs_seg(r, s) == sigma(r, world - 1 - s);
+  * ``rs_home``               — rs_seg(r, world - 1) == r (reduction lands on
+                                its home rank);
+  * ``rs_composition``        — rs_dst rows compose with rs_seg the same way;
+  * ``align_home``            — align_perm routes the ag_rs tile-following
+                                reduction to the origin of the tile held last:
+                                align(j) == sigma(j, world - 1);
+  * ``slot_partition``        — per rank the (origin, channel) gather slots
+                                are hit exactly once (no overlap / no gap in
+                                the multi-channel block partition).
+
+All checks run off the precomputed O(world^2 * channels) tables, so a full
+verification is microseconds even at dry-run world sizes.
+"""
+from __future__ import annotations
+
+from repro.analysis.errors import PlanVerificationError
+from repro.analysis.ir import PlanTables
+
+__all__ = ["check_schedule", "check_channel_partition"]
+
+
+def check_channel_partition(extent: int, num_channels: int) -> int:
+    """Check C block sub-chunks tile ``[0, extent)`` with no overlap or gap.
+
+    Returns the number of assertions evaluated.  ``extent`` is the chunked
+    operand extent (columns for matmul flows, tokens for attention/MoE).
+    """
+    if num_channels < 1 or extent % num_channels:
+        raise PlanVerificationError(
+            f"{num_channels} channels do not evenly partition extent {extent}",
+            check="channel_partition",
+        )
+    sub = extent // num_channels
+    covered = []
+    for c in range(num_channels):
+        covered.extend(range(c * sub, (c + 1) * sub))
+    if covered != list(range(extent)):
+        raise PlanVerificationError(
+            f"channel blocks overlap or leave a gap over extent {extent}",
+            check="channel_partition",
+        )
+    return num_channels + 1
+
+
+def _ctx(t: PlanTables, **kw):
+    return dict(kind=t.kind, order=t.order, world=t.world, **kw)
+
+
+def _check_perm_row(t: PlanTables, row, *, check: str, channel: int, step: int) -> None:
+    seen = [0] * t.world
+    for r, v in enumerate(row):
+        if not (0 <= v < t.world) or seen[v]:
+            raise PlanVerificationError(
+                f"{'duplicate' if 0 <= v < t.world and seen[v] else 'out-of-range'} "
+                f"entry {v} — row is not a permutation of ranks",
+                check=check,
+                rank=r,
+                **_ctx(t, channel=channel, step=step),
+            )
+        seen[v] = 1
+
+
+def check_schedule(t: PlanTables) -> int:
+    """Run every schedule-legality check; returns assertions evaluated."""
+    world, checks = t.world, 0
+
+    for c in range(t.num_channels):
+        src_c = t.src[c]
+        # per-step permutation + seed identity
+        for s in range(world):
+            _check_perm_row(t, src_c[s], check="per_step_permutation", channel=c, step=s)
+            checks += 1
+        for r in range(world):
+            if src_c[0][r] != r:
+                raise PlanVerificationError(
+                    f"sigma(r, 0) == {src_c[0][r]}, expected r — the flow must "
+                    "start from the local shard",
+                    check="seed_identity",
+                    rank=r,
+                    **_ctx(t, channel=c, step=0),
+                )
+            # AG coverage: each rank consumes every origin exactly once
+            if sorted(src_c[s][r] for s in range(world)) != list(range(world)):
+                raise PlanVerificationError(
+                    "rank does not consume every origin exactly once over the pass",
+                    check="ag_coverage",
+                    rank=r,
+                    **_ctx(t, channel=c),
+                )
+            checks += 2
+
+        # flow composition: dst row is a permutation delivering sigma(., s+1)
+        if t.flow_dst is None:
+            raise PlanVerificationError(
+                "flow destination tables could not be derived (source schedule "
+                "is not a per-step permutation)",
+                check="flow_composition",
+                **_ctx(t, channel=c),
+            )
+        for s in range(world - 1):
+            dst_row = t.flow_dst[c][s]
+            _check_perm_row(t, dst_row, check="flow_composition", channel=c, step=s)
+            for j in range(world):
+                d = dst_row[j]
+                if src_c[s + 1][d] != src_c[s][j]:
+                    raise PlanVerificationError(
+                        f"flow_perm sends rank {j}'s held tile (origin "
+                        f"{src_c[s][j]}) to rank {d}, which consumes origin "
+                        f"{src_c[s + 1][d]} next",
+                        check="flow_composition",
+                        rank=j,
+                        **_ctx(t, channel=c, step=s),
+                    )
+                checks += 1
+
+        # RS view: time reversal of sigma, ending at the home rank
+        seg_c = t.rs_seg[c]
+        for s in range(world):
+            for r in range(world):
+                if seg_c[s][r] != src_c[world - 1 - s][r]:
+                    raise PlanVerificationError(
+                        f"rs_segment {seg_c[s][r]} is not the time reversal "
+                        f"sigma(r, world-1-s) == {src_c[world - 1 - s][r]}",
+                        check="rs_time_reversal",
+                        rank=r,
+                        **_ctx(t, channel=c, step=s),
+                    )
+                checks += 1
+        for r in range(world):
+            if seg_c[world - 1][r] != r:
+                raise PlanVerificationError(
+                    f"final segment {seg_c[world - 1][r]} is not the home rank",
+                    check="rs_home",
+                    rank=r,
+                    **_ctx(t, channel=c, step=world - 1),
+                )
+            checks += 1
+        if t.rs_dst is None:
+            raise PlanVerificationError(
+                "rs destination tables could not be derived",
+                check="rs_composition",
+                **_ctx(t, channel=c),
+            )
+        for s in range(world - 1):
+            dst_row = t.rs_dst[c][s]
+            _check_perm_row(t, dst_row, check="rs_composition", channel=c, step=s)
+            for j in range(world):
+                d = dst_row[j]
+                if seg_c[s + 1][d] != seg_c[s][j]:
+                    raise PlanVerificationError(
+                        f"rs_perm sends rank {j}'s partial (segment "
+                        f"{seg_c[s][j]}) to rank {d}, which reduces segment "
+                        f"{seg_c[s + 1][d]} next",
+                        check="rs_composition",
+                        rank=j,
+                        **_ctx(t, channel=c, step=s),
+                    )
+                checks += 1
+
+        # ag_rs final alignment hop: deliver the reduction for the tile held
+        # last (origin sigma(j, world-1)) to that origin rank
+        for j in range(world):
+            if t.align[c][j] != src_c[world - 1][j]:
+                raise PlanVerificationError(
+                    f"align_perm sends rank {j}'s reduction to "
+                    f"{t.align[c][j]}, but the tile it followed originates at "
+                    f"{src_c[world - 1][j]}",
+                    check="align_home",
+                    rank=j,
+                    **_ctx(t, channel=c, step=world - 1),
+                )
+            checks += 1
+
+    # slot partition across channels: per rank, the (origin, channel) gather
+    # slots are each hit exactly once — no overlap, no gap
+    for r in range(world):
+        slots = sorted(
+            t.src[c][s][r] * t.num_channels + c
+            for c in range(t.num_channels)
+            for s in range(world)
+        )
+        if slots != list(range(world * t.num_channels)):
+            raise PlanVerificationError(
+                "gather-buffer slots are not a partition: some (origin, "
+                "channel) slot is reused or never consumed",
+                check="slot_partition",
+                rank=r,
+                **_ctx(t),
+            )
+        checks += 1
+    return checks

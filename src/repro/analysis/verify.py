@@ -1,0 +1,162 @@
+"""Plan-IR verifier entry points + the ``python -m repro.analysis.verify`` CLI.
+
+``verify_plan`` runs the schedule-legality pass (always) and the semaphore-
+protocol pass (for worlds up to ``REPRO_VERIFY_PROTOCOL_MAX_WORLD``, default
+32 — the protocol simulation is O(world^2 * channels) events with world-length
+vector clocks, so it is skipped at dry-run mesh sizes where the schedule pass
+alone still runs in microseconds).
+
+``build_plan`` calls ``verify_plan`` on every freshly built plan unless
+``REPRO_VERIFY=0`` (see ``core/plan.py``); ``check_candidate`` is the cached
+boolean form the tuner uses to reject illegal candidates before spending
+measurement budget.  ``python -m repro.analysis.verify --all`` exhaustively
+verifies the shipped plan space (all kinds x orders x world in {2,4,8} x
+C in {1,2,4}) with no JAX device — it is the CI ``verify`` job.
+
+This module imports ``repro.core`` lazily (inside functions) so the analysis
+package stays importable from ``core/plan.py`` without a cycle.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+from typing import Optional, Sequence
+
+from repro.analysis.errors import PlanVerificationError, VerificationReport
+from repro.analysis.ir import PlanTables
+from repro.analysis.protocol import check_protocol
+from repro.analysis.schedule import check_schedule
+
+__all__ = ["verify_plan", "verify_tables", "check_candidate", "verify_space", "main"]
+
+# shipped plan space: what `--all` (and the CI verify job) proves well-formed
+SPACE_WORLDS = (2, 4, 8)
+SPACE_CHANNELS = (1, 2, 4)
+
+
+def _protocol_max_world() -> int:
+    return int(os.environ.get("REPRO_VERIFY_PROTOCOL_MAX_WORLD", "32"))
+
+
+def verify_tables(
+    tables: PlanTables,
+    *,
+    protocol: Optional[bool] = None,
+    requested_channels: Optional[int] = None,
+) -> VerificationReport:
+    """Verify baked tables; raises PlanVerificationError, returns a report."""
+    checks = check_schedule(tables)
+    passes = ["schedule"]
+    events = 0
+    if protocol is None:
+        protocol = tables.world <= _protocol_max_world()
+    if protocol:
+        pchecks, events = check_protocol(tables)
+        checks += pchecks
+        passes.append("protocol")
+    return VerificationReport(
+        kind=tables.kind,
+        order=tables.order,
+        world=tables.world,
+        flow=tables.flow,
+        effective_channels=tables.num_channels,
+        requested_channels=requested_channels,
+        passes=tuple(passes),
+        checks=checks,
+        events=events,
+    )
+
+
+def verify_plan(
+    plan,
+    *,
+    protocol: Optional[bool] = None,
+    requested_channels: Optional[int] = None,
+) -> VerificationReport:
+    """Statically verify one :class:`~repro.core.plan.TilePlan`."""
+    return verify_tables(
+        PlanTables.from_plan(plan),
+        protocol=protocol,
+        requested_channels=requested_channels,
+    )
+
+
+@functools.lru_cache(maxsize=4096)
+def check_candidate(kind: str, order: str, world: int, num_channels: int) -> Optional[str]:
+    """Cheap cached legality probe for the tuner: None if legal, else the
+    structured diagnosis message (same one the executor would raise)."""
+    from repro.core.channels import BlockChannel, CommSpec
+    from repro.core.plan import build_plan
+
+    channel = BlockChannel(axis="model", comm=CommSpec(order=order), num_channels=num_channels)
+    try:
+        plan = build_plan(kind, channel, world, num_channels)
+        verify_plan(plan)
+    except PlanVerificationError as e:
+        return str(e)
+    return None
+
+
+def verify_space(
+    *,
+    kinds: Optional[Sequence[str]] = None,
+    orders: Optional[Sequence[str]] = None,
+    worlds: Sequence[int] = SPACE_WORLDS,
+    channels: Sequence[int] = SPACE_CHANNELS,
+    protocol: Optional[bool] = None,
+):
+    """Yield a VerificationReport per point of the shipped plan space."""
+    from repro.core.channels import ORDERS, BlockChannel, CommSpec
+    from repro.core.plan import FLOW_OF_KIND, build_plan
+
+    for kind in kinds if kinds is not None else sorted(FLOW_OF_KIND):
+        for order in orders if orders is not None else ORDERS:
+            for world in worlds:
+                for nch in channels:
+                    ch = BlockChannel(axis="model", comm=CommSpec(order=order), num_channels=nch)
+                    plan = build_plan(kind, ch, world, nch)
+                    yield verify_plan(plan, protocol=protocol, requested_channels=nch)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.verify",
+        description="Statically verify TilePlan schedules + semaphore protocols.",
+    )
+    p.add_argument("--all", action="store_true", help="verify the full shipped plan space")
+    p.add_argument("--kind", action="append", help="workload kind(s) to verify")
+    p.add_argument("--order", action="append", help="tile order(s) to verify")
+    p.add_argument("--world", type=int, action="append", help="world size(s)")
+    p.add_argument("--channels", type=int, action="append", help="channel count(s)")
+    p.add_argument("--quiet", action="store_true", help="only print failures + the summary line")
+    args = p.parse_args(argv)
+    if not (args.all or args.kind or args.order or args.world or args.channels):
+        p.error("nothing to verify: pass --all or narrow with --kind/--order/--world/--channels")
+
+    from repro.core.channels import ORDERS
+    from repro.core.plan import FLOW_OF_KIND
+
+    ok = failed = 0
+    for kind in args.kind or sorted(FLOW_OF_KIND):
+        for order in args.order or ORDERS:
+            try:
+                for report in verify_space(
+                    kinds=[kind],
+                    orders=[order],
+                    worlds=args.world or SPACE_WORLDS,
+                    channels=args.channels or SPACE_CHANNELS,
+                ):
+                    ok += 1
+                    if not args.quiet:
+                        print(f"ok   {report.summary()}")
+            except PlanVerificationError as e:
+                failed += 1
+                print(f"FAIL {e}")
+    status = "verified" if not failed else "FAILED"
+    print(f"{status}: {ok} plan(s) ok, {failed} failure(s)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,9 +48,10 @@ def _version_tuple(v: str) -> tuple:
 JAX_VERSION = _version_tuple(jax.__version__)
 
 # ---- mesh / shard_map surface ------------------------------------------------
-HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")          # >= 0.6
-HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")              # >= 0.7 public API
-HAS_JAX_MAKE_MESH = hasattr(jax, "make_mesh")              # >= 0.4.35
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")  # >= 0.6
+HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")  # >= 0.7 public API
+HAS_JAX_MAKE_MESH = hasattr(jax, "make_mesh")  # >= 0.4.35
+
 
 def _probe(names, *modules):
     """First attribute found under any of ``names`` on any module, else a

@@ -30,6 +30,7 @@ def _flatten(tree):
 
 
 class CheckpointManager:
+
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
         self.keep = keep
@@ -42,7 +43,7 @@ class CheckpointManager:
         """Snapshot (device->host copy happens synchronously; I/O is async)."""
         tree = {"params": params, "opt": opt_state}
         flat, treedef = _flatten(tree)
-        host = [np.asarray(x) for x in flat]           # sync: consistent snapshot
+        host = [np.asarray(x) for x in flat]  # sync: consistent snapshot
         meta = {
             "step": int(step),
             "extra": extra or {},

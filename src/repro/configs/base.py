@@ -13,52 +13,52 @@ __all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "Shape", "SHAPES", "get_confi
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
-    num_experts: int                 # routed experts (pre-padding)
+    num_experts: int  # routed experts (pre-padding)
     top_k: int
-    d_expert: int                    # expert intermediate size
-    num_shared: int = 0              # shared experts (DeepSeek-style)
-    first_k_dense: int = 0           # leading layers that use a dense MLP
-    dense_d_ff: int = 0              # d_ff of those dense layers
+    d_expert: int  # expert intermediate size
+    num_shared: int = 0  # shared experts (DeepSeek-style)
+    first_k_dense: int = 0  # leading layers that use a dense MLP
+    dense_d_ff: int = 0  # d_ff of those dense layers
     capacity_factor: float = 1.25
     aux_loss_weight: float = 0.01
 
 
 @dataclasses.dataclass(frozen=True)
 class SSMConfig:
-    d_state: int                     # N
-    headdim: int = 64                # P
-    n_groups: int = 1                # G (B/C groups)
+    d_state: int  # N
+    headdim: int = 64  # P
+    n_groups: int = 1  # G (B/C groups)
     d_conv: int = 4
-    expand: int = 2                  # d_inner = expand * d_model
-    chunk: int = 64                  # SSD chunk length
+    expand: int = 2  # d_inner = expand * d_model
+    chunk: int = 64  # SSD chunk length
 
 
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
     n_layers: int
     d_model: int
     n_heads: int
     n_kv_heads: int
     d_ff: int
     vocab_size: int
-    head_dim: int = 0                # 0 -> d_model // n_heads
+    head_dim: int = 0  # 0 -> d_model // n_heads
     qkv_bias: bool = False
     rope_theta: float = 1e4
-    rope_theta_local: float = 1e4           # theta for attn_local layers (gemma3)
-    local_window: Optional[int] = None      # sliding-window size for local layers
-    pattern: Tuple[str, ...] = ("attn",)    # layer-kind pattern, tiled over depth
+    rope_theta_local: float = 1e4  # theta for attn_local layers (gemma3)
+    local_window: Optional[int] = None  # sliding-window size for local layers
+    pattern: Tuple[str, ...] = ("attn",)  # layer-kind pattern, tiled over depth
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
-    encoder_layers: int = 0          # >0 -> encoder-decoder
-    frontend: Optional[str] = None   # "vision" | "audio" stub frontends
+    encoder_layers: int = 0  # >0 -> encoder-decoder
+    frontend: Optional[str] = None  # "vision" | "audio" stub frontends
     norm_eps: float = 1e-6
     act: str = "silu"
     tie_embeddings: bool = False
-    sub_quadratic: bool = False      # eligible for long_500k decode
+    sub_quadratic: bool = False  # eligible for long_500k decode
     # serving defaults
-    enc_len: int = 4096              # stub encoder length for enc-dec decode
+    enc_len: int = 4096  # stub encoder length for enc-dec decode
 
     @property
     def hd(self) -> int:
@@ -66,7 +66,7 @@ class ArchConfig:
 
     def layer_kind(self, i: int) -> str:
         if self.moe and i < self.moe.first_k_dense:
-            return "attn_dense"      # leading dense-MLP layers (DeepSeek)
+            return "attn_dense"  # leading dense-MLP layers (DeepSeek)
         return self.pattern[i % len(self.pattern)]
 
     def param_count(self) -> int:
@@ -118,7 +118,7 @@ class Shape:
     name: str
     seq_len: int
     global_batch: int
-    kind: str                        # "train" | "prefill" | "decode"
+    kind: str  # "train" | "prefill" | "decode"
 
 
 SHAPES = {

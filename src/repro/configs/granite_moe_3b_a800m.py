@@ -9,7 +9,7 @@ CONFIG = register(ArchConfig(
     d_model=1536,
     n_heads=24,
     n_kv_heads=8,
-    d_ff=0,                      # FFN is MoE-only
+    d_ff=0,  # FFN is MoE-only
     vocab_size=49155,
     head_dim=64,
     rope_theta=1e4,

@@ -26,14 +26,36 @@ A plan captures a producer/consumer tile graph over ``world`` ranks:
   * the **flow dtype** (``CompSpec.accum_dtype``) partial reductions travel in.
 
 Plans are host-side, hashable, and cached: ``build_plan`` is keyed on
-``(kind, channel, world, num_channels)``.
+``(kind, channel, world, num_channels)`` (bounded LRU; ``plan_cache_info``
+surfaces hits/misses to the bench gate).
+
+Invariants — every plan must satisfy these; each is proven statically by the
+named pass in ``repro.analysis`` on every ``build_plan`` miss (``REPRO_VERIFY=0``
+opts out) and exhaustively by ``python -m repro.analysis.verify --all``:
+
+  * sigma(., step) is a permutation of ranks and sigma(r, 0) == r
+    (``per_step_permutation`` / ``seed_identity``);
+  * every rank consumes every origin exactly once over a pass
+    (``ag_coverage``; with channels: ``slot_partition``);
+  * ``flow_perm(step)`` delivers exactly sigma(., step + 1) and ``rs_perm``
+    delivers the time-reversed segment schedule (``flow_composition`` /
+    ``rs_composition``);
+  * ``rs_segment`` is the time reversal of sigma ending at the home rank
+    (``rs_time_reversal`` / ``rs_home``); ``align_perm`` routes the ag_rs
+    reduction to the origin of the tile held last (``align_home``);
+  * the semaphore protocol the fused kernels run over these tables is
+    deadlock- and race-free (``analysis.protocol``: ``sem_count`` /
+    ``deadlock`` / ``read_before_signal`` / ``overwritten_before_wait`` /
+    ``double_write``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Tuple
 
+from repro.analysis.errors import PlanVerificationError
 from repro.core import schedules
 from repro.core.channels import BlockChannel, ORDERS
 
@@ -93,9 +115,15 @@ class ChannelSchedule:
         """
         inv = {self.source(d, step + 1): d for d in range(self.world)}
         if len(inv) != self.world:
-            raise ValueError(
-                f"order {self.order!r} is not a per-step permutation at "
-                f"step {step + 1} (world={self.world})"
+            # normally caught at verify-time (build_plan runs the analysis
+            # passes); raised structured here too so a REPRO_VERIFY=0 run
+            # still reports the same diagnosis as the tuner's candidate filter
+            raise PlanVerificationError(
+                "source schedule is not a per-step permutation",
+                check="per_step_permutation",
+                order=self.order,
+                world=self.world,
+                step=step + 1,
             )
         return tuple((j, inv[self.source(j, step)]) for j in range(self.world))
 
@@ -212,13 +240,16 @@ def _directions(order: str, num_channels: int) -> Tuple[int, ...]:
     return (1,) * num_channels
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=256)
 def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) -> TilePlan:
     """Build (and cache) the tile plan for ``kind`` over ``world`` ranks.
 
     ``num_channels`` is the *effective* channel count — callers run the
     requested ``channel.num_channels`` through ``mapping.effective_channels``
-    against the chunked extent first, so the cache key is exact.
+    against the chunked extent first, so the cache key is exact.  The cache is
+    a bounded LRU (long-running serving processes sweep many shapes); every
+    miss is statically verified by the ``repro.analysis`` passes unless
+    ``REPRO_VERIFY=0``.
     """
     if kind not in FLOW_OF_KIND:
         raise ValueError(f"unknown workload kind {kind!r}; one of {tuple(FLOW_OF_KIND)}")
@@ -227,7 +258,7 @@ def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) 
         ChannelSchedule(order=order, world=world, direction=d)
         for d in _directions(order, num_channels)
     )
-    return TilePlan(
+    plan = TilePlan(
         kind=kind,
         axis=channel.axis,
         world=world,
@@ -236,6 +267,11 @@ def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) 
         flow_dtype=channel.comp.accum_dtype,
         channels=chans,
     )
+    if os.environ.get("REPRO_VERIFY", "1").lower() not in ("0", "false", "off"):
+        from repro import analysis  # lazy: analysis imports back into core
+
+        analysis.verify_plan(plan)
+    return plan
 
 
 def plan_cache_info():

@@ -25,7 +25,7 @@ class SyntheticLM:
     seq_len: int
     global_batch: int
     seed: int = 0
-    cursor: int = 0                # global step cursor (checkpointed)
+    cursor: int = 0  # global step cursor (checkpointed)
     n_hosts: int = 1
     host_id: int = 0
 

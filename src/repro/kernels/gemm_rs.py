@@ -24,7 +24,9 @@ segment and is stored to the local output columns (paper lines 22-23).
 Race-freedom: receive buffers are slot-per-(stage, channel) (written exactly
 once per pass — no credit counters needed); the outgoing partial is pushed
 straight from the accumulator's channel columns, guarded by ``wait_send``
-(release, §4.2) before those columns are overwritten next stage.
+(release, §4.2) on a *per-channel* send semaphore before those columns are
+overwritten next stage (a shared send semaphore makes the release credits of
+concurrent channels interchangeable — a WAR race ``repro.analysis`` flags).
 
 VMEM budget: the flowing accumulator is [m_loc, N] resident in VMEM; pick
 m_loc * N * 4B ≲ 4 MiB per call (the TP shard sizes used by the models obey
@@ -61,7 +63,7 @@ def _gemm_rs_kernel(
     prev,
     out_cast,
     copy_sem,
-    send_sem,
+    send_sems,
     recv_sems,
     rbuf,
     *,
@@ -88,10 +90,15 @@ def _gemm_rs_kernel(
         # identical descriptor on sender & receiver (SPMD) — sender start()s,
         # receiver wait_recv()s, sender wait_send()s before the accumulator
         # columns are overwritten.  Source: the channel's accumulator columns.
+        # The send semaphore is per-channel: with a shared one the wait_send
+        # credits of concurrent channels are interchangeable, so channel c's
+        # stage-(s-1) push could still be reading its acc columns when stage s
+        # overwrites them (analysis.protocol flags this as
+        # overwritten_before_wait for num_channels >= 2).
         return primitives.make_tile_push(
             src_ref=acc.at[:, pl.ds(c * n_sub, n_sub)],
             dst_ref=rbuf.at[stage * nch + c],
-            send_sem=send_sem,
+            send_sem=send_sems.at[c],
             recv_sem=recv_sems.at[stage * nch + c],
             rank=dst,
         )
@@ -222,7 +229,7 @@ def gemm_rs_shard(
             backend.vmem_scratch((m_loc, n_sub), flow),  # received partial
             backend.vmem_scratch((m_loc, n_sub), x.dtype),  # final cast
             backend.dma_semaphore(),  # local copies
-            backend.dma_semaphore(),  # sends
+            backend.dma_semaphore((nch,)),  # per-channel sends (release order)
             backend.dma_semaphore((world_size * nch,)),  # per-(stage,ch) recv
             backend.vmem_scratch((world_size * nch, m_loc, n_sub), flow),  # rbuf
         ],

@@ -23,9 +23,9 @@ from typing import Dict, Tuple
 __all__ = ["HW", "parse_collective_bytes", "roofline_terms", "model_flops"]
 
 HW = {
-    "peak_flops": 197e12,   # bf16 TFLOP/s per chip (v5e)
-    "hbm_bw": 819e9,        # B/s per chip
-    "link_bw": 50e9,        # B/s per ICI link
+    "peak_flops": 197e12,  # bf16 TFLOP/s per chip (v5e)
+    "hbm_bw": 819e9,  # B/s per chip
+    "link_bw": 50e9,  # B/s per ICI link
 }
 
 _DTYPE_BYTES = {
@@ -85,7 +85,7 @@ def parse_collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
         if kind == "all-gather":
             w = (g - 1) / g if g > 1 else 0.0
         elif kind == "reduce-scatter":
-            w = (g - 1) if g > 1 else 0.0   # payload is post-scatter (1/g size)
+            w = (g - 1) if g > 1 else 0.0  # payload is post-scatter (1/g size)
         elif kind == "all-reduce":
             w = 2 * (g - 1) / g if g > 1 else 0.0
         elif kind == "collective-permute":

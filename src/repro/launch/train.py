@@ -59,8 +59,7 @@ def train(arch: str, *, steps=100, batch=8, seq=256, reduce=True,
     mod = model_module(cfg)
 
     elastic = ElasticMesh(target_model=16 if production_mesh else 2)
-    mesh, usable = (make_production_mesh(), 256) if production_mesh \
-        else elastic.build()
+    mesh, usable = (make_production_mesh(), 256) if production_mesh else elastic.build()
     pc = ParallelContext(mesh=mesh, mode=mode)
 
     params = mod.init(jax.random.PRNGKey(0), cfg, pc, dtype)

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 __all__ = ["vision_prefix_len", "audio_frames_len", "stub_patch_embeddings",
            "stub_frame_embeddings"]
 
-VISION_PATCHES = 256      # SigLIP 16x16 grid stub
-AUDIO_FRAME_STRIDE = 8    # speech frames per text token (stub ratio)
+VISION_PATCHES = 256  # SigLIP 16x16 grid stub
+AUDIO_FRAME_STRIDE = 8  # speech frames per text token (stub ratio)
 
 
 def vision_prefix_len(seq_len: int) -> int:

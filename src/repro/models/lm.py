@@ -30,11 +30,11 @@ __all__ = ["init", "specs", "forward", "init_caches", "cache_specs",
 
 @dataclasses.dataclass(frozen=True)
 class LayerDef:
-    kind: str              # attn | attn_local | attn_dense | mamba | shared_attn
+    kind: str  # attn | attn_local | attn_dense | mamba | shared_attn
     ffn_kind: Optional[str]  # mlp | moe | None
     window: Optional[int]
     theta: float
-    shared: bool = False   # parameters shared across occurrences (zamba2)
+    shared: bool = False  # parameters shared across occurrences (zamba2)
 
     # ---- params ---------------------------------------------------------------
     def init(self, key, cfg, pc, dtype):
@@ -45,8 +45,7 @@ class LayerDef:
         elif not self.shared:
             p["mixer"] = attention.init(ks[0], cfg, pc.tp, dtype)
         if self.ffn_kind == "mlp":
-            d_ff = cfg.moe.dense_d_ff if self.kind == "attn_dense" and cfg.moe \
-                else cfg.d_ff
+            d_ff = cfg.moe.dense_d_ff if self.kind == "attn_dense" and cfg.moe else cfg.d_ff
             p["ffn"] = ffn.init(ks[1], cfg, pc.tp, dtype, d_ff=d_ff)
         elif self.ffn_kind == "moe":
             p["ffn"] = moe.init(ks[1], cfg, pc.tp, dtype)

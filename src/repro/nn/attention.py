@@ -260,7 +260,7 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
     b, s_loc, _ = x.shape
     h = rms_norm(x, params["ln"], cfg.norm_eps)
 
-    q = pc.ag_matmul(h, params["wq"])             # [B, S, h_loc*hd] gathered
+    q = pc.ag_matmul(h, params["wq"])  # [B, S, h_loc*hd] gathered
     kv = jnp.einsum("bsd,dn->bsn", h, params["wkv"])  # [B, s_loc, ...] local
     if "bq" in params:
         q = q + params["bq"]
@@ -281,7 +281,7 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
 
     o = pc.ring_attention(q, k, v, causal=causal, window=window)
     o_flat = o.transpose(0, 2, 1, 3).reshape(b, s_glob, lay.h_loc * hd)
-    out = pc.matmul_rs(o_flat, params["wo"])      # [B, s_loc, D]
+    out = pc.matmul_rs(o_flat, params["wo"])  # [B, s_loc, D]
     return x + out
 
 
@@ -296,8 +296,8 @@ def apply_cross_seq(params, x, enc, pc, cfg):
     b = x.shape[0]
     h = rms_norm(x, params["ln"], cfg.norm_eps)
 
-    q = pc.ag_matmul(h, params["wq"])        # [B, Sd, h_loc*hd]
-    kv = pc.ag_matmul(enc, params["wkv"])    # [B, Se, kv_loc*2hd]
+    q = pc.ag_matmul(h, params["wq"])  # [B, Sd, h_loc*hd]
+    kv = pc.ag_matmul(enc, params["wkv"])  # [B, Se, kv_loc*2hd]
     if "bq" in params:
         q = q + params["bq"]
         kv = kv + params["bkv"]

@@ -50,7 +50,7 @@ def apply_seq(params, x, pc, cfg, *, tune=False):
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     h = rms_norm(x, params["ln"], cfg.norm_eps)
-    gu = pc.ag_matmul(h, params["w_gu"])           # AG + GEMM  [B, S, 2*f_loc]
+    gu = pc.ag_matmul(h, params["w_gu"])  # AG + GEMM  [B, S, 2*f_loc]
     f_loc = gu.shape[-1] // 2
     a = _act(cfg)(gu[..., :f_loc]) * gu[..., f_loc:]
     out = pc.matmul_rs(a.astype(x.dtype), params["w_down"])  # GEMM + RS

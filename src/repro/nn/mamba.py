@@ -85,7 +85,7 @@ def apply_seq(params, x, pc, cfg, return_state: bool = False):
     # AG + GEMM: gather sequence, project to local channels (x | z | dt)
     w = jnp.concatenate([params["w_xz"], params["w_dt"].astype(params["w_xz"].dtype)],
                         axis=1)
-    xzdt = pc.ag_matmul(h, w)                       # [B, S, 2*di_loc + h_loc]
+    xzdt = pc.ag_matmul(h, w)  # [B, S, 2*di_loc + h_loc]
     di_loc = params["w_xz"].shape[1] // 2
     h_loc = params["w_dt"].shape[1]
     s_glob = xzdt.shape[1]
@@ -97,7 +97,7 @@ def apply_seq(params, x, pc, cfg, return_state: bool = False):
     )
 
     # B/C: replicated small projection on the gathered sequence
-    hfull = pc.all_gather_seq(h, 1)                 # [B, S, D]
+    hfull = pc.all_gather_seq(h, 1)  # [B, S, D]
     bc = jnp.einsum("bsd,dn->bsn", hfull, params["w_bc"])
     gn = s_cfg.n_groups * s_cfg.d_state
     b_mat = bc[..., :gn].reshape(b, s_glob, s_cfg.n_groups, s_cfg.d_state)
@@ -160,19 +160,19 @@ def apply_decode(params, x, cache, pc, cfg):
     c_mat = bc[:, gn:].reshape(b, s_cfg.n_groups, s_cfg.d_state)
 
     # conv step: cache holds the last (d_conv - 1) x inputs (local channels)
-    conv_tail = cache["conv"]                       # [B, K-1, di_loc]
+    conv_tail = cache["conv"]  # [B, K-1, di_loc]
     xcat = jnp.concatenate([conv_tail, xin[:, None, :]], axis=1)
     wconv = params["conv"]
     xc = jax.nn.silu((xcat * wconv.astype(xcat.dtype)).sum(axis=1))
     new_conv = xcat[:, 1:]
 
     # recurrence: h_t = h_{t-1} * exp(dt*A) + dt * B x ; y = C . h + D x
-    a = -jnp.exp(params["a_log"])                   # [h_loc]
+    a = -jnp.exp(params["a_log"])  # [h_loc]
     xh = xc.reshape(b, h_loc, s_cfg.headdim).astype(jnp.float32)
     rep = h_loc // s_cfg.n_groups if s_cfg.n_groups <= h_loc else 1
     bh = jnp.repeat(b_mat, rep, axis=1)[:, :h_loc].astype(jnp.float32)
     ch = jnp.repeat(c_mat, rep, axis=1)[:, :h_loc].astype(jnp.float32)
-    decay = jnp.exp(dt * a[None, :])                # [B, h_loc]
+    decay = jnp.exp(dt * a[None, :])  # [B, h_loc]
     upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, xh)
     new_ssm = cache["ssm"] * decay[..., None, None] + upd
     y = jnp.einsum("bhn,bhnp->bhp", ch, new_ssm)

@@ -83,7 +83,7 @@ def apply_seq(params, x, pc, cfg, *, tune=False):
         return moe_router(tok, params["router"], num_experts=e_pad,
                           top_k=m.top_k, valid_experts=m.num_experts)
 
-    ids, wts, aux = jax.vmap(route)(h)      # [B, s_loc, k], aux [B]
+    ids, wts, aux = jax.vmap(route)(h)  # [B, s_loc, k], aux [B]
     out = jax.vmap(
         lambda t, i, w: pc.ag_moe(t, i, w, params["w_gu"], params["w_down"],
                                   capacity_factor=m.capacity_factor,
@@ -134,10 +134,10 @@ def apply_decode(params, x, pc, cfg):
     else:
         # baseline: per-(token, k) weight gathers
         local_g = jnp.where(valid, local, 0).astype(jnp.int32)
-        wg = params["w_gu"][local_g]        # [m, k, d, 2f]
+        wg = params["w_gu"][local_g]  # [m, k, d, 2f]
         hdn = jnp.einsum("md,mkdf->mkf", tokens, wg)
         a = ACTS[cfg.act](hdn[..., :f]) * hdn[..., f:]
-        wd = params["w_down"][local_g]      # [m, k, f, d]
+        wd = params["w_down"][local_g]  # [m, k, f, d]
         ye = jnp.einsum("mkf,mkfd->mkd", a.astype(x.dtype), wd)
         comb = (wts * valid.astype(jnp.float32)).astype(x.dtype)
         out = pc.psum(jnp.einsum("mkd,mk->md", ye, comb))

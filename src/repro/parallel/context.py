@@ -62,19 +62,19 @@ def manual_only(spec: P, manual_axes: Tuple[str, ...]) -> P:
 
 @dataclasses.dataclass(frozen=True)
 class ParallelContext:
-    mesh: Any                               # jax Mesh
-    axis: str = "model"                     # TP / SP / EP axis
+    mesh: Any  # jax Mesh
+    axis: str = "model"  # TP / SP / EP axis
     dp_axes: Tuple[str, ...] = ("pod", "data")
-    mode: str = "overlap"                   # "overlap" | "baseline"
+    mode: str = "overlap"  # "overlap" | "baseline"
     channel: BlockChannel = None
-    seq_shard: bool = True                  # sequence-parallel residual stream
-    attn_p_bf16: bool = False               # cast softmax P to bf16 before P@V
+    seq_shard: bool = True  # sequence-parallel residual stream
+    attn_p_bf16: bool = False  # cast softmax P to bf16 before P@V
                                             # (halves attention HBM traffic)
-    moe_decode_stream: bool = False         # stream local experts once over all
+    moe_decode_stream: bool = False  # stream local experts once over all
                                             # tokens in decode (bytes-optimal)
-    tune: bool = False                      # autotune each op's BlockChannel
+    tune: bool = False  # autotune each op's BlockChannel
                                             # per (kind, shape) via repro.tune
-    tune_ranker: Optional[str] = None       # "measure" | "model" | "auto"/None
+    tune_ranker: Optional[str] = None  # "measure" | "model" | "auto"/None
 
     def __post_init__(self):
         if self.channel is None:

@@ -250,7 +250,12 @@ def enumerate_candidates(
     ``mapping.effective_channels`` and deduplicated.  ``sig``/``world``
     enable the compute-tile pruning (without them the comp axis passes
     through unclamped — extent-only callers keep the comm-only behavior).
+    When ``world`` is known each (order, channels) point is also statically
+    verified (``analysis.check_candidate``) so no measurement budget is ever
+    spent on a schedule the executor would reject.
     """
+    from repro.analysis import check_candidate
+
     if kind not in TUNABLE_KINDS:
         raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
     out, seen = [], set()
@@ -263,6 +268,8 @@ def enumerate_candidates(
                 nch = effective_channels(extent, req, kind=kind, warn=False)
             else:
                 nch = req
+            if world is not None and check_candidate(kind, order, world, nch) is not None:
+                continue  # provably illegal schedule: spend no budget on it
             for accum in space.accum_dtypes:
                 if sig is not None:
                     tiles = comp_tile_candidates(

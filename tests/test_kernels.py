@@ -166,5 +166,5 @@ def test_gemm_rs_matches_paper_schedule():
     w = 4
     for rank in range(w):
         segs = [ring_rs_segment(rank, s, w) for s in range(w)]
-        assert segs[-1] == rank              # final stage = own segment
+        assert segs[-1] == rank  # final stage = own segment
         assert sorted(segs) == list(range(w))  # visits every segment once

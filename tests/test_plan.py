@@ -46,8 +46,7 @@ def _chan(order, channels, accum):
 
 def _tol(accum):
     # bf16 flow/accum dtype is genuinely lossy (~0.8% relative); fp32 is exact
-    return dict(atol=2e-4, rtol=2e-3) if accum == "float32" else \
-        dict(atol=8e-2, rtol=3e-2)
+    return dict(atol=2e-4, rtol=2e-3) if accum == "float32" else dict(atol=8e-2, rtol=3e-2)
 
 
 # ---- parity sweep: every kind x the full comm/comp space --------------------
@@ -121,9 +120,9 @@ def test_parity_ag_moe(mesh4, order, channels, accum):
 # (reduced channel set — each interpret-mode run simulates the full DMA +
 #  semaphore machinery; the xla sweep above covers the full grid)
 
-PALLAS_SWEEP = [(o, c, a) for o, c, a in
-                itertools.product(ORDERS, (1, 2), ("float32",))] + \
-               [("ring", 2, "bfloat16")]
+PALLAS_SWEEP = [(o, c, a) for o, c, a in itertools.product(ORDERS, (1, 2), ("float32",))] + [
+    ("ring", 2, "bfloat16")
+]
 
 
 @pytest.mark.parametrize("order,channels,accum", PALLAS_SWEEP)

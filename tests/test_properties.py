@@ -72,15 +72,15 @@ def test_static_mapping_invariants(tiles_per_rank, world, channels, tile):
     seen_rows = 0
     for t in range(m.num_tiles):
         lo, hi = m.shape_range(t)
-        assert 0 <= lo < hi <= dim            # f_S in range
+        assert 0 <= lo < hi <= dim  # f_S in range
         seen_rows += hi - lo
         r = m.rank(t)
-        assert 0 <= r < world                 # f_R in range
-        assert t in m.tiles_of_rank(r)        # f_R inverse consistent
+        assert 0 <= r < world  # f_R in range
+        assert t in m.tiles_of_rank(r)  # f_R inverse consistent
         c = m.channel(t)
         # channel refines rank: all tiles of one channel live on one rank
         assert m.rank(t) == c // max(1, m.num_channels)
-    assert seen_rows == dim                   # f_S covers the tensor exactly
+    assert seen_rows == dim  # f_S covers the tensor exactly
 
     # traced forms agree with host forms
     t_ids = jnp.arange(m.num_tiles)
@@ -97,7 +97,7 @@ def test_static_mapping_invariants(tiles_per_rank, world, channels, tile):
 def test_dynamic_mapping_tables(e, tiles_per_expert, tile):
     rng = np.random.default_rng(0)
     sizes = rng.integers(0, tiles_per_expert * tile + 1, size=e)
-    sizes = (sizes // tile) * tile            # tile-aligned groups
+    sizes = (sizes // tile) * tile  # tile-aligned groups
     offsets = jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
     m = build_moe_dynamic_mapping(offsets, tiles_per_expert, tile,
                                   experts_per_rank=1)
@@ -106,12 +106,12 @@ def test_dynamic_mapping_tables(e, tiles_per_expert, tile):
     covered = {ei: 0 for ei in range(e)}
     for t in range(m.num_tiles):
         ei = t // tiles_per_expert
-        assert ranks[t] == ei                 # f_R = expert rank
+        assert ranks[t] == ei  # f_R = expert rank
         assert lows[t] <= highs[t]
         assert highs[t] - lows[t] <= tile
         covered[ei] += int(highs[t] - lows[t])
     for ei in range(e):
-        assert covered[ei] == sizes[ei]       # tiles tile the group exactly
+        assert covered[ei] == sizes[ei]  # tiles tile the group exactly
 
 
 # ---- schedules ---------------------------------------------------------------
@@ -155,8 +155,9 @@ def test_gqa_layout_invariants(kv, group, tp):
     lay = gqa_layout(h, kv, tp)
     assert lay.h_pad >= h and lay.h_pad % tp == 0
     assert lay.h_loc * tp == lay.h_pad
-    assert lay.kv_loc * tp == lay.kv_store * (tp // (lay.kv_store // max(1, lay.kv_loc))) \
-        or lay.kv_store in (lay.kv_pad, tp)
+    assert lay.kv_loc * tp == lay.kv_store * (
+        tp // (lay.kv_store // max(1, lay.kv_loc))
+    ) or lay.kv_store in (lay.kv_pad, tp)
     # every rank's q heads map to exactly one local kv group
     assert lay.h_loc % lay.kv_loc == 0
     if lay.rep > 1:
