@@ -31,6 +31,15 @@ Rules, applied to every ``BENCH_*.json`` present in the baseline:
     exact-gated invariant leaves above: a PR that widens coverage must not
     be punished by its own new entries.  New subtrees are reported once,
     not once per leaf.
+  * deliberate refresh — a PR that intentionally changes an exact-gated
+    invariant (grows the candidate space, restructures a ledger) declares it
+    with ``--refresh-baseline 'BENCH_file.json:path/*'`` (fnmatch over
+    ``name:key``, repeatable) or a pattern line in the refresh file
+    (``--refresh-baseline-file``, default ``benchmarks/refresh_baseline.txt``
+    — check the line in WITH the change).  Matching failures downgrade to
+    loud notices, so a deliberate change blocks a PR at most once — never
+    twice: after the merge the main baseline carries the new values and the
+    pattern line can be dropped.
 
 No baseline (first run on a fresh repo/fork, expired artifacts) passes with
 a loud notice — the gate arms itself on the next main-branch run.
@@ -38,11 +47,12 @@ a loud notice — the gate arms itself on the next main-branch run.
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import glob
 import json
 import os
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 # leaf names gated exactly when present in both runs; a key carrying one of
 # these that exists only in the current run is a "new entry" notice instead
@@ -75,6 +85,26 @@ def load_bench_files(directory: str) -> Dict[str, Dict[str, object]]:
     return found
 
 
+def _refresh_match(tag: str, patterns: List[str]) -> str:
+    """First fnmatch pattern covering ``tag`` ("name:key"), or ""."""
+    for pat in patterns:
+        if fnmatch.fnmatch(tag, pat):
+            return pat
+    return ""
+
+
+def load_refresh_patterns(cli: List[str], path: str) -> List[str]:
+    """CLI patterns + non-comment lines of the refresh file (if present)."""
+    patterns = list(cli or [])
+    if path and os.path.exists(path):
+        with open(path) as fh:
+            for line in fh:
+                line = line.strip()
+                if line and not line.startswith("#"):
+                    patterns.append(line)
+    return patterns
+
+
 def compare_file(
     name: str,
     base: Dict[str, object],
@@ -82,13 +112,25 @@ def compare_file(
     *,
     tolerance: float,
     floor_us: float,
+    refresh: List[str] = (),
 ) -> Tuple[list, list]:
     """(failures, notices) from gating ``cur`` against ``base`` for one file."""
     failures, notices = [], []
+
+    def fail_or_refresh(tag: str, message: str) -> None:
+        pat = _refresh_match(tag, refresh)
+        if pat:
+            notices.append(
+                f"{message} [refreshed: matched --refresh-baseline {pat!r}; "
+                "this run's value becomes the baseline on merge]"
+            )
+        else:
+            failures.append(message)
+
     for key, bval in base.items():
         tag = f"{name}:{key}"
         if key not in cur:
-            failures.append(f"{tag}: present in baseline but missing from this run")
+            fail_or_refresh(tag, f"{tag}: present in baseline but missing from this run")
             continue
         cval = cur[key]
         leaf = key.rsplit("/", 1)[-1]
@@ -105,10 +147,12 @@ def compare_file(
                 )
         elif leaf in EXACT_LEAVES:
             if cval != bval:
-                failures.append(
+                fail_or_refresh(
+                    tag,
                     f"{tag}: exact invariant changed {bval} -> {cval} (design-"
-                    "space/pruning drift; if intentional, say so in the PR — "
-                    "this gate stays red until the change is the main baseline)"
+                    "space/pruning drift; if intentional, declare it with "
+                    "--refresh-baseline or a benchmarks/refresh_baseline.txt "
+                    "pattern line in the same PR)",
                 )
         elif leaf in HEALTH_LEAVES:
             if bool(bval) and not bool(cval):
@@ -139,7 +183,18 @@ def main() -> int:
     ap.add_argument(
         "--floor-us", type=float, default=200.0, help="absolute us change ignored as jitter"
     )
+    ap.add_argument(
+        "--refresh-baseline", action="append", default=[], metavar="PATTERN",
+        help="fnmatch over 'BENCH_file.json:key' — matching exact-invariant/"
+             "coverage failures become notices (deliberate baseline refresh)",
+    )
+    ap.add_argument(
+        "--refresh-baseline-file", default="benchmarks/refresh_baseline.txt",
+        help="file of refresh patterns, one per line (# comments); checked in "
+             "alongside the deliberate change so the gate never blocks it twice",
+    )
     args = ap.parse_args()
+    refresh = load_refresh_patterns(args.refresh_baseline, args.refresh_baseline_file)
 
     current = load_bench_files(args.current)
     if not current:
@@ -160,7 +215,8 @@ def main() -> int:
             failures.append(f"{name}: baseline artifact has no counterpart in this run")
             continue
         f_, n_ = compare_file(
-            name, base, current[name], tolerance=args.tolerance, floor_us=args.floor_us
+            name, base, current[name], tolerance=args.tolerance,
+            floor_us=args.floor_us, refresh=refresh,
         )
         failures.extend(f_)
         notices.extend(n_)

@@ -1,0 +1,188 @@
+"""Fused RS->AG seam bench + CI smoke (``--smoke`` -> ``BENCH_seam.json``).
+
+The inter-op overlap claim made gateable: for every dense FFN seam shape the
+fused ``compile_overlap_seq`` plan must beat the best unfused
+``matmul_rs`` + ``ag_matmul`` pair on the MODELED cost scale — the seam
+credits ``min(fill_drain(rs), fill_drain(ag))``, the exposed-collective time
+the fusion eliminates, so a fused plan that does not win means the seam
+costing (or the candidate enumeration behind ``channel="auto"``) broke.
+
+``--smoke`` additionally:
+
+  * runs ``tune.resolve_seq`` end-to-end on the smallest shape and asserts
+    it verdicts FUSED (the auto path exercises the same pricing);
+  * measures fused vs. unfused wall time for the smallest shape on a 4-rank
+    emulated mesh (informational on CPU — emulated wall time is not a perf
+    signal, ROADMAP; the ``us`` leaves are tolerance-gated like every other
+    smoke timing) and checks numerical parity between the two paths.
+
+Modeled costs land under ungated ``*_modeled_us`` leaves (floats, but
+deterministic); the per-shape ``ok`` health leaf (fused wins modeled) and
+``considered`` (seam candidate count) gate exactly via benchmarks/compare.py.
+Any violation exits non-zero so CI fails loudly.
+"""
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import tune
+from repro.compat import shard_map
+from repro.core import BlockChannel, compile_overlap, compile_overlap_seq
+from repro.tune import cost as tune_cost
+
+try:  # package import (python -m benchmarks.seam_bench / pytest)
+    from benchmarks.common import mesh_tp, row, time_fn
+except ImportError:  # plain script: the benchmarks/ dir is sys.path[0]
+    from common import mesh_tp, row, time_fn
+
+WORLD = 4
+
+# dense FFN seam signatures (lead, m_glob, k_loc, n_mid, n2_loc): the
+# down-proj GEMM+RS of one block feeding the next block's AG+GEMM —
+# m_glob = sequence, k_loc = f/tp, n_mid = d_model, n2_loc = next cols/tp
+DENSE_SHAPES = {
+    "small": (1, 64, 32, 64, 32),
+    "mlp-1k": (1, 1024, 256, 1024, 512),
+    "mlp-4k": (1, 4096, 1024, 4096, 2048),
+}
+
+
+def _best(sig, *, fused):
+    """(cost_us, candidate) of the cheapest shared-channel seam candidate."""
+    cands = tune.enumerate_seq_candidates(sig=sig, world=WORLD)
+    if not cands:
+        raise ValueError(f"no seam candidates for sig={sig}")
+    best = min(cands, key=lambda c: tune_cost.predict_seq_cost(sig, WORLD, c, fused=fused))
+    return tune_cost.predict_seq_cost(sig, WORLD, best, fused=fused) * 1e6, best, len(cands)
+
+
+def _measured_case(mesh, sig):
+    """Jitted fused + unfused seam callables over global operands."""
+    lead, m_glob, k_loc, n_mid, n2_loc = sig
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m_glob, WORLD * k_loc), jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (WORLD * k_loc, n_mid), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (n_mid, WORLD * n2_loc), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(3), (m_glob, n_mid), jnp.float32)
+    glue = lambda y: y * 0.5 + 1.0  # noqa: E731 — any row-local map
+    ch = BlockChannel(axis="model", num_channels=2)
+    specs = dict(
+        in_specs=(P(None, "model"), P("model", None), P(None, "model"), P("model", None)),
+        out_specs=(P("model", None), P(None, "model")),
+    )
+
+    fused = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    rs = compile_overlap("matmul_rs", ch)
+    ag = compile_overlap("ag_matmul", ch)
+
+    def unfused(x_, w1_, w2_, r_):
+        y = r_ + rs(x_, w1_)
+        return y, ag(glue(y), w2_)
+
+    f_fn = jax.jit(shard_map(
+        lambda x_, w1_, w2_, r_: fused(x_, w1_, w2_, residual=r_, glue=glue),
+        mesh, **specs))
+    u_fn = jax.jit(shard_map(unfused, mesh, **specs))
+    return f_fn, u_fn, (x, w1, w2, res)
+
+
+def smoke(out_path: str = "BENCH_seam.json") -> int:
+    results, failures = {"shapes": {}}, []
+
+    for name, sig in DENSE_SHAPES.items():
+        entry = {"signature": list(sig)}
+        try:
+            fused_us, cand, considered = _best(sig, fused=True)
+            unfused_us, _, _ = _best(sig, fused=False)
+            saving_us = tune_cost.seam_saving(sig, WORLD, cand) * 1e6
+            ok = fused_us < unfused_us
+            if not ok:
+                failures.append(
+                    f"{name}: fused modeled cost {fused_us:.1f}us does not beat "
+                    f"the unfused pair {unfused_us:.1f}us — the seam credit is dead"
+                )
+            entry.update(
+                winner=cand.label(),
+                considered=considered,
+                fused_modeled_us=round(fused_us, 3),
+                unfused_modeled_us=round(unfused_us, 3),
+                modeled_saving_us=round(saving_us, 3),
+                ok=ok,
+            )
+            row(f"seam/{name}/modeled/{cand.label()}", fused_us,
+                f"unfused {unfused_us:.0f}us")
+        except Exception as exc:  # loud: any seam-costing error fails CI
+            failures.append(f"{name}: {type(exc).__name__}: {exc}")
+            entry["error"] = str(exc)
+        results["shapes"][name] = entry
+
+    # ---- the auto path verdicts FUSED on a dense seam ----------------------
+    try:
+        sig = DENSE_SHAPES["small"]
+        fused, ch_rs, ch_ag = tune.resolve_seq(sig=sig, world=WORLD)
+        if not fused:
+            failures.append("resolve_seq verdicted UNFUSED on a dense seam shape")
+        results["resolve"] = {"fused": bool(fused), "ok": bool(fused),
+                              "channels": [ch_rs.num_channels, ch_ag.num_channels]}
+    except Exception as exc:
+        failures.append(f"resolve: {type(exc).__name__}: {exc}")
+        results["resolve"] = {"error": str(exc), "ok": False}
+
+    # ---- smoke-measured fused vs unfused + parity (emulated mesh) ----------
+    try:
+        mesh = mesh_tp(WORLD)
+        f_fn, u_fn, args = _measured_case(mesh, DENSE_SHAPES["small"])
+        yf, gf = f_fn(*args)
+        yu, gu = u_fn(*args)
+        err = max(float(jnp.max(jnp.abs(yf - yu))), float(jnp.max(jnp.abs(gf - gu))))
+        parity_ok = err < 1e-3
+        if not parity_ok:
+            failures.append(f"measured: fused vs unfused parity error {err:.3e}")
+        fused_us = time_fn(f_fn, *args)
+        unfused_us = time_fn(u_fn, *args)
+        results["measured"] = {
+            "fused": {"us": round(fused_us, 1)},
+            "unfused": {"us": round(unfused_us, 1)},
+            "max_abs_err": err,
+            "ok": parity_ok,
+        }
+        row("seam/small/measured/fused", fused_us)
+        row("seam/small/measured/unfused", unfused_us)
+    except Exception as exc:  # loud: the executor path must run on CPU
+        failures.append(f"measured: {type(exc).__name__}: {exc}")
+        results["measured"] = {"error": str(exc), "ok": False}
+
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {len(results['shapes'])} shapes, {len(failures)} failures")
+    for f_ in failures:
+        print(f"FAIL {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    print("# modeled fused vs unfused seam cost per dense FFN shape "
+          f"(world={WORLD})")
+    for name, sig in DENSE_SHAPES.items():
+        fused_us, cand, _ = _best(sig, fused=True)
+        unfused_us, _, _ = _best(sig, fused=False)
+        row(f"seam/{name}/{cand.label()}", fused_us,
+            f"unfused {unfused_us:.0f}us ({unfused_us / max(fused_us, 1e-9):.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI guard: modeled fused-beats-unfused on every dense shape, "
+        "resolve_seq verdict, measured parity; write BENCH_seam.json",
+    )
+    ap.add_argument("--out", default="BENCH_seam.json")
+    a = ap.parse_args()
+    sys.exit(smoke(a.out) if a.smoke else main())

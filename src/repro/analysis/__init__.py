@@ -16,14 +16,27 @@ submodules import ``repro.core`` only lazily, inside functions.
 """
 from repro.analysis.errors import PlanVerificationError, VerificationReport
 from repro.analysis.ir import PlanTables
-from repro.analysis.verify import check_candidate, verify_plan, verify_space, verify_tables
+from repro.analysis.verify import (
+    check_candidate,
+    check_seq_candidate,
+    verify_plan,
+    verify_seq_plan,
+    verify_seq_space,
+    verify_seq_tables,
+    verify_space,
+    verify_tables,
+)
 
 __all__ = [
     "PlanVerificationError",
     "VerificationReport",
     "PlanTables",
     "check_candidate",
+    "check_seq_candidate",
     "verify_plan",
+    "verify_seq_plan",
+    "verify_seq_space",
+    "verify_seq_tables",
     "verify_space",
     "verify_tables",
 ]

@@ -32,6 +32,7 @@ class PlanVerificationError(ValueError):
         step: Optional[int] = None,
         rank: Optional[int] = None,
         channel: Optional[int] = None,
+        op_index: Optional[int] = None,
     ):
         self.check = check
         self.kind = kind
@@ -40,6 +41,10 @@ class PlanVerificationError(ValueError):
         self.step = step
         self.rank = rank
         self.channel = channel
+        # position of the failing op inside a multi-op SeqPlan (None for
+        # single-op plans) — lets a seam failure name which half broke
+        self.op_index = op_index
+        self.raw_message = message
         where = ", ".join(
             f"{name}={val!r}"
             for name, val in (
@@ -49,10 +54,25 @@ class PlanVerificationError(ValueError):
                 ("channel", channel),
                 ("step", step),
                 ("rank", rank),
+                ("op_index", op_index),
             )
             if val is not None
         )
         super().__init__(f"[{check}] {message}" + (f" ({where})" if where else ""))
+
+    def with_op_index(self, op_index: int) -> "PlanVerificationError":
+        """Re-raise helper: same diagnosis, tagged with its sequence position."""
+        return PlanVerificationError(
+            self.raw_message,
+            check=self.check,
+            kind=self.kind,
+            order=self.order,
+            world=self.world,
+            step=self.step,
+            rank=self.rank,
+            channel=self.channel,
+            op_index=op_index,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

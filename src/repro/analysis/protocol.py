@@ -42,8 +42,10 @@ from repro.analysis.ir import PlanTables
 
 __all__ = [
     "build_streams",
+    "build_seam_streams",
     "check_streams",
     "check_protocol",
+    "check_seam_protocol",
     "DmaStart",
     "Wait",
     "LocalRead",
@@ -159,6 +161,64 @@ def _rs_streams(t: PlanTables, *, shared_send_sem: bool = False) -> Dict[int, li
                     )
                 else:
                     ops.append(LocalRead(("acc", c)))  # final store
+        streams[r] = ops
+    return streams
+
+
+def _namespace(ops: list, prefix: str) -> list:
+    """Prefix every location and semaphore name — per-op resources of a seam."""
+
+    def loc(pair):
+        return (prefix + pair[0], pair[1])
+
+    out = []
+    for op in ops:
+        if isinstance(op, DmaStart):
+            out.append(
+                dataclasses.replace(
+                    op,
+                    src=loc(op.src),
+                    dst=loc(op.dst),
+                    send_sem=loc(op.send_sem),
+                    recv_sem=loc(op.recv_sem),
+                )
+            )
+        elif isinstance(op, Wait):
+            out.append(Wait(loc(op.sem)))
+        elif isinstance(op, LocalRead):
+            out.append(LocalRead(loc(op.loc)))
+        else:
+            out.append(LocalWrite(loc(op.loc)))
+    return out
+
+
+def build_seam_streams(producer: PlanTables, consumer: PlanTables) -> Dict[int, list]:
+    """Abstract per-rank streams of a fused RS -> AG seam.
+
+    Per rank: the producer's full rs stream, then the consumer's ag stream,
+    with every resource namespaced per op (each op owns its semaphore set and
+    buffers).  The seam handoff is made explicit: staging channel c of the
+    consumer's own shard *reads the producer's fully reduced accumulator*
+    (``op0.acc[c]``) instead of an independent input — so the race pass proves
+    the ag gather staging is ordered after the rs reduction completes, through
+    the same vector-clock machinery that checks single-op plans.
+    """
+    rs = _rs_streams(producer)
+    ag = _ag_streams(consumer)
+    nch = producer.num_channels
+    streams = {}
+    for r in sorted(rs):
+        ops = _namespace(rs[r], "op0.")
+        for op in _namespace(ag[r], "op1."):
+            if (
+                isinstance(op, LocalWrite)
+                and op.loc[0] == "op1.gather"
+                and op.loc[1] // nch == r
+            ):
+                # seam handoff: the "own shard" the consumer stages IS the
+                # producer's home segment for this channel
+                ops.append(LocalRead(("op0.acc", op.loc[1] % nch)))
+            ops.append(op)
         streams[r] = ops
     return streams
 
@@ -374,3 +434,13 @@ def check_streams(streams: Dict[int, list], t: PlanTables) -> Tuple[int, int]:
 def check_protocol(t: PlanTables) -> Tuple[int, int]:
     """Build the flow's streams from the tables and model-check them."""
     return check_streams(build_streams(t), t)
+
+
+def check_seam_protocol(producer: PlanTables, consumer: PlanTables) -> Tuple[int, int]:
+    """Model-check the combined producer+consumer streams of a fused seam."""
+    ctx = dataclasses.replace(
+        producer,
+        kind=f"{producer.kind}->{consumer.kind}",
+        order=f"{producer.order}->{consumer.order}",
+    )
+    return check_streams(build_seam_streams(producer, consumer), ctx)

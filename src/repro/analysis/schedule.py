@@ -20,6 +20,15 @@ violation, with the failing (kind, order, world, channel, step, rank)):
                                 are hit exactly once (no overlap / no gap in
                                 the multi-channel block partition).
 
+For fused multi-op seam plans (``core/plan.SeqPlan``) ``check_seam`` adds:
+
+  * ``seam_composition``      — the producer's fully reduced RS segment lands
+                                on its home rank exactly where the consumer
+                                seeds its step-0 local tile:
+                                rs_seg(r, world - 1) == r == sigma(r, 0), with
+                                matching world and channel counts, so the
+                                handoff is rank-local (no resharding hop).
+
 All checks run off the precomputed O(world^2 * channels) tables, so a full
 verification is microseconds even at dry-run world sizes.
 """
@@ -28,7 +37,7 @@ from __future__ import annotations
 from repro.analysis.errors import PlanVerificationError
 from repro.analysis.ir import PlanTables
 
-__all__ = ["check_schedule", "check_channel_partition"]
+__all__ = ["check_schedule", "check_channel_partition", "check_seam"]
 
 
 def check_channel_partition(extent: int, num_channels: int) -> int:
@@ -200,4 +209,62 @@ def check_schedule(t: PlanTables) -> int:
                 **_ctx(t),
             )
         checks += 1
+    return checks
+
+
+def check_seam(producer: PlanTables, consumer: PlanTables) -> int:
+    """Seam-composition legality for a fused RS -> AG pair.
+
+    The fused executor hands each channel's fully reduced RS segment to the
+    consumer *in place* — no resharding hop — which is only sound when the
+    producer's last-step segment schedule and the consumer's step-0 source
+    schedule are both the identity on every rank, over the same world and
+    channel split.  Returns the number of assertions evaluated.
+    """
+    kind = f"{producer.kind}->{consumer.kind}"
+    order = f"{producer.order}->{consumer.order}"
+    if producer.flow != "rs" or consumer.flow != "ag":
+        raise PlanVerificationError(
+            f"seam chains flows {(producer.flow, consumer.flow)}; only an rs "
+            "producer feeding an ag consumer composes rank-locally",
+            check="seam_composition",
+            kind=kind,
+            order=order,
+            world=producer.world,
+        )
+    if producer.world != consumer.world:
+        raise PlanVerificationError(
+            f"producer world {producer.world} != consumer world {consumer.world}",
+            check="seam_composition",
+            kind=kind,
+            order=order,
+            world=producer.world,
+        )
+    if producer.num_channels != consumer.num_channels:
+        raise PlanVerificationError(
+            f"producer has {producer.num_channels} channels but consumer has "
+            f"{consumer.num_channels}; the seam handoff is per-channel",
+            check="seam_composition",
+            kind=kind,
+            order=order,
+            world=producer.world,
+        )
+    world, checks = producer.world, 3
+    for c in range(producer.num_channels):
+        for r in range(world):
+            home = producer.rs_seg[c][world - 1][r]
+            seed = consumer.src[c][0][r]
+            if home != r or seed != r:
+                raise PlanVerificationError(
+                    f"rank holds producer segment {home} after the RS pass but "
+                    f"the consumer seeds origin {seed}; the seam handoff is "
+                    "only rank-local when both are the rank itself",
+                    check="seam_composition",
+                    kind=kind,
+                    order=order,
+                    world=world,
+                    channel=c,
+                    rank=r,
+                )
+            checks += 1
     return checks

@@ -25,10 +25,20 @@ from typing import Optional, Sequence
 
 from repro.analysis.errors import PlanVerificationError, VerificationReport
 from repro.analysis.ir import PlanTables
-from repro.analysis.protocol import check_protocol
-from repro.analysis.schedule import check_schedule
+from repro.analysis.protocol import check_protocol, check_seam_protocol
+from repro.analysis.schedule import check_schedule, check_seam
 
-__all__ = ["verify_plan", "verify_tables", "check_candidate", "verify_space", "main"]
+__all__ = [
+    "verify_plan",
+    "verify_tables",
+    "verify_seq_plan",
+    "verify_seq_tables",
+    "check_candidate",
+    "check_seq_candidate",
+    "verify_space",
+    "verify_seq_space",
+    "main",
+]
 
 # shipped plan space: what `--all` (and the CI verify job) proves well-formed
 SPACE_WORLDS = (2, 4, 8)
@@ -82,6 +92,67 @@ def verify_plan(
     )
 
 
+def verify_seq_tables(
+    tables: Sequence[PlanTables],
+    *,
+    protocol: Optional[bool] = None,
+    requested_channels: Optional[int] = None,
+) -> VerificationReport:
+    """Verify a fused seam (producer RS tables -> consumer AG tables).
+
+    Runs the single-op schedule pass on each constituent (failures re-raised
+    with the op's ``op_index`` within the sequence), then the seam-composition
+    check, then one *combined* protocol pass over the concatenated per-rank
+    streams — so a race or deadlock introduced by the handoff itself, not just
+    by either half alone, is caught.
+    """
+    producer, consumer = tables
+    checks = 0
+    for i, t in enumerate(tables):
+        try:
+            checks += check_schedule(t)
+        except PlanVerificationError as e:
+            raise e.with_op_index(i) from None
+    checks += check_seam(producer, consumer)
+    passes = ["schedule", "seam"]
+    events = 0
+    if protocol is None:
+        protocol = producer.world <= _protocol_max_world()
+    if protocol:
+        pchecks, events = check_seam_protocol(producer, consumer)
+        checks += pchecks
+        passes.append("protocol")
+    return VerificationReport(
+        kind=f"{producer.kind}->{consumer.kind}",
+        order=(
+            producer.order
+            if producer.order == consumer.order
+            else f"{producer.order}->{consumer.order}"
+        ),
+        world=producer.world,
+        flow=f"{producer.flow}->{consumer.flow}",
+        effective_channels=producer.num_channels,
+        requested_channels=requested_channels,
+        passes=tuple(passes),
+        checks=checks,
+        events=events,
+    )
+
+
+def verify_seq_plan(
+    seq,
+    *,
+    protocol: Optional[bool] = None,
+    requested_channels: Optional[int] = None,
+) -> VerificationReport:
+    """Statically verify one :class:`~repro.core.plan.SeqPlan`."""
+    return verify_seq_tables(
+        [PlanTables.from_plan(op) for op in seq.ops],
+        protocol=protocol,
+        requested_channels=requested_channels,
+    )
+
+
 @functools.lru_cache(maxsize=4096)
 def check_candidate(kind: str, order: str, world: int, num_channels: int) -> Optional[str]:
     """Cheap cached legality probe for the tuner: None if legal, else the
@@ -93,6 +164,21 @@ def check_candidate(kind: str, order: str, world: int, num_channels: int) -> Opt
     try:
         plan = build_plan(kind, channel, world, num_channels)
         verify_plan(plan)
+    except PlanVerificationError as e:
+        return str(e)
+    return None
+
+
+@functools.lru_cache(maxsize=4096)
+def check_seq_candidate(order: str, world: int, num_channels: int) -> Optional[str]:
+    """Cached legality probe for a fused ``matmul_rs -> ag_matmul`` seam."""
+    from repro.core.channels import BlockChannel, CommSpec
+    from repro.core.plan import build_seq_plan
+
+    ch = BlockChannel(axis="model", comm=CommSpec(order=order), num_channels=num_channels)
+    try:
+        seq = build_seq_plan(("matmul_rs", "ag_matmul"), (ch, ch), world, num_channels)
+        verify_seq_plan(seq)
     except PlanVerificationError as e:
         return str(e)
     return None
@@ -119,6 +205,30 @@ def verify_space(
                     yield verify_plan(plan, protocol=protocol, requested_channels=nch)
 
 
+def verify_seq_space(
+    *,
+    orders: Optional[Sequence[str]] = None,
+    worlds: Sequence[int] = SPACE_WORLDS,
+    channels: Sequence[int] = SPACE_CHANNELS,
+    protocol: Optional[bool] = None,
+):
+    """Yield a VerificationReport per fused ``matmul_rs -> ag_matmul`` seam.
+
+    One shared order per seam (mixed-order seams are legal — the composition
+    invariant only involves the home/seed identities — but the shipped space
+    is what ``compile_overlap_seq`` emits: matching channels on both halves).
+    """
+    from repro.core.channels import ORDERS, BlockChannel, CommSpec
+    from repro.core.plan import build_seq_plan
+
+    for order in orders if orders is not None else ORDERS:
+        for world in worlds:
+            for nch in channels:
+                ch = BlockChannel(axis="model", comm=CommSpec(order=order), num_channels=nch)
+                seq = build_seq_plan(("matmul_rs", "ag_matmul"), (ch, ch), world, nch)
+                yield verify_seq_plan(seq, protocol=protocol, requested_channels=nch)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis.verify",
@@ -137,16 +247,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     from repro.core.channels import ORDERS
     from repro.core.plan import FLOW_OF_KIND
 
+    # "seq_rs_ag" selects the fused seam space; any single-op kind narrows to
+    # single-op plans only.  Default (--all / no --kind) verifies both.
+    SEQ_KIND = "seq_rs_ag"
+    kinds = args.kind or sorted(FLOW_OF_KIND) + [SEQ_KIND]
     ok = failed = 0
-    for kind in args.kind or sorted(FLOW_OF_KIND):
+    for kind in kinds:
         for order in args.order or ORDERS:
             try:
-                for report in verify_space(
-                    kinds=[kind],
-                    orders=[order],
-                    worlds=args.world or SPACE_WORLDS,
-                    channels=args.channels or SPACE_CHANNELS,
-                ):
+                space = (
+                    verify_seq_space(
+                        orders=[order],
+                        worlds=args.world or SPACE_WORLDS,
+                        channels=args.channels or SPACE_CHANNELS,
+                    )
+                    if kind == SEQ_KIND
+                    else verify_space(
+                        kinds=[kind],
+                        orders=[order],
+                        worlds=args.world or SPACE_WORLDS,
+                        channels=args.channels or SPACE_CHANNELS,
+                    )
+                )
+                for report in space:
                     ok += 1
                     if not args.quiet:
                         print(f"ok   {report.summary()}")

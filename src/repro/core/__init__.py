@@ -6,8 +6,22 @@ from repro.core.mapping import (
     build_moe_dynamic_mapping,
     effective_channels,
 )
-from repro.core.plan import TilePlan, ChannelSchedule, build_plan, plan_cache_info
-from repro.core.compiler import compile_overlap, KINDS, unsupported_error
+from repro.core.plan import (
+    TilePlan,
+    SeqPlan,
+    ChannelSchedule,
+    build_plan,
+    build_seq_plan,
+    plan_cache_info,
+)
+from repro.core.compiler import (
+    compile_overlap,
+    compile_overlap_seq,
+    SeamFallbackWarning,
+    KINDS,
+    SEQ_KINDS,
+    unsupported_error,
+)
 from repro.core import comp_tiles, overlap, schedules, moe_overlap, plan
 
 __all__ = [
@@ -19,11 +33,16 @@ __all__ = [
     "build_moe_dynamic_mapping",
     "effective_channels",
     "TilePlan",
+    "SeqPlan",
     "ChannelSchedule",
     "build_plan",
+    "build_seq_plan",
     "plan_cache_info",
     "compile_overlap",
+    "compile_overlap_seq",
+    "SeamFallbackWarning",
     "KINDS",
+    "SEQ_KINDS",
     "unsupported_error",
     "comp_tiles",
     "overlap",

@@ -52,18 +52,30 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, Optional, Tuple, Union
 
 from repro.core.channels import BlockChannel, CompSpec
 from repro.core import overlap as _xla
 
-__all__ = ["compile_overlap", "KINDS", "BACKENDS", "PALLAS_KINDS", "unsupported_error"]
+__all__ = [
+    "compile_overlap",
+    "compile_overlap_seq",
+    "SeamFallbackWarning",
+    "KINDS",
+    "SEQ_KINDS",
+    "BACKENDS",
+    "PALLAS_KINDS",
+    "unsupported_error",
+]
 
 KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
 BACKENDS = ("xla", "pallas")
 # kinds with a fused-kernel lowering; the others map their communication to
 # the copy engine via host primitives (paper Fig. 5/6), i.e. backend="xla"
 PALLAS_KINDS = ("ag_matmul", "matmul_rs")
+# op sequences with a fused seam lowering (compile_overlap_seq)
+SEQ_KINDS = (("matmul_rs", "ag_matmul"),)
 
 
 def unsupported_error(kind: str, backend: str) -> NotImplementedError:
@@ -208,6 +220,221 @@ def compile_overlap(
     # interpret=None flows through to backend.resolve_interpret inside the
     # kernel's pallas_call — the target policy lives in one place only
     return functools.partial(table[kind], channel=channel, interpret=interpret, **kw)
+
+
+class SeamFallbackWarning(UserWarning):
+    """A requested fused seam degraded loudly to the unfused op pair.
+
+    Raised-as-warning exactly once per (axis, extents, channel-request) so a
+    schedule-incompatible seam is never a silent perf cliff: the unfused pair
+    is numerically identical, but the seam's collective time is exposed.
+    """
+
+
+_WARNED_SEAMS = set()
+
+
+def _seam_incompatibility(ch_rs, ch_ag, world, m_glob, n_mid) -> Optional[str]:
+    """Why this seam cannot fuse (None when it can).
+
+    The fused executor hands each RS home segment to the AG half per channel,
+    so both halves must resolve the SAME effective channel count — but RS
+    chunks the N columns while AG chunks the M/R rows, and the two extents
+    can clamp a shared request differently (or the ops may simply request
+    different counts / run over different axes = different worlds).
+    """
+    from repro.core.mapping import effective_channels
+
+    if ch_rs.axis != ch_ag.axis:
+        return (
+            f"producer runs over axis {ch_rs.axis!r} but consumer over "
+            f"{ch_ag.axis!r} (mismatched worlds)"
+        )
+    if m_glob % world:
+        return f"RS rows {m_glob} are not divisible by world {world}"
+    nch_rs = effective_channels(n_mid, ch_rs.num_channels, kind="matmul_rs", warn=False)
+    nch_ag = effective_channels(m_glob // world, ch_ag.num_channels, kind="ag_matmul", warn=False)
+    if nch_rs != nch_ag:
+        return (
+            f"effective channel counts diverge: RS extent {n_mid} gives "
+            f"C={nch_rs} (requested {ch_rs.num_channels}) but AG extent "
+            f"{m_glob // world} gives C={nch_ag} (requested {ch_ag.num_channels})"
+        )
+    return None
+
+
+def _warn_seam_fallback(reason: str, key) -> None:
+    if key not in _WARNED_SEAMS:
+        _WARNED_SEAMS.add(key)
+        warnings.warn(
+            SeamFallbackWarning(
+                f"compile_overlap_seq: seam is schedule-incompatible — {reason}; "
+                "degrading to the unfused matmul_rs + ag_matmul pair (numerically "
+                "identical, but the seam collective time is exposed)"
+            ),
+            stacklevel=3,
+        )
+
+
+def _seq_unfused(ch_rs, ch_ag, *, overlapped: bool, **kw) -> Callable:
+    """The unfused reference composition with the same (y, ag_out) contract."""
+    rs = compile_overlap("matmul_rs", ch_rs, backend="xla", overlapped=overlapped, **kw)
+    ag = compile_overlap("ag_matmul", ch_ag, backend="xla", overlapped=overlapped, **kw)
+
+    def pair_fn(x, w1, w2, *, residual=None, glue=None, **call_kw):
+        out = rs(x, w1, **call_kw)
+        y = out if residual is None else residual + out
+        h = y if glue is None else glue(y)
+        return y, ag(h, w2, **call_kw)
+
+    return pair_fn
+
+
+def compile_overlap_seq(
+    ops,
+    *,
+    channel: Union[BlockChannel, str, None] = None,
+    backend: str = "xla",
+    overlapped: bool = True,
+    axis: str = "model",
+    mesh=None,
+    tune_ranker: Optional[str] = None,
+    tune_base: Optional[BlockChannel] = None,
+    tune_space=None,
+    **kw,
+) -> Callable:
+    """Compile a fused multi-op seam: op N's RS flow feeds op N+1's AG flow.
+
+    ``ops`` is a sequence of kind names or ``(kind, channel)`` pairs; the only
+    supported sequence is ``["matmul_rs", "ag_matmul"]`` — the layer seam
+    where a down/out projection's reduce-scatter hands its home segments
+    directly to the next op's all-gather over one shared ring pass
+    (``core/overlap.matmul_rs_ag`` via ``core/plan.build_seq_plan``).
+
+    The returned callable has the signature
+
+        fn(x, w1, w2, *, residual=None, glue=None) -> (y, ag_out)
+
+    where ``y = residual + matmul_rs(x, w1)`` (the residual-stream value) and
+    ``ag_out = ag_matmul(glue(y), w2)`` — ``glue`` is the rank-local seam
+    elementwise (e.g. the consumer block's rms_norm), applied to the full
+    home segment so the float ops match the unfused pair exactly.
+
+    ``channel`` is a shared :class:`BlockChannel`, ``"auto"`` (the seam-aware
+    tuner picks fused vs. unfused per shape — ``repro.tune.resolve_seq``), or
+    None (the default channel); a per-op ``(kind, channel)`` entry overrides
+    it for that op.  ``overlapped=False`` compiles the operator-centric
+    unfused baseline pair.
+
+    If the two halves are schedule-incompatible at call time (mismatched
+    worlds, or channel counts whose extents clamp differently), the call
+    degrades LOUDLY to the unfused pair via one :class:`SeamFallbackWarning`
+    — never a silent perf cliff, never a crash.
+    """
+    kinds, chans = [], []
+    for op in ops:
+        if isinstance(op, (tuple, list)):
+            k, ch = op
+        else:
+            k, ch = op, channel
+        kinds.append(k)
+        chans.append(ch)
+    kinds = tuple(kinds)
+    if backend != "xla" or kinds not in SEQ_KINDS:
+        raise NotImplementedError(
+            f"compile_overlap_seq: op sequence {kinds!r} is not supported on "
+            f"backend={backend!r} (supported: {SEQ_KINDS} on backend='xla'); "
+            "lower each op separately via compile_overlap"
+        )
+    if any(ch == "auto" for ch in chans):
+        base = next((ch for ch in chans if isinstance(ch, BlockChannel)), tune_base)
+        return _auto_overlap_seq(
+            axis=base.axis if base is not None else axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            base=base,
+            space=tune_space,
+            overlapped=overlapped,
+            **kw,
+        )
+    ch_rs, ch_ag = (
+        ch if isinstance(ch, BlockChannel) else BlockChannel(axis=axis) for ch in chans
+    )
+    if not overlapped:
+        return _seq_unfused(ch_rs, ch_ag, overlapped=False, **kw)
+
+    def seq_fn(x, w1, w2, *, residual=None, glue=None, **call_kw):
+        import jax.numpy as jnp
+
+        from repro import backend as _backend
+
+        world = int(_backend.axis_size(ch_rs.axis))
+        m_glob, n_mid = jnp.shape(x)[-2], jnp.shape(w1)[-1]
+        reason = _seam_incompatibility(ch_rs, ch_ag, world, m_glob, n_mid)
+        if reason is not None:
+            _warn_seam_fallback(
+                reason, (ch_rs.axis, ch_ag.axis, world, m_glob, n_mid,
+                         ch_rs.num_channels, ch_ag.num_channels),
+            )
+            return _seq_unfused(ch_rs, ch_ag, overlapped=True, **kw)(
+                x, w1, w2, residual=residual, glue=glue, **call_kw
+            )
+        return _xla.matmul_rs_ag(
+            x, w1, w2,
+            axis=ch_rs.axis, channel=ch_rs, channel2=ch_ag,
+            residual=residual, glue=glue, **kw, **call_kw,
+        )
+
+    return seq_fn
+
+
+def _auto_overlap_seq(
+    *,
+    axis: str,
+    mesh,
+    tune_ranker: Optional[str],
+    base: Optional[BlockChannel],
+    space=None,
+    overlapped: bool,
+    **kw,
+) -> Callable:
+    """Seam-aware auto resolution: fused vs. unfused decided per shape.
+
+    ``repro.tune.resolve_seq`` prices the fused seam (shared-C candidates,
+    with the eliminated exposed-collective time credited) against the best
+    unfused per-op pair on the same cost model and returns the cheaper plan;
+    an unfused verdict here is a deliberate tuner decision, so no fallback
+    warning is emitted on that path.
+    """
+
+    def auto_fn(x, w1, w2, *, residual=None, glue=None, **call_kw):
+        import jax.numpy as jnp
+
+        from repro import backend as _backend
+        from repro.tune import resolve_seq
+
+        world = int(mesh.shape[axis]) if mesh is not None else int(_backend.axis_size(axis))
+        resolve_kw = {} if space is None else {"space": space}
+        fused, ch_rs, ch_ag = resolve_seq(
+            shapes=(jnp.shape(x), jnp.shape(w1), jnp.shape(w2)),
+            mesh=mesh,
+            axis=axis,
+            world=world,
+            base=base,
+            ranker=tune_ranker,
+            **resolve_kw,
+        )
+        fn = (
+            compile_overlap_seq(
+                [("matmul_rs", ch_rs), ("ag_matmul", ch_ag)],
+                overlapped=overlapped, axis=axis, **kw,
+            )
+            if fused
+            else _seq_unfused(ch_rs, ch_ag, overlapped=overlapped, **kw)
+        )
+        return fn(x, w1, w2, residual=residual, glue=glue, **call_kw)
+
+    return auto_fn
 
 
 def _auto_overlap(

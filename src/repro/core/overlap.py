@@ -50,15 +50,17 @@ from repro.backend import axis_size
 from repro.core.channels import BlockChannel
 from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
-from repro.core.plan import TilePlan, build_plan
+from repro.core.plan import SeqPlan, TilePlan, build_plan, build_seq_plan
 
 __all__ = [
     "run_plan",
+    "run_seq_plan",
     "TileContext",
     "ag_matmul",
     "ag_matmul_baseline",
     "matmul_rs",
     "matmul_rs_baseline",
+    "matmul_rs_ag",
     "ring_attention",
     "ag_attention_baseline",
     "psum_scatter_ring",
@@ -167,6 +169,40 @@ def run_plan(
         # final hop: each channel's reduction goes home (rank it belongs to)
         accs = [_permute(accs[c], axis, plan.channels[c].align_perm()) for c in range(nch)]
     return accs
+
+
+def run_seq_plan(
+    seq: SeqPlan,
+    rs_tile_fn: Callable,
+    seam_fn: Callable,
+    ag_tile_fn: Callable,
+    *,
+    carry: Any = None,
+) -> Any:
+    """Execute a fused RS -> AG seam plan in one traversal of the plan graph.
+
+    The producer half runs exactly like an "rs" plan (``rs_tile_fn`` computes
+    each segment partial); its per-channel fully reduced home segments are
+    handed — still as in-trace SSA values, never through a resharding
+    collective or a shard_map boundary — to ``seam_fn(accs, carry) ->
+    (seam_out, state, carry)``, which applies any rank-local glue and
+    re-chunks the segments into the consumer's per-channel step-0 tiles.  The
+    consumer half then runs like an "ag" plan over that state.  Soundness of
+    the in-place handoff is the seam-composition invariant
+    (``rs_segment(r, world-1) == r == sigma(r, 0)``), statically proven for
+    every ``build_seq_plan`` miss.
+
+    Returns ``(seam_out, carry)``.  Both halves delegate to :func:`run_plan`,
+    so this stays a thin composition over the single schedule loop and XLA's
+    latency-hiding scheduler sees one straight-line SSA region: the RS drain
+    and the AG fill schedule against each other instead of serializing at an
+    operator-collective boundary.
+    """
+    producer, consumer = seq.ops
+    accs = run_plan(producer, rs_tile_fn)
+    seam_out, state, carry = seam_fn(accs, carry)
+    carry = run_plan(consumer, ag_tile_fn, state=state, carry=carry)
+    return seam_out, carry
 
 
 def _plan_for(kind: str, channel: BlockChannel, axis: str, extent: int):
@@ -297,6 +333,96 @@ def matmul_rs(
     accs = run_plan(plan, gemm_tile)
     out = accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=-1)
     return out.astype(out_dtype)
+
+
+def matmul_rs_ag(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    axis: str,
+    channel: Optional[BlockChannel] = None,
+    channel2: Optional[BlockChannel] = None,
+    residual: Optional[jnp.ndarray] = None,
+    glue: Optional[Callable] = None,
+    out_dtype=None,
+):
+    """Fused layer seam: ``matmul_rs(x, w1)`` flowing into ``ag_matmul(·, w2)``.
+
+    Per-shard shapes: ``x``: [..., M, k_loc], ``w1``: [k_loc, N] (the RS
+    producer — e.g. a down/out projection), ``w2``: [N, n2_loc] (the AG
+    consumer — e.g. the next block's fused qkv or gate/up projection).
+    Between the two sits the rank-local seam glue applied to the full
+    [..., M/R, N] home segment:
+
+        y = residual + matmul_rs(x, w1)      (residual optional)
+        h = glue(y)                          (glue optional, row-preserving —
+                                              e.g. the next block's rms_norm)
+
+    Returns ``(y, ag_matmul(h, w2))`` — the residual-stream value plus the
+    next op's gathered activation — with the intermediate never leaving the
+    manual region and no operator collective at the seam (see
+    :func:`run_seq_plan`).  Identical float ops to the unfused pair, so the
+    results match it to the usual accumulation tolerance.
+
+    Both halves must share the effective channel count (RS chunks the N
+    columns, AG chunks the M/R rows); a mismatch raises ``ValueError`` —
+    ``compile_overlap_seq`` pre-checks and degrades loudly to the unfused
+    pair instead of calling in.
+    """
+    channel = channel or BlockChannel(axis=axis)
+    channel2 = channel2 or channel
+    out_dtype = out_dtype or x.dtype
+
+    m_glob, n_mid = x.shape[-2], w1.shape[-1]
+    n2_loc = w2.shape[-1]
+    world = axis_size(axis)
+    assert m_glob % world == 0, (m_glob, world)
+    m_loc = m_glob // world
+    nch = effective_channels(n_mid, channel.num_channels, kind="matmul_rs")
+    nch_ag = effective_channels(m_loc, channel2.num_channels, kind="ag_matmul")
+    if nch != nch_ag:
+        raise ValueError(
+            f"matmul_rs_ag: seam channel counts diverge — RS extent {n_mid} "
+            f"yields C={nch} but AG extent {m_loc} yields C={nch_ag}; use "
+            "compile_overlap_seq for the loud unfused fallback"
+        )
+    seq = build_seq_plan(("matmul_rs", "ag_matmul"), (channel, channel2), world, nch)
+    rs_plan, ag_plan = seq.ops
+    n_sub = n_mid // nch
+    m_sub = m_loc // nch
+    flow = jnp.dtype(rs_plan.flow_dtype)
+    accum2 = jnp.dtype(channel2.comp.accum_dtype)
+    comp_tile = tuple(channel.comp.tile)
+    comp_tile2 = tuple(channel2.comp.tile)
+
+    def rs_tile(ctx, _tile, _carry):
+        xs = _row_slice(x, ctx.src * m_loc, m_loc)
+        wc = w1[..., ctx.channel * n_sub : (ctx.channel + 1) * n_sub]
+        if comp_tile != DEFAULT_TILE:
+            return blocked_dot(xs, wc, comp_tile, accum=flow)
+        return _dot(xs, wc, accum=flow)
+
+    def seam(accs, _carry):
+        rs_out = accs[0] if nch == 1 else jnp.concatenate(accs, axis=-1)
+        rs_out = rs_out.astype(out_dtype)
+        y = rs_out if residual is None else residual + rs_out
+        # glue needs full rows (e.g. rms_norm normalizes over all N columns),
+        # so it runs on the complete home segment before the AG re-chunk —
+        # the same float ops, in the same order, as the unfused pair
+        h = y if glue is None else glue(y)
+        state = [_row_slice(h, c * m_sub, m_sub) for c in range(nch)]
+        out0 = jnp.zeros(h.shape[:-2] + (world * m_loc, n2_loc), dtype=h.dtype)
+        return y, state, out0
+
+    def ag_tile(ctx, tile, out):
+        if comp_tile2 != DEFAULT_TILE:
+            part = blocked_dot(tile, w2, comp_tile2, accum=accum2, out_dtype=out.dtype)
+        else:
+            part = _dot(tile, w2, accum=accum2).astype(out.dtype)
+        return _row_update(out, part, ctx.src * m_loc + ctx.channel * m_sub)
+
+    return run_seq_plan(seq, rs_tile, seam, ag_tile)
 
 
 def matmul_rs_baseline(x, w, *, axis: str, out_dtype=None):

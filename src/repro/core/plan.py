@@ -46,7 +46,15 @@ opts out) and exhaustively by ``python -m repro.analysis.verify --all``:
   * the semaphore protocol the fused kernels run over these tables is
     deadlock- and race-free (``analysis.protocol``: ``sem_count`` /
     ``deadlock`` / ``read_before_signal`` / ``overwritten_before_wait`` /
-    ``double_write``).
+    ``double_write``);
+  * **seam composition** (multi-op :class:`SeqPlan`): an RS producer chained
+    into an AG consumer over the same axis must land every channel's fully
+    reduced segment on its home rank exactly where the consumer seeds its
+    local tile — ``rs_segment(r, world-1) == r == sigma(r, 0)`` with matching
+    world and channel counts — so the seam hands off rank-locally, with no
+    resharding collective and no serialized drain->fill between the two ring
+    passes (``seam_composition``, plus a combined producer+consumer protocol
+    pass over the concatenated per-rank streams).
 """
 from __future__ import annotations
 
@@ -62,7 +70,9 @@ from repro.core.channels import BlockChannel, ORDERS
 __all__ = [
     "ChannelSchedule",
     "TilePlan",
+    "SeqPlan",
     "build_plan",
+    "build_seq_plan",
     "plan_cache_info",
     "FLOW_OF_KIND",
 ]
@@ -272,6 +282,80 @@ def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) 
 
         analysis.verify_plan(plan)
     return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqPlan:
+    """A multi-op plan graph: op N's RS flow feeds op N+1's AG flow.
+
+    The only supported shape today is the layer seam ``matmul_rs ->
+    ag_matmul``: one RS ring pass whose home segments become, in place, the
+    consumer's step-0 local tiles for a second ring pass over the *same* axis
+    and channel split.  The seam-composition invariant (module docstring)
+    guarantees the handoff is rank-local for every order, so the executor
+    (``core/overlap.run_seq_plan``) never materializes the resharded
+    intermediate across a shard_map boundary and never serializes the RS
+    drain against the AG fill.
+    """
+
+    ops: Tuple[TilePlan, ...]
+
+    def __post_init__(self):
+        if len(self.ops) != 2:
+            raise ValueError(f"SeqPlan supports exactly 2 chained ops, got {len(self.ops)}")
+        a, b = self.ops
+        if (a.flow, b.flow) != ("rs", "ag"):
+            raise ValueError(
+                f"SeqPlan seam must chain an rs producer into an ag consumer, "
+                f"got flows {(a.flow, b.flow)}"
+            )
+        if a.axis != b.axis or a.world != b.world or a.num_channels != b.num_channels:
+            raise ValueError(
+                "seam ops must share axis/world/channel count, got "
+                f"axis={(a.axis, b.axis)} world={(a.world, b.world)} "
+                f"C={(a.num_channels, b.num_channels)}"
+            )
+
+    @property
+    def axis(self) -> str:
+        return self.ops[0].axis
+
+    @property
+    def world(self) -> int:
+        return self.ops[0].world
+
+    @property
+    def num_channels(self) -> int:
+        return self.ops[0].num_channels
+
+
+@functools.lru_cache(maxsize=256)
+def build_seq_plan(
+    kinds: Tuple[str, ...],
+    channels: Tuple[BlockChannel, ...],
+    world: int,
+    num_channels: int,
+) -> SeqPlan:
+    """Build (and cache) the fused seam plan for ``kinds`` over ``world`` ranks.
+
+    ``channels`` may differ per op (e.g. different tile orders for the RS and
+    AG halves) but must agree on axis; ``num_channels`` is the shared
+    *effective* channel count, pre-clamped by the caller against both chunked
+    extents.  Every cache miss is verified by ``analysis.verify_seq_plan``
+    (schedule legality per op, the seam-composition invariant, and a combined
+    race/deadlock protocol pass) unless ``REPRO_VERIFY=0``.
+    """
+    if len(kinds) != len(channels):
+        raise ValueError(f"got {len(kinds)} kinds but {len(channels)} channels")
+    ops = tuple(
+        build_plan(kind, ch, world, num_channels) for kind, ch in zip(kinds, channels)
+    )
+    seq = SeqPlan(ops=ops)
+    if os.environ.get("REPRO_VERIFY", "1").lower() not in ("0", "false", "off"):
+        from repro import analysis  # lazy: analysis imports back into core
+
+        analysis.verify_seq_plan(seq)
+    return seq
 
 
 def plan_cache_info():

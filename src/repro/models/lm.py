@@ -27,6 +27,10 @@ from repro.parallel.context import ParallelContext
 __all__ = ["init", "specs", "forward", "init_caches", "cache_specs",
            "decode_step", "grad_masks", "sync_grads", "layer_plan", "LayerDef"]
 
+# per-shard spec of a fused seam's gathered qkv projection ([B, S, cols_loc],
+# column-sharded over the TP axis) as it crosses between layer smap regions
+_SEAM_QKV_SPEC = P(None, None, "model")
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerDef:
@@ -115,6 +119,66 @@ class LayerDef:
                 out_specs=(P(None, "model", None), P()),
             )(pc.use_gather(params["ffn"], full), x)
         return x, aux
+
+    # ---- fused RS->AG seams (pc.fuse_seams) -----------------------------------
+    def seam_eligible(self) -> bool:
+        """Layer can join a fused RS->AG seam chain: attention + dense MLP.
+
+        Mamba has no RS epilogue feeding an AG consumer; MoE's gather is the
+        ag_moe flow, not a plain ag_matmul — both break the chain.
+        """
+        return self.kind != "mamba" and self.ffn_kind == "mlp"
+
+    def apply_seq_fused(self, params, x, pc, cfg, shared_params=None,
+                        qkv=None, next_mixer=None):
+        """Seam-fused layer body: ONE smap region for attention + MLP.
+
+        The attention output-proj RS feeds the MLP gate/up AG over one shared
+        ring pass (intra-layer seam); with ``next_mixer`` (the next layer's
+        attention params) the MLP down-proj RS additionally produces the NEXT
+        layer's qkv projection (inter-layer seam), returned as ``next_qkv``
+        so the caller threads it into the next ``apply_seq_fused``.  ``qkv``
+        is this layer's projection from the previous layer's seam.
+        Returns (x, aux_loss, next_qkv).
+        """
+        mixer_params = shared_params if self.shared else params["mixer"]
+        afull = attention.specs(cfg, pc.tp, pc.dp_spec())
+        asp = {k: pc.manual(v) for k, v in afull.items()}
+        ffull = ffn.specs(cfg, pc.tp, pc.dp_spec())
+        fsp = {k: pc.manual(v) for k, v in ffull.items()}
+        aux = jnp.zeros((), jnp.float32)
+
+        args = [pc.use_gather(mixer_params, afull),
+                pc.use_gather(params["ffn"], ffull), x]
+        in_specs = [asp, fsp, P(None, "model", None)]
+        if qkv is not None:
+            args.append(qkv)
+            in_specs.append(_SEAM_QKV_SPEC)
+        if next_mixer is not None:
+            args.append(pc.use_gather(next_mixer, afull))
+            in_specs.append(asp)
+
+        def body(mp_, fp_, x_, *rest):
+            it = iter(rest)
+            qkv_ = next(it) if qkv is not None else None
+            np_ = next(it) if next_mixer is not None else None
+            y, gu = attention.apply_seq(
+                mp_, x_, pc, cfg, causal=True, window=self.window,
+                rope_theta=self.theta, qkv=qkv_,
+                next_proj=ffn.seam_proj(fp_, cfg))
+            if np_ is None:
+                return ffn.apply_seq(fp_, y, pc, cfg, gu=gu)
+            return ffn.apply_seq(fp_, y, pc, cfg, gu=gu,
+                                 next_proj=attention.seam_proj(np_, cfg))
+
+        if next_mixer is not None:
+            x, nqkv = pc.smap(
+                body, in_specs=tuple(in_specs),
+                out_specs=(P(None, "model", None), _SEAM_QKV_SPEC))(*args)
+            return x, aux, nqkv
+        x = pc.smap(body, in_specs=tuple(in_specs),
+                    out_specs=P(None, "model", None))(*args)
+        return x, aux, None
 
     # ---- prefill (fills decode caches while computing logits) -----------------
     def apply_prefill(self, params, x, pc, cfg, max_len, shared_params=None):
@@ -408,6 +472,31 @@ def grad_masks(cfg, pc: ParallelContext):
 # forward (train / prefill)
 # -----------------------------------------------------------------------------
 
+def _seam_chain(defs, plist, x, pc, cfg, shared, aux_total):
+    """Run a python-level list of layers, fusing RS->AG seams between
+    consecutive eligible layers (attention + dense MLP); an ineligible layer
+    (mamba, MoE) breaks the chain and runs the unfused body.  Chains live
+    within one python-level segment only — a lax.scan carry boundary cannot
+    carry a half-open seam, so prefix / each scan unit / suffix chain
+    independently.
+    """
+    qkv = None
+    n = len(defs)
+    for i, (d, p) in enumerate(zip(defs, plist)):
+        if not d.seam_eligible():
+            x, aux = d.apply_seq(p, x, pc, cfg, shared_params=shared)
+            aux_total = aux_total + aux
+            continue
+        next_mixer = None
+        if i + 1 < n and defs[i + 1].seam_eligible():
+            nd, np_ = defs[i + 1], plist[i + 1]
+            next_mixer = shared if nd.shared else np_["mixer"]
+        x, aux, qkv = d.apply_seq_fused(p, x, pc, cfg, shared_params=shared,
+                                        qkv=qkv, next_mixer=next_mixer)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
 def embed_tokens(params, cfg, tokens, embeds=None):
     """tokens: [B, S] int32 (or None); embeds: [B, S0, D] stub-frontend prefix."""
     parts = []
@@ -427,7 +516,12 @@ def forward(params, cfg, pc: ParallelContext, tokens, embeds=None,
 
     ``unroll`` replaces the layer scan with a python loop — used by the
     dry-run cost analysis (XLA counts while bodies once) and for small-depth
-    debugging; numerically identical."""
+    debugging; numerically identical.
+
+    With ``pc.fuse_seams`` consecutive attention+MLP layers chain their
+    RS->AG seams into shared ring passes (see :func:`_seam_chain`); chains
+    reset at lax.scan carry boundaries.
+    """
     from repro.nn.layers import rms_norm
 
     prefix, unit, n_units, suffix = layer_plan(cfg)
@@ -438,17 +532,26 @@ def forward(params, cfg, pc: ParallelContext, tokens, embeds=None,
     shared = params.get("shared_attn")
     aux_total = jnp.zeros((), jnp.float32)
 
-    for d, p in zip(prefix, params["prefix"]):
-        x, aux = d.apply_seq(p, x, pc, cfg, shared_params=shared)
-        aux_total = aux_total + aux
+    if pc.fuse_seams:
+        x, aux_total = _seam_chain(prefix, params["prefix"], x, pc, cfg,
+                                   shared, aux_total)
+    else:
+        for d, p in zip(prefix, params["prefix"]):
+            x, aux = d.apply_seq(p, x, pc, cfg, shared_params=shared)
+            aux_total = aux_total + aux
 
     if n_units:
         def unit_body(carry, unit_params):
             h, aux_acc = carry
-            for i, d in enumerate(unit):
-                h, aux = d.apply_seq(unit_params[i], h, pc, cfg,
-                                     shared_params=shared)
-                aux_acc = aux_acc + aux
+            if pc.fuse_seams:
+                plist = [unit_params[i] for i in range(len(unit))]
+                h, aux_acc = _seam_chain(unit, plist, h, pc, cfg,
+                                         shared, aux_acc)
+            else:
+                for i, d in enumerate(unit):
+                    h, aux = d.apply_seq(unit_params[i], h, pc, cfg,
+                                         shared_params=shared)
+                    aux_acc = aux_acc + aux
             return (h, aux_acc), None
 
         body = unit_body
@@ -464,9 +567,13 @@ def forward(params, cfg, pc: ParallelContext, tokens, embeds=None,
         else:
             (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["scan"])
 
-    for d, p in zip(suffix, params["suffix"]):
-        x, aux = d.apply_seq(p, x, pc, cfg, shared_params=shared)
-        aux_total = aux_total + aux
+    if pc.fuse_seams:
+        x, aux_total = _seam_chain(suffix, params["suffix"], x, pc, cfg,
+                                   shared, aux_total)
+    else:
+        for d, p in zip(suffix, params["suffix"]):
+            x, aux = d.apply_seq(p, x, pc, cfg, shared_params=shared)
+            aux_total = aux_total + aux
 
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
     head = _gathered_head(params, cfg, pc)

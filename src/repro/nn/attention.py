@@ -32,7 +32,7 @@ from repro.nn.layers import (
 
 __all__ = [
     "init", "specs", "grad_masks", "apply_seq", "apply_seq_ring", "apply_decode",
-    "init_cache", "chunked_attention",
+    "init_cache", "chunked_attention", "seam_proj",
 ]
 
 
@@ -175,12 +175,26 @@ def chunked_attention(q, k, v, *, causal=True, window: Optional[int] = None,
     return (o_f / jnp.maximum(l_f, 1e-30)).astype(q.dtype)
 
 
-def _project_qkv(params, h, pc, lay, hd):
+def seam_proj(params, cfg):
+    """(glue, w) pair for fusing an upstream RS into THIS layer's qkv AG.
+
+    ``glue`` maps the upstream residual output to this layer's AG input (the
+    pre-attention rms_norm); ``w`` is the fused qkv per-shard weight — the
+    same concat :func:`_project_qkv` uses.  Bias stays local in the consumer.
+    """
+    w = jnp.concatenate([params["wq"], params["wkv"]], axis=1)
+    return (lambda y: rms_norm(y, params["ln"], cfg.norm_eps)), w
+
+
+def _project_qkv(params, h, pc, lay, hd, qkv=None):
     """Shared AG+GEMM producer for q and kv projections.
 
-    h: [B, s_loc, D] -> q/k/v as [B, S, n, hd] (full gathered sequence)."""
-    w = jnp.concatenate([params["wq"], params["wkv"]], axis=1)
-    qkv = pc.ag_matmul(h, w)  # [B, S, (h_loc + 2*kv_loc)*hd]
+    h: [B, s_loc, D] -> q/k/v as [B, S, n, hd] (full gathered sequence).
+    ``qkv`` is the already-gathered projection from an upstream fused RS->AG
+    seam (pre-bias), skipping the AG+GEMM here."""
+    if qkv is None:
+        w = jnp.concatenate([params["wq"], params["wkv"]], axis=1)
+        qkv = pc.ag_matmul(h, w)  # [B, S, (h_loc + 2*kv_loc)*hd]
     if "bq" in params:
         bias = jnp.concatenate([params["bq"], params["bkv"]])
         qkv = qkv + bias
@@ -193,21 +207,29 @@ def _project_qkv(params, h, pc, lay, hd):
 
 
 def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
-              rope_theta=None, attn_chunk=1024, return_kv=False, tune=False):
+              rope_theta=None, attn_chunk=1024, return_kv=False, tune=False,
+              qkv=None, next_proj=None):
     """Full-sequence attention block body (call inside pc.smap manual region).
 
     x: [B, s_loc, D] sequence-sharded. Returns [B, s_loc, D] (residual added);
     with ``return_kv``, also the per-shard KV in cache layout
     [B, kv_loc, S, hd] (prefill-into-cache).  ``tune=True`` lets the AG+GEMM
     and GEMM+RS collectives resolve autotuned BlockChannels (repro.tune).
+
+    Inter-op seam fusion (``pc.fuse_seams``): ``qkv`` is this layer's fused
+    qkv projection already produced by the upstream op's RS->AG ring pass
+    (see :func:`seam_proj`); ``next_proj=(glue, w)`` fuses the output-proj RS
+    with the next consumer's AG over one shared ring pass, changing the
+    return value to ``(y, next_out)`` (with ``return_kv``: ``(y, next_out,
+    kv)``).
     """
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     lay = _lay(cfg, pc.tp)
     hd = cfg.hd
     b = x.shape[0]
-    h = rms_norm(x, params["ln"], cfg.norm_eps)
-    q, k, v, s_glob = _project_qkv(params, h, pc, lay, hd)
+    h = None if qkv is not None else rms_norm(x, params["ln"], cfg.norm_eps)
+    q, k, v, s_glob = _project_qkv(params, h, pc, lay, hd, qkv=qkv)
 
     positions = jnp.arange(s_glob)
     q, k = rope(q, k, positions,
@@ -220,6 +242,13 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
     o = chunked_attention(q, k, v, causal=causal, window=window,
                           chunk=min(attn_chunk, s_glob), p_bf16=pc.attn_p_bf16)
     o_flat = o.transpose(0, 2, 1, 3).reshape(b, s_glob, lay.h_loc * hd)
+    if next_proj is not None:
+        glue, w_next = next_proj
+        y, nxt = pc.matmul_rs_ag(o_flat, params["wo"], w_next,
+                                 residual=x, glue=glue)
+        if return_kv:
+            return y, nxt, {"k": k, "v": v}
+        return y, nxt
     out = pc.matmul_rs(o_flat, params["wo"])  # [B, s_loc, D]
     y = x + out
     if return_kv:
@@ -228,7 +257,7 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
 
 
 def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
-                   rope_theta=None, tune=False):
+                   rope_theta=None, tune=False, next_proj=None):
     """AG-Q + ring-KV attention block body (paper Fig. 6 layer form).
 
     Where :func:`apply_seq` gathers the WHOLE qkv projection through the
@@ -281,6 +310,11 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
 
     o = pc.ring_attention(q, k, v, causal=causal, window=window)
     o_flat = o.transpose(0, 2, 1, 3).reshape(b, s_glob, lay.h_loc * hd)
+    if next_proj is not None:
+        glue, w_next = next_proj
+        # fused epilogue: output-proj RS feeds the next consumer's AG
+        return pc.matmul_rs_ag(o_flat, params["wo"], w_next,
+                               residual=x, glue=glue)
     out = pc.matmul_rs(o_flat, params["wo"])  # [B, s_loc, D]
     return x + out
 

@@ -24,7 +24,11 @@ Non-tuned fields of ``pc.channel`` (comm resource/mode) are inherited by
 every winner.
 
 Layers call ``pc.ag_matmul`` / ``pc.matmul_rs`` / ``pc.psum`` on *per-shard*
-values while inside a manual region entered via ``pc.smap``.
+values while inside a manual region entered via ``pc.smap``.  With
+``fuse_seams=True`` the model stack additionally fuses each layer's
+down-projection RS into the next consumer's AG over ONE shared ring pass
+(``pc.matmul_rs_ag`` -> ``compile_overlap_seq``), eliminating the exposed
+collective at the inter-op seam.
 """
 from __future__ import annotations
 
@@ -38,7 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.channels import BlockChannel
-from repro.core.compiler import compile_overlap
+from repro.core.compiler import compile_overlap, compile_overlap_seq
 
 __all__ = ["ParallelContext", "manual_only"]
 
@@ -75,6 +79,8 @@ class ParallelContext:
     tune: bool = False  # autotune each op's BlockChannel
                                             # per (kind, shape) via repro.tune
     tune_ranker: Optional[str] = None  # "measure" | "model" | "auto"/None
+    fuse_seams: bool = False  # fuse layer RS->AG seams into one ring
+                                            # pass (compile_overlap_seq)
 
     def __post_init__(self):
         if self.channel is None:
@@ -152,6 +158,31 @@ class ParallelContext:
 
     def ag_matmul(self, x, w, **kw):
         return self._op("ag_matmul", (jnp.shape(x), jnp.shape(w)))(x, w, **kw)
+
+    def matmul_rs_ag(self, x, w1, w2, *, residual=None, glue=None, **kw):
+        """Fused layer seam: matmul_rs(x, w1) -> ag_matmul(glue(residual + .), w2).
+
+        One shared ring pass; each RS segment lands on its home rank and feeds
+        the consumer's per-tile compute directly (no exposed collective at the
+        seam).  With ``tune=True`` the seam-aware tuner prices fused vs.
+        unfused per shape; a schedule-incompatible seam degrades loudly to the
+        unfused pair via one SeamFallbackWarning.  Returns ``(y, out)`` where
+        ``y = residual + rs_out`` (pre-glue, for the residual stream) and
+        ``out`` is the consumer's AG-matmul output.
+        """
+        ops = ["matmul_rs", "ag_matmul"]
+        if self.tune and self.mode == "overlap":
+            from repro.tune import JOINT_SPACE
+
+            fn = compile_overlap_seq(
+                ops, channel="auto", axis=self.axis, mesh=self.mesh,
+                tune_ranker=self.tune_ranker, tune_base=self.channel,
+                tune_space=JOINT_SPACE)
+        else:
+            fn = compile_overlap_seq(
+                ops, channel=self.channel,
+                overlapped=(self.mode == "overlap"))
+        return fn(x, w1, w2, residual=residual, glue=glue, **kw)
 
     def matmul_rs(self, x, w, **kw):
         return self._op("matmul_rs", (jnp.shape(x), jnp.shape(w)))(x, w, **kw)

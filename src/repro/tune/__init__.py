@@ -63,18 +63,22 @@ from repro.tune.candidates import (
     DEFAULT_SPACE,
     GEMM_TILE_KINDS,
     JOINT_SPACE,
+    SEQ_KIND,
     Candidate,
     Space,
     TUNABLE_KINDS,
     chunk_extent,
     comp_tile_candidates,
     enumerate_candidates,
+    enumerate_seq_candidates,
+    seq_sigs,
     signature,
 )
 
 __all__ = [
     "autotune",
     "resolve_channel",
+    "resolve_seq",
     "TuneResult",
     "Space",
     "Candidate",
@@ -83,10 +87,13 @@ __all__ = [
     "COMP_TILE_LATTICE",
     "GEMM_TILE_KINDS",
     "TUNABLE_KINDS",
+    "SEQ_KIND",
     "RANKERS",
     "CACHE_SCHEMA",
     "signature",
     "enumerate_candidates",
+    "enumerate_seq_candidates",
+    "seq_sigs",
     "comp_tile_candidates",
     "chunk_extent",
 ]
@@ -312,6 +319,66 @@ def autotune(
         score_iqr=best_iqr,
         sweep=sweep_stats,
     )
+
+
+def resolve_seq(
+    *,
+    shapes: Optional[Sequence[Tuple[int, ...]]] = None,
+    sig: Optional[Sequence[int]] = None,
+    mesh=None,
+    axis: str = "model",
+    world: Optional[int] = None,
+    base: Optional[BlockChannel] = None,
+    ranker: Optional[str] = None,
+    space: Space = DEFAULT_SPACE,
+) -> Tuple[bool, BlockChannel, BlockChannel]:
+    """Seam-aware resolution for ``compile_overlap_seq(..., channel="auto")``.
+
+    Returns ``(fused, ch_rs, ch_ag)``: whether to run the fused seam, and the
+    channel for each half.  The fused plan is priced over the shared-channel
+    candidates (``enumerate_seq_candidates``) with the eliminated
+    exposed-collective time credited (``cost.seam_saving``); the unfused plan
+    takes each half's own autotuned winner and prices the pair on the SAME
+    modeled scale (``cost.predict_cost`` — never mixing measured us with
+    modeled seconds).  Whenever a shared-channel candidate exists, the fused
+    seam with *those* channels costs no more than the same channels unfused —
+    unfused only wins here when the halves' independent winners diverge by
+    more than the seam saving (e.g. extents that clamp a good shared C away).
+    Pure host-side arithmetic plus cache-backed per-op lookups: trace-safe.
+    """
+    if sig is None:
+        if shapes is None:
+            raise ValueError("resolve_seq needs shapes or a signature")
+        sig = signature(SEQ_KIND, [tuple(s) for s in shapes])
+    sig = tuple(int(s) for s in sig)
+    if world is None and mesh is not None:
+        world = int(mesh.shape[axis])
+    if world is None:
+        raise ValueError("resolve_seq needs a mesh or an explicit world size")
+
+    best_f, best_f_score = None, float("inf")
+    for cand in enumerate_seq_candidates(sig=sig, world=world, space=space):
+        score = _cost.predict_seq_cost(sig, world, cand, fused=True)
+        if score < best_f_score:  # strict: ties keep enumeration order
+            best_f, best_f_score = cand, score
+
+    sig_rs, sig_ag = seq_sigs(sig, world)
+    res_rs = autotune(
+        "matmul_rs", signature=sig_rs, mesh=mesh, axis=axis, world=world,
+        base=base, ranker=ranker, space=space,
+    )
+    res_ag = autotune(
+        "ag_matmul", signature=sig_ag, mesh=mesh, axis=axis, world=world,
+        base=base, ranker=ranker, space=space,
+    )
+    unfused_score = _cost.predict_cost(
+        "matmul_rs", sig_rs, world, res_rs.candidate
+    ) + _cost.predict_cost("ag_matmul", sig_ag, world, res_ag.candidate)
+
+    if best_f is not None and best_f_score <= unfused_score:
+        ch = best_f.channel(axis, base)
+        return True, ch, ch
+    return False, res_rs.channel, res_ag.channel
 
 
 def resolve_channel(

@@ -45,13 +45,20 @@ __all__ = [
     "JOINT_SPACE",
     "COMP_TILE_LATTICE",
     "GEMM_TILE_KINDS",
+    "SEQ_KIND",
     "enumerate_candidates",
+    "enumerate_seq_candidates",
     "comp_tile_candidates",
     "signature",
+    "seq_sigs",
     "chunk_extent",
 ]
 
 TUNABLE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
+
+# the fused RS -> AG layer seam (compile_overlap_seq); tuned through its own
+# shared-channel enumerator + seam-aware cost, not the single-op paths above
+SEQ_KIND = "seq_rs_ag"
 
 # kinds whose consumer compute is a plain GEMM the (tm, tn, tk) tile blocks
 # directly; the attention and MoE consumers interpret the same tile through
@@ -294,6 +301,11 @@ def signature(kind: str, shapes: Sequence[Tuple[int, ...]]) -> Tuple[int, ...]:
     ops receive them inside the manual region, and keeps only what changes
     the tuning landscape (leading batch dims collapse into one).
     """
+    if kind == SEQ_KIND:
+        x, w1, w2 = shapes[0], shapes[1], shapes[2]
+        lead = math.prod(x[:-2]) if len(x) > 2 else 1
+        # (lead, m_glob, k_loc, n_mid, n2_loc)
+        return (lead, x[-2], x[-1], w1[-1], w2[-1])
     if kind == "ag_matmul":
         x, w = shapes[0], shapes[1]
         lead = math.prod(x[:-2]) if len(x) > 2 else 1
@@ -312,6 +324,62 @@ def signature(kind: str, shapes: Sequence[Tuple[int, ...]]) -> Tuple[int, ...]:
         # (m_loc, d_model, top_k, e_loc, d_expert)
         return (x[-2], x[-1], ids[-1], w_gu[0], w_gu[-1] // 2)
     raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
+
+
+def seq_sigs(sig: Tuple[int, ...], world: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Split a seam signature into its constituent per-op signatures.
+
+    The RS half sees the seam's inputs directly; the AG half consumes the
+    reduce-scattered [m_glob / world, n_mid] home segment.
+    """
+    lead, m_glob, k_loc, n_mid, n2_loc = sig
+    return (lead, m_glob, k_loc, n_mid), (lead, m_glob // world, n_mid, n2_loc)
+
+
+def enumerate_seq_candidates(
+    *,
+    sig: Sequence[int],
+    world: int,
+    space: Space = DEFAULT_SPACE,
+) -> Tuple[Candidate, ...]:
+    """Shared-channel feasible design points for a fused RS -> AG seam.
+
+    The seam handoff is per-channel, so only requests whose two chunked
+    extents (RS: the n_mid columns, AG: the m_glob / world rows) clamp to the
+    SAME effective count survive — anything else is what
+    ``compile_overlap_seq`` degrades to the unfused pair for.  Each surviving
+    (order, C) point is statically verified as a seam
+    (``analysis.check_seq_candidate``); compute tiles are pruned against the
+    RS half's per-step GEMM (the dominant contraction at the seam).
+    """
+    from repro.analysis import check_seq_candidate
+
+    sig = tuple(int(s) for s in sig)
+    _lead, m_glob, _k_loc, n_mid, _n2_loc = sig
+    if world < 1 or m_glob % world:
+        return ()
+    m_loc = m_glob // world
+    sig_rs, _sig_ag = seq_sigs(sig, world)
+    out, seen = [], set()
+    for order in space.orders:
+        for req in space.channel_counts:
+            nch = effective_channels(n_mid, req, kind="matmul_rs", warn=False)
+            if nch != effective_channels(m_loc, req, kind="ag_matmul", warn=False):
+                continue
+            if check_seq_candidate(order, world, nch) is not None:
+                continue
+            for accum in space.accum_dtypes:
+                tiles = comp_tile_candidates(
+                    "matmul_rs", sig_rs, world=world, nch=nch, accum_dtype=accum, space=space
+                )
+                for tile in tiles:
+                    cand = Candidate(
+                        order=order, num_channels=nch, accum_dtype=accum, comp_tile=tile
+                    )
+                    if cand not in seen:
+                        seen.add(cand)
+                        out.append(cand)
+    return tuple(out)
 
 
 def chunk_extent(kind: str, sig: Tuple[int, ...]) -> int:

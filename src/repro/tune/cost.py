@@ -60,7 +60,7 @@ import jax.numpy as jnp
 
 from repro.core.comp_tiles import DEFAULT_TILE, largest_divisor, resolve_tile, tile_footprint_bytes
 from repro.launch.roofline import HW
-from repro.tune.candidates import Candidate, GEMM_TILE_KINDS, _tile_dims, chunk_extent
+from repro.tune.candidates import Candidate, GEMM_TILE_KINDS, _tile_dims, chunk_extent, seq_sigs
 
 __all__ = [
     "ALPHA_S",
@@ -69,6 +69,8 @@ __all__ = [
     "realized_tile",
     "comp_step_time",
     "predict_cost",
+    "seam_saving",
+    "predict_seq_cost",
 ]
 
 # per-transfer launch/synchronization latency (seconds); the alpha of a
@@ -265,6 +267,52 @@ def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -
     fill = (t_comm + t_comp) / cand.num_channels
     launch = ALPHA_S * cand.num_channels * steps
     return steady + fill + launch
+
+
+def _fill_drain_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
+    """The pipeline fill/drain term of one op's makespan (same math as
+    ``predict_cost``'s ``fill``)."""
+    wire, _ = step_terms(kind, sig, world, cand.accum_dtype)
+    dirs = 2.0 if (cand.order == "bidir_ring" and cand.num_channels >= 2) else 1.0
+    hops = max(1.0, world / 4.0) if cand.order == "all2all" else 1.0
+    t_comm = wire * hops / (HW["link_bw"] * dirs)
+    t_comp = comp_step_time(kind, sig, world, cand)
+    return (t_comm + t_comp) / cand.num_channels
+
+
+def seam_saving(sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
+    """Modeled time the fused seam removes vs. the unfused pair (seconds).
+
+    Unfused, the RS pipeline's drain and the AG pipeline's fill serialize at
+    the operator-collective boundary — the exposed-collective seam.  Fused,
+    the home segments hand off rank-locally and the two pipelines schedule
+    against each other, so the shorter of the two fill/drain tails hides
+    inside the longer one:
+
+        saving = min(fill_drain(rs), fill_drain(ag))
+
+    Strictly positive for every candidate, so a schedule-compatible fused
+    seam is never modeled slower than the same candidate unfused.
+    """
+    sig_rs, sig_ag = seq_sigs(tuple(sig), world)
+    return min(
+        _fill_drain_time("matmul_rs", sig_rs, world, cand),
+        _fill_drain_time("ag_matmul", sig_ag, world, cand),
+    )
+
+
+def predict_seq_cost(
+    sig: Tuple[int, ...], world: int, cand: Candidate, *, fused: bool = True
+) -> float:
+    """Predicted makespan (seconds) of the RS -> AG seam under one shared
+    candidate: the two per-op makespans, minus the seam overlap when fused."""
+    sig_rs, sig_ag = seq_sigs(tuple(sig), world)
+    total = predict_cost("matmul_rs", sig_rs, world, cand) + predict_cost(
+        "ag_matmul", sig_ag, world, cand
+    )
+    if fused:
+        total -= seam_saving(sig, world, cand)
+    return total
 
 
 def explain(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> Dict[str, float]:

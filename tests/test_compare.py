@@ -100,6 +100,33 @@ def test_main_no_baseline_passes_with_notice(tmp_path, capsys, monkeypatch):
     assert "no baseline" in capsys.readouterr().out
 
 
+def test_refresh_baseline_downgrades_exact_drift_to_notice():
+    cur = dict(BASE, ag_matmul={"considered": 20, "us": 100.0, "cache_round_trip": True})
+    pat = "BENCH_x.json:ag_matmul/considered"
+    failures, notices = _cmp(BASE, cur, refresh=[pat])
+    assert not failures
+    assert any("refreshed" in n and pat in n for n in notices)
+    # a pattern that does NOT match leaves the failure in place
+    failures, _ = _cmp(BASE, cur, refresh=["BENCH_other.json:*"])
+    assert any("exact invariant changed" in f for f in failures)
+
+
+def test_refresh_baseline_covers_dropped_entries_too():
+    cur = {"ag_matmul": {"us": 100.0, "cache_round_trip": True}}  # no considered
+    failures, notices = _cmp(BASE, cur, refresh=["BENCH_x.json:*/considered"])
+    assert not failures
+    assert any("missing" in n and "refreshed" in n for n in notices)
+
+
+def test_refresh_patterns_load_from_file_and_cli(tmp_path):
+    path = tmp_path / "refresh_baseline.txt"
+    path.write_text("# comment line\n\nBENCH_x.json:*/considered\n")
+    pats = compare.load_refresh_patterns(["cli:pat"], str(path))
+    assert pats == ["cli:pat", "BENCH_x.json:*/considered"]
+    # absent file: CLI patterns only, no error
+    assert compare.load_refresh_patterns([], str(tmp_path / "nope.txt")) == []
+
+
 def test_main_new_bench_file_is_a_notice(tmp_path, capsys, monkeypatch):
     base_dir, cur_dir = tmp_path / "baseline", tmp_path / "current"
     base_dir.mkdir()

@@ -17,8 +17,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map, make_mesh
 from repro.core import (
-    BlockChannel, CommSpec, CompSpec, compile_overlap, build_plan,
-    effective_channels, schedules, unsupported_error,
+    BlockChannel, CommSpec, CompSpec, compile_overlap, compile_overlap_seq,
+    SeamFallbackWarning, build_plan, effective_channels, schedules,
+    unsupported_error,
 )
 from repro.core.moe_overlap import moe_router
 from repro.core.plan import ChannelSchedule
@@ -311,3 +312,108 @@ def test_unknown_kind_and_backend_raise():
         compile_overlap("conv_halo", ch)
     with pytest.raises(ValueError, match="unknown backend"):
         compile_overlap("ag_matmul", ch, backend="cuda")
+
+
+# ---- fused RS->AG seam (compile_overlap_seq) --------------------------------
+
+def _seam_ref(x, w1, w2, residual, glue):
+    """Unfused global reference for the matmul_rs -> ag_matmul pair."""
+    y = residual + x @ w1
+    return y, glue(y) @ w2
+
+
+_SEAM_GLUE = lambda y: y * 0.5 + 1.0  # noqa: E731 — any row-local map works
+_SEAM_SPECS = dict(
+    in_specs=(P(None, "model"), P("model", None), P(None, "model"),
+              P("model", None)),
+    out_specs=(P("model", None), P(None, "model")),
+)
+
+
+@pytest.mark.parametrize("order,channels,accum", SWEEP)
+def test_parity_seam_fused_vs_unfused_pair(mesh4, order, channels, accum):
+    """compile_overlap_seq == the unfused two-op reference, full sweep."""
+    m, k, n_mid, n2 = R * 8, R * 8, 16, 2 * R * 4
+    x = jax.random.normal(KEY, (m, k), jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(11), (k, n_mid), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(12), (n_mid, n2), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(13), (m, n_mid), jnp.float32)
+    ch = _chan(order, channels, accum)
+    fn = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    sm = shard_map(
+        lambda x_, w1_, w2_, r_: fn(x_, w1_, w2_, residual=r_, glue=_SEAM_GLUE),
+        mesh4, **_SEAM_SPECS)
+    y, g = jax.jit(sm)(x, w1, w2, res)
+    y_ref, g_ref = _seam_ref(x, w1, w2, res, _SEAM_GLUE)
+    allclose(y, y_ref, **_tol(accum))
+    allclose(g, g_ref, **_tol(accum))
+
+
+def test_seam_incompatible_channels_fall_back_loudly(mesh4):
+    """Diverging effective channel counts degrade to the unfused pair via
+    exactly one SeamFallbackWarning — correct results, no crash (satellite)."""
+    # requested C=3: RS extent n_mid=12 keeps C=3, AG extent m_loc=4 clamps
+    # to C=2 -> the seam cannot share one ring pass
+    m, k, n_mid, n2 = R * 4, R * 8, 12, R * 4
+    x = jax.random.normal(KEY, (m, k), jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(14), (k, n_mid), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(15), (n_mid, n2), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(16), (m, n_mid), jnp.float32)
+    ch = _chan("ring", 3, "float32")
+    fn = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    sm = shard_map(
+        lambda x_, w1_, w2_, r_: fn(x_, w1_, w2_, residual=r_, glue=_SEAM_GLUE),
+        mesh4, **_SEAM_SPECS)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        y, g = jax.jit(sm)(x, w1, w2, res)
+    fb = [w for w in caught if issubclass(w.category, SeamFallbackWarning)]
+    assert len(fb) == 1, [str(w.message) for w in caught]
+    assert "effective channel counts diverge" in str(fb[0].message)
+    y_ref, g_ref = _seam_ref(x, w1, w2, res, _SEAM_GLUE)
+    allclose(y, y_ref, **_tol("float32"))
+    allclose(g, g_ref, **_tol("float32"))
+
+
+def test_seam_unsupported_sequences_raise_structured():
+    with pytest.raises(NotImplementedError, match="ag_matmul', 'matmul_rs"):
+        compile_overlap_seq(["ag_matmul", "matmul_rs"])  # AG->RS is not a seam
+    with pytest.raises(NotImplementedError, match="backend='pallas'"):
+        compile_overlap_seq(["matmul_rs", "ag_matmul"], backend="pallas")
+
+
+@pytest.mark.parametrize("table,op_index", [("rs_seg", 0), ("src", 1)])
+def test_seam_mutation_rejected_by_verifier(table, op_index):
+    """A mis-routed seam segment must fail verification with the faulting op
+    index attached (seeded-mutation case)."""
+    from repro.analysis import verify_seq_tables
+    from repro.analysis.errors import PlanVerificationError
+    from repro.analysis.ir import PlanTables
+    from repro.core.plan import build_seq_plan
+
+    ch = _chan("ring", 2, "float32")
+    seq = build_seq_plan(("matmul_rs", "ag_matmul"), (ch, ch), R, 2)
+    tables = [PlanTables.from_plan(op) for op in seq.ops]
+    t = tables[op_index]
+    if table == "rs_seg":
+        # producer's last-step home segment routed to the wrong rank
+        last = t.world - 1
+        bad = t.poke("rs_seg", 0, last, 0, (t.rs_seg[0][last][0] + 1) % t.world)
+    else:
+        # consumer seeds channel 0 step 0 from a non-home rank
+        bad = t.poke("src", 0, 0, 0, (t.src[0][0][0] + 1) % t.world)
+    tables[op_index] = bad
+    with pytest.raises(PlanVerificationError) as ei:
+        verify_seq_tables(tables)
+    assert ei.value.op_index == op_index
+    assert "op_index" in str(ei.value)
+
+
+def test_build_seq_plan_rejects_bad_sequences():
+    from repro.core.plan import build_seq_plan
+
+    ch = _chan("ring", 2, "float32")
+    with pytest.raises(ValueError, match="rs"):
+        build_seq_plan(("ag_matmul", "matmul_rs"), (ch, ch), R, 2)
+    with pytest.raises(ValueError):
+        build_seq_plan(("matmul_rs",), (ch,), R, 2)

@@ -934,3 +934,38 @@ def test_bad_inputs():
         compile_overlap("ag_matmul", "fastest")
     with pytest.raises(ValueError, match="unknown ranker"):
         tune.autotune("ag_matmul", signature=(1, 8, 8, 8), world=4, ranker="vibes")
+
+
+# ---------------------------------------------------------------------------
+# seam-aware resolution (fused RS -> AG, PR 7)
+
+SEAM_SIG = (1, R * 16, 16, 32, 8)  # (lead, m_glob, k_loc, n_mid, n2_loc)
+
+
+def test_seq_candidates_share_one_effective_channel_count():
+    cands = tune.enumerate_seq_candidates(sig=SEAM_SIG, world=R)
+    assert cands
+    m_loc = SEAM_SIG[1] // R
+    for c in cands:
+        # the seam handoff is per-channel: both halves' chunked extents must
+        # clamp to the candidate's count, or the pair degrades to unfused
+        assert effective_channels(SEAM_SIG[3], c.num_channels) == c.num_channels
+        assert effective_channels(m_loc, c.num_channels) == c.num_channels
+
+
+def test_predict_seq_cost_credits_strictly_positive_saving():
+    from repro.tune import cost as tune_cost
+
+    for cand in tune.enumerate_seq_candidates(sig=SEAM_SIG, world=R):
+        saving = tune_cost.seam_saving(SEAM_SIG, R, cand)
+        assert saving > 0.0
+        fused = tune_cost.predict_seq_cost(SEAM_SIG, R, cand, fused=True)
+        unfused = tune_cost.predict_seq_cost(SEAM_SIG, R, cand, fused=False)
+        assert fused == pytest.approx(unfused - saving)
+
+
+def test_resolve_seq_verdicts_fused_with_shared_channels():
+    fused, ch_rs, ch_ag = tune.resolve_seq(sig=SEAM_SIG, world=R)
+    assert fused
+    assert ch_rs.num_channels == ch_ag.num_channels
+    assert ch_rs.comm.order == ch_ag.comm.order
