@@ -1,7 +1,7 @@
 """Fused RS->AG seam bench + CI smoke (``--smoke`` -> ``BENCH_seam.json``).
 
 The inter-op overlap claim made gateable: for every dense FFN seam shape the
-fused ``compile_overlap_seq`` plan must beat the best unfused
+fused ``compile_overlap(["matmul_rs", "ag_matmul"])`` plan must beat the best unfused
 ``matmul_rs`` + ``ag_matmul`` pair on the MODELED cost scale — the seam
 credits ``min(fill_drain(rs), fill_drain(ag))``, the exposed-collective time
 the fusion eliminates, so a fused plan that does not win means the seam
@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import tune
 from repro.compat import shard_map
-from repro.core import BlockChannel, compile_overlap, compile_overlap_seq
+from repro.core import BlockChannel, compile_overlap
 from repro.tune import cost as tune_cost
 
 try:  # package import (python -m benchmarks.seam_bench / pytest)
@@ -75,7 +75,7 @@ def _measured_case(mesh, sig):
         out_specs=(P("model", None), P(None, "model")),
     )
 
-    fused = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    fused = compile_overlap(["matmul_rs", "ag_matmul"], channel=ch)
     rs = compile_overlap("matmul_rs", ch)
     ag = compile_overlap("ag_matmul", ch)
 

@@ -1,0 +1,153 @@
+"""Serving-engine bench + CI smoke (``--smoke`` -> ``BENCH_serve.json``).
+
+Drives the request-level continuous-batching engine end to end on the
+emulated mesh: heterogeneous prompts/budgets over a slot pool smaller than
+the request count, so admission, block decode, and eviction all exercise.
+Reports tokens/s and inter-token latency percentiles (informational on CPU —
+emulated wall time is not a perf signal, ROADMAP; the ``us`` leaf is
+tolerance-gated like every other smoke timing) and GATES the engine's
+no-per-token-round-trip contract:
+
+  * ``host_syncs == steps`` — exactly ONE device_get per step, however many
+    tokens the block decode emitted;
+  * ``step_traces == 1`` — static shapes: the jit'd step traces once, ever;
+  * every request finishes with exactly its ``max_new_tokens`` tokens
+    (greedy, no eos) and matches a second engine run token for token.
+
+Violations land in the ``ok`` health leaf and exit non-zero so CI fails
+loudly.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import reduce_config
+from repro.models import lm
+from repro.parallel.context import ParallelContext
+from repro.parallel.sharding import place
+from repro.serving import Request, ServeEngine
+
+try:  # package import (python -m benchmarks.serve_bench / pytest)
+    from benchmarks.common import mesh_tp, row
+except ImportError:  # plain script: the benchmarks/ dir is sys.path[0]
+    from common import mesh_tp, row
+
+WORLD = 4
+PROMPT_LENS = (5, 13, 9, 7)
+BUDGETS = (6, 10, 4, 8)
+
+
+def _build_engine(**over):
+    mesh = mesh_tp(WORLD)
+    pc = ParallelContext(mesh=mesh, mode="overlap")
+    cfg = reduce_config(get_config("smollm-360m"))
+    cfg = dataclasses.replace(cfg, vocab_size=128)
+    params = place(lm.init(jax.random.PRNGKey(0), cfg, pc, jnp.float32),
+                   mesh, lm.specs(cfg, pc))
+    kw = dict(max_len=64, n_slots=2, decode_block=8)
+    kw.update(over)
+    return ServeEngine(cfg, pc, params, **kw), cfg
+
+
+def _run(eng):
+    """Drain a heterogeneous request mix; returns (outputs, per-step stats)."""
+    rng = np.random.default_rng(0)
+    handles = [
+        eng.submit(Request(tokens=rng.integers(0, 128, size=ln).astype(np.int32),
+                           max_new_tokens=b))
+        for ln, b in zip(PROMPT_LENS, BUDGETS)
+    ]
+    durs, toks = [], []
+    while eng.scheduler.has_work:
+        t0 = time.perf_counter()
+        out = eng.step()  # blocks on its own single device_get
+        durs.append(time.perf_counter() - t0)
+        toks.append(sum(len(v) for v in out.values()))
+    outs = {h: np.asarray(eng.scheduler.states[h].generated, np.int32)
+            for h in handles}
+    return outs, durs, toks
+
+
+def smoke(out_path: str = "BENCH_serve.json") -> int:
+    failures = []
+    eng, _ = _build_engine()
+    outs, durs, toks = _run(eng)
+
+    steps, syncs = eng.stats["steps"], eng.stats["host_syncs"]
+    traces = eng.stats["step_traces"]
+    if syncs != steps:
+        failures.append(f"host_syncs {syncs} != steps {steps} — the step "
+                        "must sync the host exactly once")
+    if traces != 1:
+        failures.append(f"step_traces {traces} != 1 — shapes are static, the "
+                        "jit'd step may trace only once")
+    for h, budget in zip(sorted(outs), BUDGETS):
+        if len(outs[h]) != budget:
+            failures.append(f"request {h}: {len(outs[h])} tokens, wanted "
+                            f"exactly {budget}")
+
+    # determinism: a fresh engine must reproduce every greedy stream
+    eng2, _ = _build_engine()
+    outs2, _, _ = _run(eng2)
+    if not all(np.array_equal(outs[h], outs2[h]) for h in outs):
+        failures.append("greedy decode is not reproducible across engines")
+
+    total_tokens = int(sum(toks))
+    total_s = float(sum(durs))
+    # every token in a step shares that step's wall time
+    itl = np.concatenate([np.full(n, d / n) for d, n in zip(durs, toks) if n]
+                         or [np.zeros(1)])
+    results = {"smoke": {
+        "requests": len(BUDGETS),
+        "tokens": total_tokens,
+        "steps": steps,
+        "host_syncs_per_step": round(syncs / max(steps, 1), 3),
+        "step_traces": traces,
+        "tokens_per_s": round(total_tokens / max(total_s, 1e-9), 1),
+        "itl_p50_ms": round(float(np.percentile(itl, 50)) * 1e3, 3),
+        "itl_p99_ms": round(float(np.percentile(itl, 99)) * 1e3, 3),
+        "step": {"us": round(total_s / max(steps, 1) * 1e6, 1)},
+        "ok": not failures,
+    }}
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {total_tokens} tokens over {steps} steps, "
+          f"{len(failures)} failures")
+    row("serve/smoke/step", results["smoke"]["step"]["us"],
+        f"{results['smoke']['tokens_per_s']:.0f} tok/s")
+    for f_ in failures:
+        print(f"FAIL {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    print("# continuous-batching engine on the emulated mesh "
+          f"(world={WORLD}, slots=2)")
+    eng, _ = _build_engine()
+    _, durs, toks = _run(eng)
+    for i, (d, n) in enumerate(zip(durs, toks)):
+        row(f"serve/step{i}", d * 1e6, f"{n} tokens")
+    total = sum(toks)
+    row("serve/total", sum(durs) * 1e6,
+        f"{total / max(sum(durs), 1e-9):.0f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI guard: one host sync per step, one trace ever, exact token "
+        "counts, reproducible greedy streams; write BENCH_serve.json",
+    )
+    ap.add_argument("--out", default="BENCH_serve.json")
+    a = ap.parse_args()
+    sys.exit(smoke(a.out) if a.smoke else main())

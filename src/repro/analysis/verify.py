@@ -216,7 +216,8 @@ def verify_seq_space(
 
     One shared order per seam (mixed-order seams are legal — the composition
     invariant only involves the home/seed identities — but the shipped space
-    is what ``compile_overlap_seq`` emits: matching channels on both halves).
+    is what the ``compile_overlap`` seq form emits: matching channels on both
+    halves).
     """
     from repro.core.channels import ORDERS, BlockChannel, CommSpec
     from repro.core.plan import build_seq_plan

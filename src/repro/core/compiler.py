@@ -74,7 +74,7 @@ BACKENDS = ("xla", "pallas")
 # kinds with a fused-kernel lowering; the others map their communication to
 # the copy engine via host primitives (paper Fig. 5/6), i.e. backend="xla"
 PALLAS_KINDS = ("ag_matmul", "matmul_rs")
-# op sequences with a fused seam lowering (compile_overlap_seq)
+# op sequences with a fused seam lowering (compile_overlap list form)
 SEQ_KINDS = (("matmul_rs", "ag_matmul"),)
 
 
@@ -111,8 +111,8 @@ def _normalize_comp(comp) -> Union[None, str, CompSpec, Tuple[int, int, int]]:
 
 
 def compile_overlap(
-    kind: str,
-    channel: Union[BlockChannel, str],
+    kind,
+    channel: Union[BlockChannel, str, None] = None,
     *,
     comp=None,
     backend: str = "xla",
@@ -125,12 +125,32 @@ def compile_overlap(
 ) -> Callable:
     """Compile a tile program. See module docstring.
 
-    ``channel`` is either an explicit :class:`BlockChannel` or the string
-    ``"auto"``; ``comp`` is None (use the channel's CompSpec), ``"auto"``
+    ``kind`` is a single kind name, or a list/tuple of kinds (optionally
+    ``(kind, channel)`` pairs) naming a fused op-sequence seam — the only
+    supported sequence is ``["matmul_rs", "ag_matmul"]``, the shared-ring
+    layer seam.  ``channel`` is either an explicit :class:`BlockChannel` or
+    the string ``"auto"`` (seq form also accepts None for the default
+    channel); ``comp`` is None (use the channel's CompSpec), ``"auto"``
     (tune the compute half), or an explicit CompSpec / (tm, tn, tk) tuple;
     ``axis``/``mesh``/``tune_ranker`` only apply to auto resolution (a mesh
     widens the tuning-cache fingerprint to the full topology).
     """
+    if isinstance(kind, (list, tuple)):
+        if comp is not None or interpret is not None:
+            raise ValueError(
+                "compile_overlap: comp/interpret apply to single-kind programs "
+                "only; a seam sequence takes per-op (kind, channel) entries"
+            )
+        return _compile_seq(
+            kind,
+            channel=channel,
+            backend=backend,
+            overlapped=overlapped,
+            axis=axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            **kw,
+        )
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
     if backend not in BACKENDS:
@@ -268,7 +288,7 @@ def _warn_seam_fallback(reason: str, key) -> None:
         _WARNED_SEAMS.add(key)
         warnings.warn(
             SeamFallbackWarning(
-                f"compile_overlap_seq: seam is schedule-incompatible — {reason}; "
+                f"compile_overlap: seam is schedule-incompatible — {reason}; "
                 "degrading to the unfused matmul_rs + ag_matmul pair (numerically "
                 "identical, but the seam collective time is exposed)"
             ),
@@ -290,7 +310,7 @@ def _seq_unfused(ch_rs, ch_ag, *, overlapped: bool, **kw) -> Callable:
     return pair_fn
 
 
-def compile_overlap_seq(
+def _compile_seq(
     ops,
     *,
     channel: Union[BlockChannel, str, None] = None,
@@ -304,6 +324,10 @@ def compile_overlap_seq(
     **kw,
 ) -> Callable:
     """Compile a fused multi-op seam: op N's RS flow feeds op N+1's AG flow.
+
+    Reached through ``compile_overlap`` when ``kind`` is a list/tuple of op
+    kinds (the public surface); ``compile_overlap_seq`` is the deprecated
+    alias for the same path.
 
     ``ops`` is a sequence of kind names or ``(kind, channel)`` pairs; the only
     supported sequence is ``["matmul_rs", "ag_matmul"]`` — the layer seam
@@ -342,9 +366,9 @@ def compile_overlap_seq(
     kinds = tuple(kinds)
     if backend != "xla" or kinds not in SEQ_KINDS:
         raise NotImplementedError(
-            f"compile_overlap_seq: op sequence {kinds!r} is not supported on "
+            f"compile_overlap: op sequence {kinds!r} is not supported on "
             f"backend={backend!r} (supported: {SEQ_KINDS} on backend='xla'); "
-            "lower each op separately via compile_overlap"
+            "lower each op separately via single-kind compile_overlap calls"
         )
     if any(ch == "auto" for ch in chans):
         base = next((ch for ch in chans if isinstance(ch, BlockChannel)), tune_base)
@@ -388,6 +412,22 @@ def compile_overlap_seq(
     return seq_fn
 
 
+def compile_overlap_seq(ops, **kwargs) -> Callable:
+    """Deprecated alias: pass the op list to :func:`compile_overlap` instead.
+
+    ``compile_overlap_seq(ops, ...)`` == ``compile_overlap(ops, ...)`` — the
+    seam path folded into the main entry; this name only adds a
+    ``DeprecationWarning``.
+    """
+    warnings.warn(
+        "compile_overlap_seq is deprecated; pass the op list to compile_overlap "
+        "instead: compile_overlap(['matmul_rs', 'ag_matmul'], channel=...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _compile_seq(ops, **kwargs)
+
+
 def _auto_overlap_seq(
     *,
     axis: str,
@@ -425,7 +465,7 @@ def _auto_overlap_seq(
             **resolve_kw,
         )
         fn = (
-            compile_overlap_seq(
+            _compile_seq(
                 [("matmul_rs", ch_rs), ("ag_matmul", ch_ag)],
                 overlapped=overlapped, axis=axis, **kw,
             )

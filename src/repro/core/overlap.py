@@ -367,7 +367,7 @@ def matmul_rs_ag(
 
     Both halves must share the effective channel count (RS chunks the N
     columns, AG chunks the M/R rows); a mismatch raises ``ValueError`` —
-    ``compile_overlap_seq`` pre-checks and degrades loudly to the unfused
+    the ``compile_overlap`` seq form pre-checks and degrades loudly to the unfused
     pair instead of calling in.
     """
     channel = channel or BlockChannel(axis=axis)
@@ -385,7 +385,7 @@ def matmul_rs_ag(
         raise ValueError(
             f"matmul_rs_ag: seam channel counts diverge — RS extent {n_mid} "
             f"yields C={nch} but AG extent {m_loc} yields C={nch_ag}; use "
-            "compile_overlap_seq for the loud unfused fallback"
+            "compile_overlap(['matmul_rs', 'ag_matmul']) for the loud unfused fallback"
         )
     seq = build_seq_plan(("matmul_rs", "ag_matmul"), (channel, channel2), world, nch)
     rs_plan, ag_plan = seq.ops
@@ -469,6 +469,7 @@ def ring_attention(
     scale: Optional[float] = None,
     window: Optional[int] = None,
     channel: Optional[BlockChannel] = None,
+    kv_select: bool = False,
 ):
     """Overlapped sequence-parallel attention with online softmax.
 
@@ -489,15 +490,30 @@ def ring_attention(
 
     ``causal`` masks with *global* positions (rank-offset aware).
     ``window`` (sliding-window attention) masks keys outside the window.
+
+    ``kv_select=True`` is the per-KV-group GQA ring: the rotating tiles
+    carry ALL ``Hkv`` distinct KV head groups (every rank projects the full
+    deduped KV width on its sequence shard), and each rank's online softmax
+    consumes only the group its local query heads map to.  With
+    ``Hkv >= world`` rank r takes groups ``[r*Hkv/world, (r+1)*Hkv/world)``;
+    with ``Hkv < world`` each group is shared by ``world/Hkv`` consecutive
+    ranks.
     """
     channel = channel or BlockChannel(axis=axis)
     rank = lax.axis_index(axis)
     b, h, sq, d = q.shape
     hkv, s_loc = k.shape[1], k.shape[2]
-    rep = h // hkv
     scale = scale if scale is not None else d**-0.5
 
     plan = _plan_for("ag_attention", channel, axis, s_loc)
+    if kv_select:
+        kv_need = max(1, hkv // plan.world)
+        share = max(1, plan.world // hkv)  # ranks sharing one group
+        grp_start = (rank // share) * kv_need
+        rep = h // kv_need
+    else:
+        kv_need, grp_start = hkv, None
+        rep = h // hkv
     if sq == s_loc:
         q_off = rank * s_loc  # queries sharded like the KV: rank offset
     elif sq == plan.world * s_loc:
@@ -566,6 +582,9 @@ def ring_attention(
     def softmax_tile(ctx, kv, carry):
         kc, vc = kv
         k_pos = ctx.src * s_loc + ctx.channel * s_sub + jnp.arange(s_sub)
+        if kv_select and kv_need < hkv:
+            kc = lax.dynamic_slice_in_dim(kc, grp_start, kv_need, axis=1)
+            vc = lax.dynamic_slice_in_dim(vc, grp_start, kv_need, axis=1)
         kr = jnp.repeat(kc, rep, axis=1) if rep > 1 else kc
         vr = jnp.repeat(vc, rep, axis=1) if rep > 1 else vc
         if bq == sq and bk == s_sub:
@@ -605,12 +624,24 @@ def ag_attention_baseline(
     causal: bool = False,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    kv_select: bool = False,
 ):
     """Non-overlapping reference: AllGather full KV, then one dense attention."""
     rank = lax.axis_index(axis)
-    b, h, s_loc, d = q.shape
+    world = lax.psum(1, axis)
+    b, h, sq, d = q.shape
+    s_loc = k.shape[2]
     kg = lax.all_gather(k, axis, axis=2, tiled=True)
     vg = lax.all_gather(v, axis, axis=2, tiled=True)
+    hkv = kg.shape[1]
+    if kv_select and world > 1:
+        # per-KV-group GQA: keep only this rank's head group of the
+        # full-width gathered KV (mirrors ring_attention's kv_select)
+        kv_need = max(1, hkv // world)
+        share = max(1, world // hkv)
+        grp_start = (lax.axis_index(axis) // share) * kv_need
+        kg = lax.dynamic_slice_in_dim(kg, grp_start, kv_need, axis=1)
+        vg = lax.dynamic_slice_in_dim(vg, grp_start, kv_need, axis=1)
     rep = h // kg.shape[1]
     if rep > 1:
         kg = jnp.repeat(kg, rep, axis=1)
@@ -623,7 +654,9 @@ def ag_attention_baseline(
         preferred_element_type=jnp.float32,
     )
     s_glob = kg.shape[2]
-    q_pos = rank * s_loc + jnp.arange(s_loc)
+    # queries either sharded alongside the KV (rank offset) or pre-gathered
+    q_off = 0 if sq == s_glob else rank * s_loc
+    q_pos = q_off + jnp.arange(sq)
     k_pos = jnp.arange(s_glob)
     mask = None
     if causal:

@@ -1,8 +1,9 @@
-"""Serving driver: load (or init) a model and serve batched requests.
+"""Serving driver: load (or init) a model and serve continuous-batching
+requests through the request-level engine.
 
 Example (CPU dev run):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduce \\
-      --prompt-len 16 --new-tokens 16 --batch 4
+      --prompt-len 16 --new-tokens 16 --batch 4 --slots 2 --temperature 0.7
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ from repro.launch.train import reduce_config
 from repro.models import lm
 from repro.parallel.context import ParallelContext
 from repro.parallel.sharding import place
-from repro.serving import ServeEngine
+from repro.serving import Request, ServeEngine
 from repro.checkpoint import CheckpointManager
 
 
@@ -33,6 +34,17 @@ def main():
     ap.add_argument("--mode", default="overlap", choices=["overlap", "baseline"])
     ap.add_argument("--ckpt-dir")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = full vocab)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request early when this token is sampled")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="batch slots in the KV-cache pool; requests beyond "
+                         "this queue and admit as slots free up")
+    ap.add_argument("--decode-block", type=int, default=32,
+                    help="max tokens decoded on device per step (one host "
+                         "sync per step regardless)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -55,15 +67,25 @@ def main():
 
     engine = ServeEngine(cfg, pc, params,
                          max_len=args.prompt_len + args.new_tokens,
-                         temperature=args.temperature)
+                         temperature=args.temperature,
+                         n_slots=args.slots, decode_block=args.decode_block)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32)
+    handles = [
+        engine.submit(Request(tokens=row, max_new_tokens=args.new_tokens,
+                              temperature=args.temperature, top_k=args.top_k,
+                              eos_id=args.eos_id, seed=args.seed + i))
+        for i, row in enumerate(prompts)
+    ]
     t0 = time.time()
-    out = engine.generate(prompts, max_new_tokens=args.new_tokens)
+    outs = engine.drain(handles)
     dt = time.time() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
-    print("sample:", out[0, args.prompt_len:].tolist())
+    n_tok = sum(len(outs[h]) for h in handles)
+    st = engine.stats
+    print(f"generated {n_tok} tokens over {args.batch} requests in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s; {st['steps']} steps, "
+          f"{st['host_syncs']} host syncs, {st['step_traces']} trace)")
+    print("sample:", outs[handles[0]].tolist())
 
 
 if __name__ == "__main__":

@@ -260,29 +260,34 @@ class LayerDef:
         return attention.cache_specs(dp)
 
     def apply_decode(self, params, x, cache, cache_len, pc, cfg,
-                     shared_params=None):
+                     shared_params=None, q_valid=None):
         mixer_params = shared_params if self.shared else params["mixer"]
+        b, c = x.shape[0], x.shape[1]
+        lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+        nv = (jnp.full((b,), c, jnp.int32) if q_valid is None
+              else jnp.asarray(q_valid, jnp.int32))
         if self.kind == "mamba":
             full = mamba.specs(cfg, pc.tp, pc.dp_spec())
             sp = {k: pc.manual(v) for k, v in full.items()}
             cs = {k: pc.manual(v) for k, v in mamba.cache_specs(pc.dp_spec()).items()}
             x, cache = pc.smap(
-                lambda p_, x_, c_: mamba.apply_decode(p_, x_, c_, pc, cfg),
-                in_specs=(sp, P(None, None, None), cs),
+                lambda p_, x_, c_, n_: mamba.apply_decode_chunk(
+                    p_, x_, c_, pc, cfg, q_valid=n_),
+                in_specs=(sp, P(None, None, None), cs, P(None)),
                 out_specs=(P(None, None, None), cs),
-            )(pc.use_gather(mixer_params, full), x, cache)
+            )(pc.use_gather(mixer_params, full), x, cache, nv)
         else:
             full = attention.specs(cfg, pc.tp, pc.dp_spec())
             sp = {k: pc.manual(v) for k, v in full.items()}
             cs = {k: pc.manual(v) for k, v in
                   attention.cache_specs(pc.dp_spec()).items()}
             x, cache = pc.smap(
-                lambda p_, x_, c_, n_: attention.apply_decode(
-                    p_, x_, c_, n_, pc, cfg, window=self.window,
-                    rope_theta=self.theta),
-                in_specs=(sp, P(None, None, None), cs, P()),
+                lambda p_, x_, c_, l_, n_: attention.apply_decode(
+                    p_, x_, c_, l_, pc, cfg, window=self.window,
+                    rope_theta=self.theta, q_valid=n_),
+                in_specs=(sp, P(None, None, None), cs, P(None), P(None)),
                 out_specs=(P(None, None, None), cs),
-            )(pc.use_gather(mixer_params, full), x, cache, cache_len)
+            )(pc.use_gather(mixer_params, full), x, cache, lens, nv)
 
         if self.ffn_kind == "mlp":
             full = ffn.specs(cfg, pc.tp, pc.dp_spec())
@@ -673,10 +678,15 @@ def cache_specs(cfg, pc):
 
 
 def decode_step(params, caches, cfg, pc: ParallelContext, tokens, cache_len,
-                unroll: bool = False):
-    """One decode step. tokens: [B, 1] int32; cache_len: traced scalar.
+                unroll: bool = False, q_valid=None):
+    """One decode step advancing every slot by up to C tokens.
 
-    Returns (logits [B, 1, V], new_caches).
+    tokens: [B, C] int32 (C == 1 is plain decode; C > 1 a prefill chunk);
+    cache_len: traced scalar or per-slot [B] vector; ``q_valid`` (optional
+    [B] int) marks how many of the C rows are real per slot — rows past it
+    leave cache/state untouched and their logits are garbage.
+
+    Returns (logits [B, C, V], new_caches).
     """
     from repro.nn.layers import rms_norm
 
@@ -686,7 +696,8 @@ def decode_step(params, caches, cfg, pc: ParallelContext, tokens, cache_len,
 
     new_prefix = []
     for d, p, c in zip(prefix, params["prefix"], caches["prefix"]):
-        x, c = d.apply_decode(p, x, c, cache_len, pc, cfg, shared_params=shared)
+        x, c = d.apply_decode(p, x, c, cache_len, pc, cfg,
+                              shared_params=shared, q_valid=q_valid)
         new_prefix.append(c)
 
     new_scan = caches.get("scan")
@@ -696,7 +707,8 @@ def decode_step(params, caches, cfg, pc: ParallelContext, tokens, cache_len,
             new_caches = []
             for i, d in enumerate(unit):
                 h, c = d.apply_decode(unit_params[i], h, unit_caches[i],
-                                      cache_len, pc, cfg, shared_params=shared)
+                                      cache_len, pc, cfg, shared_params=shared,
+                                      q_valid=q_valid)
                 new_caches.append(c)
             return h, new_caches
 
@@ -715,7 +727,8 @@ def decode_step(params, caches, cfg, pc: ParallelContext, tokens, cache_len,
 
     new_suffix = []
     for d, p, c in zip(suffix, params["suffix"], caches["suffix"]):
-        x, c = d.apply_decode(p, x, c, cache_len, pc, cfg, shared_params=shared)
+        x, c = d.apply_decode(p, x, c, cache_len, pc, cfg,
+                              shared_params=shared, q_valid=q_valid)
         new_suffix.append(c)
 
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)

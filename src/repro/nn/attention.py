@@ -273,32 +273,57 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
     tile) per shape via repro.tune; results match :func:`apply_seq` up to fp
     reassociation.
 
-    Requires MQA (one padded KV head): the rotating tiles must be the SAME
-    kv head's rows on every rank, which the GQALayout replication gives
-    exactly when ``kv_pad == 1`` — with genuinely sharded KV heads each
-    rank's local projection is a different head, and a ring would mix them.
+    MQA (``kv_pad == 1``) rings the one shared head's local projection
+    directly.  GQA rings per KV group: every rank gathers the (narrow)
+    ``wkv`` columns once, dedupes the GQALayout's replicated copies, and
+    projects the FULL distinct-KV width on its sequence shard — the rotating
+    tiles then carry every group, and ``pc.ring_attention(kv_select=True)``
+    has each rank's online softmax consume only the group its local query
+    heads map to.  The extra wire per tile is ``kv_pad``-fold, still far
+    below the ``h``-wide AG of :func:`apply_seq`.
     """
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     lay = _lay(cfg, pc.tp)
-    if lay.kv_pad != 1:
-        raise ValueError(
-            "apply_seq_ring needs MQA (padded n_kv_heads == 1, so every rank "
-            f"holds the same KV head); got kv_pad={lay.kv_pad} — use apply_seq")
     hd = cfg.hd
     b, s_loc, _ = x.shape
     h = rms_norm(x, params["ln"], cfg.norm_eps)
 
     q = pc.ag_matmul(h, params["wq"])  # [B, S, h_loc*hd] gathered
-    kv = jnp.einsum("bsd,dn->bsn", h, params["wkv"])  # [B, s_loc, ...] local
     if "bq" in params:
         q = q + params["bq"]
-        kv = kv + params["bkv"]
+    if lay.kv_pad == 1:
+        kv = jnp.einsum("bsd,dn->bsn", h, params["wkv"])  # local shared head
+        if "bkv" in params:
+            kv = kv + params["bkv"]
+        kv = kv.reshape(b, s_loc, 2 * lay.kv_loc, hd)
+        k = kv[:, :, : lay.kv_loc]
+        v = kv[:, :, lay.kv_loc:]
+    else:
+        # per-KV-group ring: project all kv_pad distinct groups locally.
+        # Per-rank wkv columns pack [K heads (kv_loc*hd) || V heads], so the
+        # gather is rank-major: reshape, split k/v, then flatten the
+        # (rank, local-head) axes back into the global expanded head order.
+        wkv = pc.all_gather_seq(params["wkv"], 1)  # [D, tp * 2*kv_loc*hd]
+        wkv = wkv.reshape(cfg.d_model, pc.tp, 2, lay.kv_loc, hd)
+        wk = wkv[:, :, 0].reshape(cfg.d_model, lay.kv_store, hd)
+        wv = wkv[:, :, 1].reshape(cfg.d_model, lay.kv_store, hd)
+        if lay.rep > 1:
+            wk = wk[:, :: lay.rep]  # drop the replicated copies
+            wv = wv[:, :: lay.rep]
+        k = jnp.einsum("bsd,dhe->bshe", h, wk)  # [B, s_loc, kv_pad, hd]
+        v = jnp.einsum("bsd,dhe->bshe", h, wv)
+        if "bkv" in params:
+            bkv = pc.all_gather_seq(params["bkv"], 0)
+            bkv = bkv.reshape(pc.tp, 2, lay.kv_loc, hd)
+            bk = bkv[:, 0].reshape(lay.kv_store, hd)
+            bv = bkv[:, 1].reshape(lay.kv_store, hd)
+            if lay.rep > 1:
+                bk, bv = bk[:: lay.rep], bv[:: lay.rep]
+            k = k + bk
+            v = v + bv
     s_glob = q.shape[1]
     q = q.reshape(b, s_glob, lay.h_loc, hd)
-    kv = kv.reshape(b, s_loc, 2 * lay.kv_loc, hd)
-    k = kv[:, :, : lay.kv_loc]
-    v = kv[:, :, lay.kv_loc:]
 
     theta = rope_theta if rope_theta is not None else cfg.rope_theta
     q, _ = rope(q, q, jnp.arange(s_glob), theta)
@@ -308,7 +333,8 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
     k = k.transpose(0, 2, 1, 3)
     v = v.transpose(0, 2, 1, 3)
 
-    o = pc.ring_attention(q, k, v, causal=causal, window=window)
+    o = pc.ring_attention(q, k, v, causal=causal, window=window,
+                          kv_select=lay.kv_pad > 1)
     o_flat = o.transpose(0, 2, 1, 3).reshape(b, s_glob, lay.h_loc * hd)
     if next_proj is not None:
         glue, w_next = next_proj
@@ -411,55 +437,98 @@ def cache_specs(dp):
 
 
 def apply_decode(params, x, cache, cache_len, pc, cfg, *, window=None,
-                 rope_theta=None):
-    """Single-token decode body (inside manual region).
+                 rope_theta=None, q_valid=None):
+    """Chunked decode body (inside manual region).
 
-    x: [B, 1, D] replicated over model; cache k/v: [B, kv_loc, S_max, hd]
-    per-shard.  Returns (x_out, new_cache).
+    x: [B, C, D] replicated over model (C == 1 is plain decode; C > 1 is a
+    prefill chunk); cache k/v: [B, kv_loc, S_max, hd] per-shard.
+    ``cache_len`` is the number of tokens already in each slot's cache — a
+    scalar or a per-slot [B] vector (the continuous-batching engine runs
+    heterogeneous lengths).  ``q_valid`` ([B] int, optional) is how many of
+    the C chunk rows are real per slot: rows past it write nothing (the
+    scatter index goes out of bounds and is dropped) and their outputs are
+    garbage the caller ignores.  Returns (x_out, new_cache).
+
+    The chunk attends in two parts — the pre-existing cache rows, then the
+    causal in-chunk keys — so the chunk's own k/v never round-trip through a
+    ring slot another in-flight query still needs.  Requires C <= cache size
+    for ring (sliding-window) layers.
     """
     lay = _lay(cfg, pc.tp)
     hd = cfg.hd
-    b = x.shape[0]
+    b, c, _ = x.shape
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    nv = (jnp.full((b,), c, jnp.int32) if q_valid is None
+          else jnp.asarray(q_valid, jnp.int32))
     h = rms_norm(x, params["ln"], cfg.norm_eps)
     w = jnp.concatenate([params["wq"], params["wkv"]], axis=1)
     qkv = jnp.einsum("bsd,dn->bsn", h, w)
     if "bq" in params:
         qkv = qkv + jnp.concatenate([params["bq"], params["bkv"]])
-    qkv = qkv.reshape(b, 1, lay.h_loc + 2 * lay.kv_loc, hd)
+    qkv = qkv.reshape(b, c, lay.h_loc + 2 * lay.kv_loc, hd)
     q = qkv[:, :, : lay.h_loc]
     k = qkv[:, :, lay.h_loc: lay.h_loc + lay.kv_loc]
     v = qkv[:, :, lay.h_loc + lay.kv_loc:]
 
-    pos = jnp.full((1, 1), cache_len)
+    pos = lens[:, None] + jnp.arange(c)[None, :]  # [B, C] global positions
     theta = rope_theta if rope_theta is not None else cfg.rope_theta
     q, k = rope(q, k, pos, theta)
 
     cache_size = cache["k"].shape[2]
     ring = window is not None and cache_size <= window
-    write_pos = jnp.remainder(cache_len, cache_size) if ring else cache_len
-    ck = lax.dynamic_update_slice(cache["k"], k.transpose(0, 2, 1, 3),
-                                  (0, 0, write_pos, 0))
-    cv = lax.dynamic_update_slice(cache["v"], v.transpose(0, 2, 1, 3),
-                                  (0, 0, write_pos, 0))
+    if ring and c > cache_size:
+        raise ValueError(
+            f"decode chunk C={c} exceeds ring cache size {cache_size}; "
+            "chunked prefill must keep chunks within the sliding window")
+    # per-(slot, row) scatter: invalid rows target slot ``cache_size``,
+    # which is out of bounds and dropped by mode="drop"
+    slots = jnp.remainder(pos, cache_size) if ring else pos
+    slots = jnp.where(jnp.arange(c)[None, :] < nv[:, None], slots, cache_size)
 
-    qh = q.transpose(0, 2, 1, 3)  # [b, h_loc, 1, hd]
+    def _write(buf, vals, idx):
+        # buf [kv_loc, L, hd], vals [kv_loc, C, hd], idx [C]
+        return buf.at[:, idx].set(vals, mode="drop")
+
+    ck = jax.vmap(_write)(cache["k"], k.transpose(0, 2, 1, 3), slots)
+    cv = jax.vmap(_write)(cache["v"], v.transpose(0, 2, 1, 3), slots)
+
+    qh = q.transpose(0, 2, 1, 3)  # [b, h_loc, C, hd]
     rep = lay.h_loc // lay.kv_loc
-    kk = jnp.repeat(ck, rep, axis=1) if rep > 1 else ck
-    vv = jnp.repeat(cv, rep, axis=1) if rep > 1 else cv
-    s = jnp.einsum("bhqd,bhkd->bhqk", (qh * hd ** -0.5).astype(jnp.float32),
-                   kk.astype(jnp.float32))
-    j = jnp.arange(s.shape[-1])
+    kk = jnp.repeat(cache["k"], rep, axis=1) if rep > 1 else cache["k"]
+    vv = jnp.repeat(cache["v"], rep, axis=1) if rep > 1 else cache["v"]
+    kc = jnp.repeat(k, rep, axis=2) if rep > 1 else k  # [b, C, h_loc, hd]
+    vc = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    qf = (qh * hd ** -0.5).astype(jnp.float32)
+    # part 1: the pre-existing cache rows (the chunk is not in them yet)
+    s1 = jnp.einsum("bhqd,bhkd->bhqk", qf, kk.astype(jnp.float32))
+    j = jnp.arange(cache_size)
     if ring:
-        # slot j holds position p_j = cache_len - ((cache_len - j) mod size)
-        p_j = cache_len - jnp.remainder(cache_len - j, cache_size)
-        mask = (p_j >= 0) & (p_j <= cache_len) & ((cache_len - p_j) < window)
+        # slot j last held position p_j = last - ((last - j) mod size)
+        last = lens - 1
+        p_j = last[:, None] - jnp.remainder(last[:, None] - j[None, :],
+                                            cache_size)  # [B, L]
+        m1 = (p_j >= 0)[:, None, :] & ((pos[:, :, None] - p_j[:, None, :])
+                                       < window)  # [B, C, L]
     else:
-        mask = j <= cache_len
+        m1 = jnp.broadcast_to((j[None, :] < lens[:, None])[:, None, :],
+                              (b, c, cache_size))
         if window is not None:
-            mask = mask & ((cache_len - j) < window)
-    s = jnp.where(mask[None, None, None], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(x.dtype)
-    o = o.transpose(0, 2, 1, 3).reshape(b, 1, lay.h_loc * hd)
+            m1 = m1 & ((pos[:, :, None] - j[None, None, :]) < window)
+    s1 = jnp.where(m1[:, None], s1, -1e30)
+    # part 2: causal in-chunk keys (row i attends rows <= i, valid only)
+    s2 = jnp.einsum("bhqd,bkhd->bhqk", qf, kc.astype(jnp.float32))
+    qi = jnp.arange(c)
+    m2 = (qi[None, :, None] >= qi[None, None, :]) & \
+        (qi[None, None, :] < nv[:, None, None])  # [B, C, C]
+    if window is not None:
+        m2 = m2 & ((qi[None, :, None] - qi[None, None, :]) < window)
+    s2 = jnp.where(m2[:, None], s2, -1e30)
+
+    p = jax.nn.softmax(jnp.concatenate([s1, s2], axis=-1), axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p[..., :cache_size],
+                   vv.astype(jnp.float32))
+    o = o + jnp.einsum("bhqk,bkhd->bhqd", p[..., cache_size:],
+                       vc.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, c, lay.h_loc * hd)
     out = pc.psum(jnp.einsum("bsn,nd->bsd", o, params["wo"]))
     return x + out, {"k": ck, "v": cv}

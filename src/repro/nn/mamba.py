@@ -18,7 +18,8 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.mamba_ssd import ssd_chunked
 from repro.nn.layers import rms_norm, he_init
 
-__all__ = ["init", "specs", "apply_seq", "apply_decode", "init_cache", "cache_specs"]
+__all__ = ["init", "specs", "apply_seq", "apply_decode", "apply_decode_chunk",
+           "init_cache", "cache_specs"]
 
 
 def _dims(cfg):
@@ -181,3 +182,30 @@ def apply_decode(params, x, cache, pc, cfg):
 
     out = pc.psum(jnp.einsum("bn,nd->bd", y, params["w_out"]))
     return x + out[:, None, :], {"ssm": new_ssm, "conv": new_conv}
+
+
+def apply_decode_chunk(params, x, cache, pc, cfg, q_valid=None):
+    """Chunked decode: scan the single-token recurrence over the C axis.
+
+    x: [B, C, D] replicated over model.  ``q_valid`` ([B] int, optional)
+    marks how many of the C rows are real per slot — masked steps leave the
+    SSM/conv state untouched (unlike attention, a stale recurrent state
+    would silently poison every later token, so the mask is load-bearing).
+    """
+    b, c, _ = x.shape
+    if c == 1 and q_valid is None:
+        return apply_decode(params, x, cache, pc, cfg)
+    valid = (jnp.arange(c)[:, None] < jnp.full((b,), c, jnp.int32)[None, :]
+             if q_valid is None
+             else jnp.arange(c)[:, None] < jnp.asarray(q_valid, jnp.int32))
+
+    def step(state, inp):
+        xt, ok = inp  # xt [B, D], ok [B] bool
+        y, new = apply_decode(params, xt[:, None], state, pc, cfg)
+        new = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(ok.reshape((b,) + (1,) * (n.ndim - 1)),
+                                   n, o), new, state)
+        return new, y[:, 0]
+
+    cache, ys = jax.lax.scan(step, cache, (x.transpose(1, 0, 2), valid))
+    return ys.transpose(1, 0, 2), cache

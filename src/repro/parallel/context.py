@@ -27,7 +27,7 @@ Layers call ``pc.ag_matmul`` / ``pc.matmul_rs`` / ``pc.psum`` on *per-shard*
 values while inside a manual region entered via ``pc.smap``.  With
 ``fuse_seams=True`` the model stack additionally fuses each layer's
 down-projection RS into the next consumer's AG over ONE shared ring pass
-(``pc.matmul_rs_ag`` -> ``compile_overlap_seq``), eliminating the exposed
+(``pc.matmul_rs_ag`` -> ``compile_overlap`` seq form), eliminating the exposed
 collective at the inter-op seam.
 """
 from __future__ import annotations
@@ -42,7 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.channels import BlockChannel
-from repro.core.compiler import compile_overlap, compile_overlap_seq
+from repro.core.compiler import compile_overlap
 
 __all__ = ["ParallelContext", "manual_only"]
 
@@ -80,7 +80,7 @@ class ParallelContext:
                                             # per (kind, shape) via repro.tune
     tune_ranker: Optional[str] = None  # "measure" | "model" | "auto"/None
     fuse_seams: bool = False  # fuse layer RS->AG seams into one ring
-                                            # pass (compile_overlap_seq)
+                                            # pass (compile_overlap seq form)
 
     def __post_init__(self):
         if self.channel is None:
@@ -174,12 +174,12 @@ class ParallelContext:
         if self.tune and self.mode == "overlap":
             from repro.tune import JOINT_SPACE
 
-            fn = compile_overlap_seq(
+            fn = compile_overlap(
                 ops, channel="auto", axis=self.axis, mesh=self.mesh,
                 tune_ranker=self.tune_ranker, tune_base=self.channel,
                 tune_space=JOINT_SPACE)
         else:
-            fn = compile_overlap_seq(
+            fn = compile_overlap(
                 ops, channel=self.channel,
                 overlapped=(self.mode == "overlap"))
         return fn(x, w1, w2, residual=residual, glue=glue, **kw)

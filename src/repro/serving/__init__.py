@@ -1,3 +1,5 @@
+from repro.serving.cache import SlotPool
 from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "Request", "Scheduler", "SlotPool"]

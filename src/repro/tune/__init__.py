@@ -332,7 +332,7 @@ def resolve_seq(
     ranker: Optional[str] = None,
     space: Space = DEFAULT_SPACE,
 ) -> Tuple[bool, BlockChannel, BlockChannel]:
-    """Seam-aware resolution for ``compile_overlap_seq(..., channel="auto")``.
+    """Seam-aware resolution for ``compile_overlap([...], channel="auto")``.
 
     Returns ``(fused, ch_rs, ch_ag)``: whether to run the fused seam, and the
     channel for each half.  The fused plan is priced over the shared-channel

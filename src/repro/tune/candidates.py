@@ -56,7 +56,7 @@ __all__ = [
 
 TUNABLE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
 
-# the fused RS -> AG layer seam (compile_overlap_seq); tuned through its own
+# the fused RS -> AG layer seam (compile_overlap seq form); tuned through its
 # shared-channel enumerator + seam-aware cost, not the single-op paths above
 SEQ_KIND = "seq_rs_ag"
 
@@ -294,26 +294,39 @@ def enumerate_candidates(
     return tuple(out)
 
 
-def signature(kind: str, shapes: Sequence[Tuple[int, ...]]) -> Tuple[int, ...]:
+def signature(kind: str, shapes: Sequence[Tuple[int, ...]],
+              decode: bool = False) -> Tuple[int, ...]:
     """Canonical shape signature from *per-shard* operand shapes.
 
     Takes the positional operand shapes exactly as the ``compile_overlap``
     ops receive them inside the manual region, and keeps only what changes
     the tuning landscape (leading batch dims collapse into one).
+
+    ``decode=True`` marks a GEMM-kind signature as a *decode shape*: the
+    lead element is negated, so tiny-M decode GEMMs key their own cache
+    entries (and resolve their own joint winners) instead of aliasing the
+    prefill entry for the same dims.  Cost-model consumers read
+    ``abs(sig[0])``; the tile lattice never reads the lead at all.
     """
+    if decode and kind not in GEMM_TILE_KINDS:
+        raise ValueError(
+            f"decode signatures are defined for the GEMM kinds "
+            f"{GEMM_TILE_KINDS}, not {kind!r}")
+
+    def _lead(x):
+        lead = math.prod(x[:-2]) if len(x) > 2 else 1
+        return -lead if decode else lead
+
     if kind == SEQ_KIND:
         x, w1, w2 = shapes[0], shapes[1], shapes[2]
-        lead = math.prod(x[:-2]) if len(x) > 2 else 1
         # (lead, m_glob, k_loc, n_mid, n2_loc)
-        return (lead, x[-2], x[-1], w1[-1], w2[-1])
+        return (_lead(x), x[-2], x[-1], w1[-1], w2[-1])
     if kind == "ag_matmul":
         x, w = shapes[0], shapes[1]
-        lead = math.prod(x[:-2]) if len(x) > 2 else 1
-        return (lead, x[-2], x[-1], w[-1])  # (lead, m_loc, k, n_loc)
+        return (_lead(x), x[-2], x[-1], w[-1])  # (lead, m_loc, k, n_loc)
     if kind == "matmul_rs":
         x, w = shapes[0], shapes[1]
-        lead = math.prod(x[:-2]) if len(x) > 2 else 1
-        return (lead, x[-2], x[-1], w[-1])  # (lead, m_glob, k_loc, n)
+        return (_lead(x), x[-2], x[-1], w[-1])  # (lead, m_glob, k_loc, n)
     if kind == "ag_attention":
         q, k = shapes[0], shapes[1]
         # s_loc comes from K: the KV shard is the ring extent — queries may
@@ -347,7 +360,8 @@ def enumerate_seq_candidates(
     The seam handoff is per-channel, so only requests whose two chunked
     extents (RS: the n_mid columns, AG: the m_glob / world rows) clamp to the
     SAME effective count survive — anything else is what
-    ``compile_overlap_seq`` degrades to the unfused pair for.  Each surviving
+    the ``compile_overlap`` seq form degrades to the unfused pair for.  Each
+    surviving
     (order, C) point is statically verified as a seam
     (``analysis.check_seq_candidate``); compute tiles are pruned against the
     RS half's per-step GEMM (the dominant contraction at the seam).

@@ -112,10 +112,12 @@ def step_terms(
     fb = _flow_bytes(accum_dtype)
     if kind == "ag_matmul":
         lead, m_loc, k, n_loc = sig
+        lead = abs(lead)  # decode signatures carry a negated lead marker
         wire = lead * m_loc * k * _TILE_BYTES
         flops = 2.0 * lead * m_loc * k * n_loc
     elif kind == "matmul_rs":
         lead, m_glob, k_loc, n = sig
+        lead = abs(lead)
         m_loc = max(1, m_glob // world)
         wire = lead * m_loc * n * fb  # the accumulator is the flow
         flops = 2.0 * lead * m_loc * k_loc * n
@@ -198,7 +200,7 @@ def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate)
 
     if kind in GEMM_TILE_KINDS:
         eff = (min(tm, mxu) / mxu) * (min(tn, mxu) / mxu)
-        lead = max(1, int(sig[0]))
+        lead = max(1, abs(int(sig[0])))  # decode sigs negate the lead
         # all C channels run their blocks each step
         blocks_mn = (m // tm) * (n // tn) * nch * lead
         n_tiles = blocks_mn * (k // tk)

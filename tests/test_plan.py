@@ -314,7 +314,7 @@ def test_unknown_kind_and_backend_raise():
         compile_overlap("ag_matmul", ch, backend="cuda")
 
 
-# ---- fused RS->AG seam (compile_overlap_seq) --------------------------------
+# ---- fused RS->AG seam (compile_overlap list form) --------------------------
 
 def _seam_ref(x, w1, w2, residual, glue):
     """Unfused global reference for the matmul_rs -> ag_matmul pair."""
@@ -332,14 +332,14 @@ _SEAM_SPECS = dict(
 
 @pytest.mark.parametrize("order,channels,accum", SWEEP)
 def test_parity_seam_fused_vs_unfused_pair(mesh4, order, channels, accum):
-    """compile_overlap_seq == the unfused two-op reference, full sweep."""
+    """compile_overlap(seq) == the unfused two-op reference, full sweep."""
     m, k, n_mid, n2 = R * 8, R * 8, 16, 2 * R * 4
     x = jax.random.normal(KEY, (m, k), jnp.float32)
     w1 = jax.random.normal(jax.random.PRNGKey(11), (k, n_mid), jnp.float32)
     w2 = jax.random.normal(jax.random.PRNGKey(12), (n_mid, n2), jnp.float32)
     res = jax.random.normal(jax.random.PRNGKey(13), (m, n_mid), jnp.float32)
     ch = _chan(order, channels, accum)
-    fn = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    fn = compile_overlap(["matmul_rs", "ag_matmul"], channel=ch)
     sm = shard_map(
         lambda x_, w1_, w2_, r_: fn(x_, w1_, w2_, residual=r_, glue=_SEAM_GLUE),
         mesh4, **_SEAM_SPECS)
@@ -360,7 +360,7 @@ def test_seam_incompatible_channels_fall_back_loudly(mesh4):
     w2 = jax.random.normal(jax.random.PRNGKey(15), (n_mid, n2), jnp.float32)
     res = jax.random.normal(jax.random.PRNGKey(16), (m, n_mid), jnp.float32)
     ch = _chan("ring", 3, "float32")
-    fn = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    fn = compile_overlap(["matmul_rs", "ag_matmul"], channel=ch)
     sm = shard_map(
         lambda x_, w1_, w2_, r_: fn(x_, w1_, w2_, residual=r_, glue=_SEAM_GLUE),
         mesh4, **_SEAM_SPECS)
@@ -377,9 +377,34 @@ def test_seam_incompatible_channels_fall_back_loudly(mesh4):
 
 def test_seam_unsupported_sequences_raise_structured():
     with pytest.raises(NotImplementedError, match="ag_matmul', 'matmul_rs"):
-        compile_overlap_seq(["ag_matmul", "matmul_rs"])  # AG->RS is not a seam
+        compile_overlap(["ag_matmul", "matmul_rs"])  # AG->RS is not a seam
     with pytest.raises(NotImplementedError, match="backend='pallas'"):
-        compile_overlap_seq(["matmul_rs", "ag_matmul"], backend="pallas")
+        compile_overlap(["matmul_rs", "ag_matmul"], backend="pallas")
+    with pytest.raises(ValueError, match="single-kind"):
+        compile_overlap(["matmul_rs", "ag_matmul"], comp=(8, 8, 8))
+
+
+def test_compile_overlap_seq_deprecated_alias(mesh4):
+    """The old seq entry still works but warns once; results match the folded
+    compile_overlap list form exactly (satellite)."""
+    m, k, n_mid, n2 = R * 4, R * 4, 8, R * 4
+    x = jax.random.normal(KEY, (m, k), jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(21), (k, n_mid), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(22), (n_mid, n2), jnp.float32)
+    res = jax.random.normal(jax.random.PRNGKey(23), (m, n_mid), jnp.float32)
+    ch = _chan("ring", 2, "float32")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = compile_overlap_seq(["matmul_rs", "ag_matmul"], channel=ch)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "compile_overlap" in str(dep[0].message)
+    new = compile_overlap(["matmul_rs", "ag_matmul"], channel=ch)
+    run = lambda fn: jax.jit(shard_map(  # noqa: E731
+        lambda x_, w1_, w2_, r_: fn(x_, w1_, w2_, residual=r_, glue=_SEAM_GLUE),
+        mesh4, **_SEAM_SPECS))(x, w1, w2, res)
+    (y_old, g_old), (y_new, g_new) = run(old), run(new)
+    allclose(y_old, y_new, rtol=0, atol=0)
+    allclose(g_old, g_new, rtol=0, atol=0)
 
 
 @pytest.mark.parametrize("table,op_index", [("rs_seg", 0), ("src", 1)])

@@ -111,6 +111,42 @@ def test_signature_canonicalization():
     assert sig == (16, 8, 2, 4, 16)
 
 
+def test_decode_signature_keys_separately():
+    """decode=True negates the lead ONLY — same dims, disjoint cache entries
+    for every tiny-M decode shape (serving-engine satellite)."""
+    from repro.tune import _entry_key
+
+    shapes = [(4, 1, 512), (512, 512)]
+    sig_p = tune.signature("ag_matmul", shapes)
+    sig_d = tune.signature("ag_matmul", shapes, decode=True)
+    assert sig_d == (-sig_p[0],) + sig_p[1:]
+    keys = set()
+    for m in range(1, 9):  # M = 1..8 decode slots, each its own corner
+        s = [(m, 1, 512), (512, 512)]
+        for decode in (False, True):
+            sig = tune.signature("ag_matmul", s, decode=decode)
+            keys.add(_entry_key("ag_matmul", "model", 4, sig, tune.JOINT_SPACE))
+    assert len(keys) == 16  # 8 decode + 8 prefill, no aliasing
+    # non-GEMM kinds have no decode corner — refuse loudly
+    with pytest.raises(ValueError, match="decode signatures"):
+        tune.signature("ag_attention", [(1, 4, 16, 8), (1, 2, 16, 8)], decode=True)
+
+
+def test_decode_winner_differs_from_prefill(mesh4):
+    """The decode corner (n_slots rows of ONE token) must resolve a different
+    joint winner than the prefill shape sharing its K/N dims — on the
+    analytic ranker, no device timing (serving-engine satellite)."""
+    for kind, pre_sig, dec_sig in [
+        ("ag_matmul", (1, 1024, 512, 512), (-8, 1, 512, 512)),
+        ("matmul_rs", (1, 1024, 128, 512), (-8, 1, 128, 512)),
+    ]:
+        pre = tune.autotune(kind, signature=pre_sig, mesh=mesh4, space=tune.JOINT_SPACE)
+        dec = tune.autotune(kind, signature=dec_sig, mesh=mesh4, space=tune.JOINT_SPACE)
+        assert dec.channel.comp.tile[0] == 1  # one-token tiles for decode
+        assert (pre.channel.comp.tile != dec.channel.comp.tile
+                or pre.channel.num_channels != dec.channel.num_channels), kind
+
+
 # ---- joint space: compute-tile lattice (ISSUE 4) ----------------------------
 
 
@@ -644,7 +680,12 @@ def test_tiled_moe_parity_xla(mesh4):
     np.testing.assert_allclose(got, ref, **tol)
 
 
-def test_apply_seq_ring_matches_apply_seq(mesh4):
+@pytest.mark.parametrize("n_kv", [1, 2, 4, 8])
+def test_apply_seq_ring_matches_apply_seq(mesh4, n_kv):
+    # n_kv sweeps the GQALayout regimes on tp=4: MQA (kv_pad=1, the original
+    # shared-head ring), kv < tp (kv_pad=2, rep=2: ranks share a group),
+    # kv == tp (one distinct group per rank) and kv > tp (kv_loc=2 groups
+    # per rank) — the per-KV-group ring must match apply_seq on all of them
     from repro.configs.base import ArchConfig
     from repro.nn import attention as nn_attention
     from repro.parallel.context import ParallelContext
@@ -655,7 +696,7 @@ def test_apply_seq_ring_matches_apply_seq(mesh4):
         n_layers=1,
         d_model=32,
         n_heads=8,
-        n_kv_heads=1,  # MQA: the ring form needs every rank on the same KV head
+        n_kv_heads=n_kv,
         d_ff=64,
         vocab_size=64,
     )
@@ -674,11 +715,6 @@ def test_apply_seq_ring_matches_apply_seq(mesh4):
     ring = run(nn_attention.apply_seq_ring)
     seq = run(nn_attention.apply_seq)
     np.testing.assert_allclose(ring, seq, atol=2e-4, rtol=2e-3)
-
-    # sharded KV heads would make the ring mix different heads' tiles: loud
-    gqa = dataclasses.replace(cfg, n_kv_heads=4)
-    with pytest.raises(ValueError, match="MQA"):
-        nn_attention.apply_seq_ring(params, x, pc, gqa)
 
 
 def test_auto_keeps_unsupported_backend_loud():
