@@ -1,0 +1,212 @@
+"""Expert-parallel MoE a2a bench + CI smoke (``--smoke`` -> ``BENCH_moe.json``).
+
+The EP overlap claim made gateable: for every MoE shape the fused
+``compile_overlap(["a2a_dispatch", "combine_rs"])`` program must beat the
+split dispatch + combine pair on the MODELED cost scale — the fusion credits
+``min(fill_drain(dispatch), fill_drain(combine))``, the exposed-exchange time
+the shared pipeline hides under the grouped GEMMs, so a fused plan that does
+not win means the a2a costing (or the candidate enumeration behind
+``channel="auto"``) broke.
+
+``--smoke`` additionally:
+
+  * runs ``tune.resolve_a2a`` end-to-end on the smallest shape and asserts
+    it verdicts FUSED with one shared channel for both halves;
+  * sweeps the verifier over the a2a pair's candidate space (orders x worlds
+    {2,3,4,8} x channels) and records the proved plan count — zero failures
+    or the smoke fails;
+  * measures overlapped vs. baseline (bulk AG + GroupGEMM + RS) wall time for
+    the smallest shape on a 4-rank emulated mesh (informational on CPU —
+    emulated wall time is not a perf signal, ROADMAP) and checks numerical
+    parity between the two paths.
+
+Modeled costs land under ungated ``*_modeled_us`` leaves; the per-shape
+``ok`` health leaf (fused wins modeled) and ``considered`` (candidate count)
+gate exactly via benchmarks/compare.py.  Any violation exits non-zero so CI
+fails loudly.
+"""
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import tune
+from repro.compat import shard_map
+from repro.core import BlockChannel, compile_overlap
+from repro.core.moe_overlap import moe_router
+from repro.tune import cost as tune_cost
+
+try:  # package import (python -m benchmarks.moe_bench / pytest)
+    from benchmarks.common import mesh_tp, row, time_fn
+except ImportError:  # plain script: the benchmarks/ dir is sys.path[0]
+    from common import mesh_tp, row, time_fn
+
+WORLD = 4
+
+# MoE a2a signatures (m_loc, d_model, top_k, e_loc, d_expert), per shard at
+# world=4, paper-class shapes / common.SCALE: deepseek-moe-16b routes top-6 of
+# 64 experts at d=2048/f=1408; granite-3b-a800m top-8 of 40 at d=1536/f=512
+MOE_SHAPES = {
+    "small": (32, 16, 2, 2, 8),
+    "deepseek-16b": (512, 256, 6, 16, 176),
+    "granite-3b": (512, 192, 8, 10, 64),
+}
+
+
+def _best(sig, *, fused):
+    """(cost_us, candidate, considered) of the cheapest shared-channel pair."""
+    cands = tune.enumerate_a2a_candidates(sig=sig, world=WORLD)
+    if not cands:
+        raise ValueError(f"no a2a candidates for sig={sig}")
+    best = min(cands, key=lambda c: tune_cost.predict_a2a_cost(sig, WORLD, c, fused=fused))
+    return (tune_cost.predict_a2a_cost(sig, WORLD, best, fused=fused) * 1e6,
+            best, len(cands))
+
+
+def _measured_case(mesh, sig):
+    """Jitted overlapped + baseline EP MoE callables over global operands."""
+    m_loc, d, k_top, e_loc, f = sig
+    e = e_loc * WORLD
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (WORLD * m_loc, d), jnp.float32) * 0.5
+    wr = jax.random.normal(jax.random.PRNGKey(1), (d, e), jnp.float32)
+    wgu = jax.random.normal(jax.random.PRNGKey(2), (e, d, 2 * f), jnp.float32) * 0.1
+    wdn = jax.random.normal(jax.random.PRNGKey(3), (e, f, d), jnp.float32) * 0.1
+    ch = BlockChannel(axis="model", num_channels=2)
+    specs = dict(
+        in_specs=(P("model", None), P("model", None, None), P("model", None, None)),
+        out_specs=P("model", None),
+    )
+
+    def body(fn):
+        def f_(xs, wgu_, wdn_):
+            ids, wts, _ = moe_router(xs, wr, num_experts=e, top_k=k_top)
+            return fn(xs, ids, wts, wgu_, wdn_)
+        return jax.jit(shard_map(f_, mesh, **specs))
+
+    o_fn = body(compile_overlap(["a2a_dispatch", "combine_rs"], channel=ch,
+                                capacity_factor=2.0))
+    b_fn = body(compile_overlap(["a2a_dispatch", "combine_rs"], channel=ch,
+                                overlapped=False, capacity_factor=2.0))
+    return o_fn, b_fn, (x, wgu, wdn)
+
+
+def smoke(out_path: str = "BENCH_moe.json") -> int:
+    results, failures = {"shapes": {}}, []
+
+    for name, sig in MOE_SHAPES.items():
+        entry = {"signature": list(sig)}
+        try:
+            fused_us, cand, considered = _best(sig, fused=True)
+            unfused_us, _, _ = _best(sig, fused=False)
+            saving_us = tune_cost.a2a_saving(sig, WORLD, cand) * 1e6
+            ok = fused_us < unfused_us
+            if not ok:
+                failures.append(
+                    f"{name}: fused modeled cost {fused_us:.1f}us does not beat "
+                    f"the split pair {unfused_us:.1f}us — the a2a overlap credit is dead"
+                )
+            entry.update(
+                winner=cand.label(),
+                considered=considered,
+                fused_modeled_us=round(fused_us, 3),
+                unfused_modeled_us=round(unfused_us, 3),
+                modeled_saving_us=round(saving_us, 3),
+                ok=ok,
+            )
+            row(f"moe/{name}/modeled/{cand.label()}", fused_us,
+                f"unfused {unfused_us:.0f}us")
+        except Exception as exc:  # loud: any a2a-costing error fails CI
+            failures.append(f"{name}: {type(exc).__name__}: {exc}")
+            entry["error"] = str(exc)
+        results["shapes"][name] = entry
+
+    # ---- the auto path verdicts FUSED with one shared channel --------------
+    try:
+        fused, ch_d, ch_c = tune.resolve_a2a(sig=MOE_SHAPES["small"], world=WORLD)
+        shared = (ch_d.num_channels == ch_c.num_channels
+                  and ch_d.comm.order == ch_c.comm.order)
+        if not fused:
+            failures.append("resolve_a2a verdicted UNFUSED on an EP MoE shape")
+        if not shared:
+            failures.append("resolve_a2a returned mismatched dispatch/combine channels")
+        results["resolve"] = {"fused": bool(fused), "ok": bool(fused and shared),
+                              "channels": [ch_d.num_channels, ch_c.num_channels]}
+    except Exception as exc:
+        failures.append(f"resolve: {type(exc).__name__}: {exc}")
+        results["resolve"] = {"error": str(exc), "ok": False}
+
+    # ---- the verifier proves the whole a2a candidate space -----------------
+    try:
+        from repro.analysis.verify import verify_seq_space
+
+        plans = checks = 0
+        for rep in verify_seq_space(kinds=("a2a_dispatch", "combine_rs")):
+            plans += 1
+            checks += len(rep.passes)
+        ok = plans > 0
+        if not ok:
+            failures.append("verify: empty a2a plan space")
+        results["verify"] = {"plans": plans, "passes": checks, "ok": ok}
+    except Exception as exc:  # loud: a verifier rejection IS the failure
+        failures.append(f"verify: {type(exc).__name__}: {exc}")
+        results["verify"] = {"error": str(exc), "ok": False}
+
+    # ---- smoke-measured overlapped vs baseline + parity (emulated mesh) ----
+    try:
+        mesh = mesh_tp(WORLD)
+        o_fn, b_fn, args = _measured_case(mesh, MOE_SHAPES["small"])
+        yo = o_fn(*args)
+        yb = b_fn(*args)
+        err = float(jnp.max(jnp.abs(yo - yb)))
+        parity_ok = err < 1e-3
+        if not parity_ok:
+            failures.append(f"measured: overlapped vs baseline parity error {err:.3e}")
+        overlapped_us = time_fn(o_fn, *args)
+        baseline_us = time_fn(b_fn, *args)
+        results["measured"] = {
+            "overlapped": {"us": round(overlapped_us, 1)},
+            "baseline": {"us": round(baseline_us, 1)},
+            "max_abs_err": err,
+            "ok": parity_ok,
+        }
+        row("moe/small/measured/overlapped", overlapped_us)
+        row("moe/small/measured/baseline", baseline_us)
+    except Exception as exc:  # loud: the executor path must run on CPU
+        failures.append(f"measured: {type(exc).__name__}: {exc}")
+        results["measured"] = {"error": str(exc), "ok": False}
+
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {len(results['shapes'])} shapes, {len(failures)} failures")
+    for f_ in failures:
+        print(f"FAIL {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    print("# modeled fused vs split a2a dispatch/combine cost per MoE shape "
+          f"(world={WORLD})")
+    for name, sig in MOE_SHAPES.items():
+        fused_us, cand, _ = _best(sig, fused=True)
+        unfused_us, _, _ = _best(sig, fused=False)
+        row(f"moe/{name}/{cand.label()}", fused_us,
+            f"unfused {unfused_us:.0f}us ({unfused_us / max(fused_us, 1e-9):.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI guard: modeled fused-beats-split on every MoE shape, "
+        "resolve_a2a verdict, verifier plan-space sweep, measured parity; "
+        "write BENCH_moe.json",
+    )
+    ap.add_argument("--out", default="BENCH_moe.json")
+    a = ap.parse_args()
+    sys.exit(smoke(a.out) if a.smoke else main())

@@ -17,6 +17,7 @@ submodules import ``repro.core`` only lazily, inside functions.
 from repro.analysis.errors import PlanVerificationError, VerificationReport
 from repro.analysis.ir import PlanTables
 from repro.analysis.verify import (
+    check_a2a_candidate,
     check_candidate,
     check_seq_candidate,
     verify_plan,
@@ -31,6 +32,7 @@ __all__ = [
     "PlanVerificationError",
     "VerificationReport",
     "PlanTables",
+    "check_a2a_candidate",
     "check_candidate",
     "check_seq_candidate",
     "verify_plan",

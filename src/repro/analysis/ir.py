@@ -32,7 +32,7 @@ class PlanTables:
 
     kind: str
     order: str
-    flow: str  # "ag" | "rs" | "ag_rs"
+    flow: str  # "ag" | "rs" | "ag_rs" | "a2a" | "a2a_rs"
     world: int
     num_channels: int
     src: Table  # AG origin rank consumed per (c, step, rank)
@@ -40,6 +40,7 @@ class PlanTables:
     flow_dst: Optional[Table]  # AG push destination (last row identity, unused)
     rs_dst: Optional[Table]  # RS push destination (last row identity, unused)
     align: Tuple[Tuple[int, ...], ...]  # [channel][rank] ag_rs final-hop dst
+    a2a_dst: Optional[Table] = None  # a2a direct-exchange destination (step 0 identity)
 
     @classmethod
     def from_plan(cls, plan) -> "PlanTables":
@@ -50,6 +51,12 @@ class PlanTables:
         except ValueError:
             # not a per-step permutation; the schedule pass reports precisely
             flow_dst = rs_dst = None
+        a2a_dst = None
+        if plan.flow in ("a2a", "a2a_rs") and hasattr(plan, "a2a_dst_tables"):
+            try:
+                a2a_dst = plan.a2a_dst_tables()
+            except Exception:
+                a2a_dst = None  # schedule pass reports the root cause from src
         return cls(
             kind=plan.kind,
             order=plan.channels[0].order,
@@ -61,6 +68,7 @@ class PlanTables:
             flow_dst=flow_dst,
             rs_dst=rs_dst,
             align=tuple(tuple(d for _, d in ch.align_perm()) for ch in plan.channels),
+            a2a_dst=a2a_dst,
         )
 
     # ---- mutation helpers (test suite) --------------------------------------

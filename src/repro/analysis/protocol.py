@@ -43,9 +43,11 @@ from repro.analysis.ir import PlanTables
 __all__ = [
     "build_streams",
     "build_seam_streams",
+    "build_a2a_seam_streams",
     "check_streams",
     "check_protocol",
     "check_seam_protocol",
+    "check_a2a_seam_protocol",
     "DmaStart",
     "Wait",
     "LocalRead",
@@ -96,6 +98,10 @@ def build_streams(t: PlanTables, *, shared_rs_send_sem: bool = False) -> Dict[in
         return _ag_streams(t)
     if t.flow == "rs":
         return _rs_streams(t, shared_send_sem=shared_rs_send_sem)
+    if t.flow == "a2a":
+        return _a2a_streams(t)
+    if t.flow == "a2a_rs":
+        return _combine_streams(t)
     raise ValueError(f"unknown flow {t.flow!r}")
 
 
@@ -161,6 +167,147 @@ def _rs_streams(t: PlanTables, *, shared_send_sem: bool = False) -> Dict[int, li
                     )
                 else:
                     ops.append(LocalRead(("acc", c)))  # final store
+        streams[r] = ops
+    return streams
+
+
+def _a2a_streams(t: PlanTables) -> Dict[int, list]:
+    """Dispatch half of the expert-parallel a2a (direct pairwise exchange).
+
+    Each rank stages its own token tile once, pushes it directly to step
+    s+1's consumer while reading step s's landed tile — nothing is forwarded,
+    so the send buffer is written once and every landed slot has exactly one
+    writer and one reader.
+    """
+    world, nch = t.world, t.num_channels
+    streams = {}
+    for r in range(world):
+        ops: list = []
+        for s in range(world):
+            for c in range(nch):
+                if s == 0:
+                    ops.append(LocalWrite(("x", c)))  # stage own token tile
+                if s < world - 1:
+                    # issue step s+1's exchange while step s's tile is consumed
+                    d = t.a2a_dst[c][s + 1][r]
+                    ops.append(
+                        DmaStart(
+                            src=("x", c),
+                            dst_rank=d,
+                            dst=("land", (s + 1) * nch + c),
+                            send_sem=("dsend", s * nch + c),
+                            recv_sem=("drecv", (s + 1) * nch + c),
+                        )
+                    )
+                if s == 0:
+                    ops.append(LocalRead(("x", c)))  # local tokens, no hop
+                else:
+                    ops.append(Wait(("drecv", s * nch + c)))
+                    ops.append(LocalRead(("land", s * nch + c)))
+        for s in range(world - 1):  # drain: own tile no longer being read
+            for c in range(nch):
+                ops.append(Wait(("dsend", s * nch + c)))
+        streams[r] = ops
+    return streams
+
+
+def _combine_streams(t: PlanTables) -> Dict[int, list]:
+    """Combine half: per-step expert partials return along the reversed edge.
+
+    At step s rank r holds the output for tokens of origin sigma(r, s); it
+    returns that partial straight home while the home rank accumulates — the
+    accumulator never travels (unlike ag_rs, where the reduction follows the
+    tile flow and needs a final alignment hop).
+    """
+    world, nch = t.world, t.num_channels
+    streams = {}
+    for r in range(world):
+        ops: list = []
+        for s in range(world):
+            for c in range(nch):
+                if s == 0:
+                    ops.append(LocalWrite(("acc", c)))  # own partial, no hop
+                    continue
+                if s >= 2:  # part buffer reuse: previous return drained
+                    ops.append(Wait(("csend", (s - 1) * nch + c)))
+                ops.append(LocalWrite(("part", c)))  # stage step s's partial
+                ops.append(
+                    DmaStart(
+                        src=("part", c),
+                        dst_rank=t.src[c][s][r],
+                        dst=("ret", s * nch + c),
+                        send_sem=("csend", s * nch + c),
+                        recv_sem=("crecv", s * nch + c),
+                    )
+                )
+                ops.append(Wait(("crecv", s * nch + c)))
+                ops.append(LocalRead(("ret", s * nch + c)))
+                ops.append(LocalWrite(("acc", c)))  # home accumulate
+        for c in range(nch):
+            if world > 1:  # drain the last return before the final store
+                ops.append(Wait(("csend", (world - 1) * nch + c)))
+            ops.append(LocalRead(("acc", c)))  # final store
+        streams[r] = ops
+    return streams
+
+
+def build_a2a_seam_streams(dispatch: PlanTables, combine: PlanTables) -> Dict[int, list]:
+    """Abstract per-rank streams of the fused dispatch -> GEMM -> combine pipe.
+
+    One interleaved pipeline per (rank, step, channel): issue step s+1's
+    dispatch exchange, run the grouped expert GEMM on step s's landed tile,
+    and return the resulting partial along the reversed edge while the home
+    rank accumulates.  The GEMM is made explicit as the read of the landed
+    tile feeding the write of the ``part`` staging buffer, so the race pass
+    proves the compute is ordered between the two exchanges.
+    """
+    world, nch = dispatch.world, dispatch.num_channels
+    streams = {}
+    for r in range(world):
+        ops: list = []
+        for s in range(world):
+            for c in range(nch):
+                if s == 0:
+                    ops.append(LocalWrite(("x", c)))  # stage own token tile
+                if s < world - 1:
+                    d = dispatch.a2a_dst[c][s + 1][r]
+                    ops.append(
+                        DmaStart(
+                            src=("x", c),
+                            dst_rank=d,
+                            dst=("land", (s + 1) * nch + c),
+                            send_sem=("dsend", s * nch + c),
+                            recv_sem=("drecv", (s + 1) * nch + c),
+                        )
+                    )
+                if s == 0:
+                    # local tokens: GEMM reads the own tile, accumulates home
+                    ops.append(LocalRead(("x", c)))
+                    ops.append(LocalWrite(("acc", c)))
+                    continue
+                ops.append(Wait(("drecv", s * nch + c)))
+                ops.append(LocalRead(("land", s * nch + c)))  # grouped GEMM in
+                if s >= 2:  # part buffer reuse: previous return drained
+                    ops.append(Wait(("csend", (s - 1) * nch + c)))
+                ops.append(LocalWrite(("part", c)))  # grouped GEMM out
+                ops.append(
+                    DmaStart(
+                        src=("part", c),
+                        dst_rank=combine.src[c][s][r],
+                        dst=("ret", s * nch + c),
+                        send_sem=("csend", s * nch + c),
+                        recv_sem=("crecv", s * nch + c),
+                    )
+                )
+                ops.append(Wait(("crecv", s * nch + c)))
+                ops.append(LocalRead(("ret", s * nch + c)))
+                ops.append(LocalWrite(("acc", c)))  # home accumulate
+        for c in range(nch):  # drain: dispatch sends + the last return
+            for s in range(world - 1):
+                ops.append(Wait(("dsend", s * nch + c)))
+            if world > 1:
+                ops.append(Wait(("csend", (world - 1) * nch + c)))
+            ops.append(LocalRead(("acc", c)))  # final store
         streams[r] = ops
     return streams
 
@@ -444,3 +591,13 @@ def check_seam_protocol(producer: PlanTables, consumer: PlanTables) -> Tuple[int
         order=f"{producer.order}->{consumer.order}",
     )
     return check_streams(build_seam_streams(producer, consumer), ctx)
+
+
+def check_a2a_seam_protocol(dispatch: PlanTables, combine: PlanTables) -> Tuple[int, int]:
+    """Model-check the fused dispatch -> GEMM -> combine event graph."""
+    ctx = dataclasses.replace(
+        dispatch,
+        kind=f"{dispatch.kind}->{combine.kind}",
+        order=f"{dispatch.order}->{combine.order}",
+    )
+    return check_streams(build_a2a_seam_streams(dispatch, combine), ctx)

@@ -20,6 +20,22 @@ violation, with the failing (kind, order, world, channel, step, rank)):
                                 are hit exactly once (no overlap / no gap in
                                 the multi-channel block partition).
 
+For a2a flows (expert-parallel dispatch/combine) three more checks run:
+
+  * ``a2a_exchange_composition`` — the direct exchange delivers each rank's
+                                *own* tile to exactly the rank that consumes
+                                it: src[dst(j)] at step s == j, and each dst
+                                row is itself a permutation (full coverage);
+  * ``a2a_seed``              — step 0's exchange is the identity (tokens
+                                routed to the local expert shard move nowhere);
+  * ``a2a_involution``        — for the all2all order on power-of-two worlds
+                                the exchange is the XOR involution
+                                dst(j) == sigma(j, s) == j ^ s (each step is a
+                                disjoint pairwise swap); non-power-of-2 worlds
+                                and other orders fall back to the inverse-
+                                permutation law dst == sigma(., s)^-1 already
+                                proven by ``a2a_exchange_composition``.
+
 For fused multi-op seam plans (``core/plan.SeqPlan``) ``check_seam`` adds:
 
   * ``seam_composition``      — the producer's fully reduced RS segment lands
@@ -27,7 +43,15 @@ For fused multi-op seam plans (``core/plan.SeqPlan``) ``check_seam`` adds:
                                 seeds its step-0 local tile:
                                 rs_seg(r, world - 1) == r == sigma(r, 0), with
                                 matching world and channel counts, so the
-                                handoff is rank-local (no resharding hop).
+                                handoff is rank-local (no resharding hop);
+
+and for the a2a pair ``check_a2a_seam`` requires the combine to return along
+the *reversed* edges of the dispatch exchange:
+
+  * ``a2a_seam_composition``  — identical src tables on both halves (the
+                                combine's return destination sigma(j, s) is
+                                the dispatch edge traversed backwards), with
+                                matching world and channel counts.
 
 All checks run off the precomputed O(world^2 * channels) tables, so a full
 verification is microseconds even at dry-run world sizes.
@@ -37,7 +61,7 @@ from __future__ import annotations
 from repro.analysis.errors import PlanVerificationError
 from repro.analysis.ir import PlanTables
 
-__all__ = ["check_schedule", "check_channel_partition", "check_seam"]
+__all__ = ["check_schedule", "check_channel_partition", "check_seam", "check_a2a_seam"]
 
 
 def check_channel_partition(extent: int, num_channels: int) -> int:
@@ -178,6 +202,51 @@ def check_schedule(t: PlanTables) -> int:
                     )
                 checks += 1
 
+        # a2a flows: the direct pairwise exchange must deliver each rank's
+        # own tile to exactly the rank consuming it this step
+        if t.flow in ("a2a", "a2a_rs"):
+            if t.a2a_dst is None:
+                raise PlanVerificationError(
+                    "a2a exchange tables could not be derived (source schedule "
+                    "is not a per-step permutation)",
+                    check="a2a_exchange_composition",
+                    **_ctx(t, channel=c),
+                )
+            xor_involution = t.order == "all2all" and world & (world - 1) == 0
+            for s in range(world):
+                dst_row = t.a2a_dst[c][s]
+                _check_perm_row(
+                    t, dst_row, check="a2a_exchange_composition", channel=c, step=s
+                )
+                for j in range(world):
+                    if src_c[s][dst_row[j]] != j:
+                        raise PlanVerificationError(
+                            f"a2a exchange sends rank {j}'s own tile to rank "
+                            f"{dst_row[j]}, which consumes origin "
+                            f"{src_c[s][dst_row[j]]} at this step",
+                            check="a2a_exchange_composition",
+                            rank=j,
+                            **_ctx(t, channel=c, step=s),
+                        )
+                    if s == 0 and dst_row[j] != j:
+                        raise PlanVerificationError(
+                            f"step-0 a2a exchange moves rank {j}'s tile to "
+                            f"{dst_row[j]}; the seed step must be local",
+                            check="a2a_seed",
+                            rank=j,
+                            **_ctx(t, channel=c, step=0),
+                        )
+                    if xor_involution and dst_row[j] != src_c[s][j]:
+                        raise PlanVerificationError(
+                            f"all2all exchange is not the XOR involution: rank "
+                            f"{j} sends to {dst_row[j]} but receives from "
+                            f"{src_c[s][j]}",
+                            check="a2a_involution",
+                            rank=j,
+                            **_ctx(t, channel=c, step=s),
+                        )
+                    checks += 2 + int(xor_involution)
+
         # ag_rs final alignment hop: deliver the reduction for the tile held
         # last (origin sigma(j, world-1)) to that origin rank
         for j in range(world):
@@ -267,4 +336,63 @@ def check_seam(producer: PlanTables, consumer: PlanTables) -> int:
                     rank=r,
                 )
             checks += 1
+    return checks
+
+
+def check_a2a_seam(dispatch: PlanTables, combine: PlanTables) -> int:
+    """Composition legality for a fused ``a2a_dispatch -> combine_rs`` pair.
+
+    The combine returns each step's expert partials along the *reversed*
+    dispatch edge (rank j sends step s's partial to sigma(j, s), the origin of
+    the tokens it just processed) — sound only when both halves realize the
+    same exchange: identical src tables, world, and channel count.  Returns
+    the number of assertions evaluated.
+    """
+    kind = f"{dispatch.kind}->{combine.kind}"
+    order = f"{dispatch.order}->{combine.order}"
+    if dispatch.flow != "a2a" or combine.flow != "a2a_rs":
+        raise PlanVerificationError(
+            f"a2a seam chains flows {(dispatch.flow, combine.flow)}; only an "
+            "a2a dispatch feeding an a2a_rs combine reverses edge-for-edge",
+            check="a2a_seam_composition",
+            kind=kind,
+            order=order,
+            world=dispatch.world,
+        )
+    if dispatch.world != combine.world:
+        raise PlanVerificationError(
+            f"dispatch world {dispatch.world} != combine world {combine.world}",
+            check="a2a_seam_composition",
+            kind=kind,
+            order=order,
+            world=dispatch.world,
+        )
+    if dispatch.num_channels != combine.num_channels:
+        raise PlanVerificationError(
+            f"dispatch has {dispatch.num_channels} channels but combine has "
+            f"{combine.num_channels}; the return edge is per-channel",
+            check="a2a_seam_composition",
+            kind=kind,
+            order=order,
+            world=dispatch.world,
+        )
+    world, checks = dispatch.world, 3
+    for c in range(dispatch.num_channels):
+        for s in range(world):
+            for r in range(world):
+                if combine.src[c][s][r] != dispatch.src[c][s][r]:
+                    raise PlanVerificationError(
+                        f"combine returns step {s}'s partial to "
+                        f"{combine.src[c][s][r]} but the dispatch exchange "
+                        f"consumed origin {dispatch.src[c][s][r]}; the return "
+                        "must traverse the dispatch edge backwards",
+                        check="a2a_seam_composition",
+                        kind=kind,
+                        order=order,
+                        world=world,
+                        channel=c,
+                        step=s,
+                        rank=r,
+                    )
+                checks += 1
     return checks

@@ -10,8 +10,9 @@ alone still runs in microseconds).
 ``REPRO_VERIFY=0`` (see ``core/plan.py``); ``check_candidate`` is the cached
 boolean form the tuner uses to reject illegal candidates before spending
 measurement budget.  ``python -m repro.analysis.verify --all`` exhaustively
-verifies the shipped plan space (all kinds x orders x world in {2,4,8} x
-C in {1,2,4}) with no JAX device — it is the CI ``verify`` job.
+verifies the shipped plan space (all kinds x orders x world in {2,3,4,8} x
+C in {1,2,4} — world 3 exercises the non-power-of-2 all2all fallback) with
+no JAX device — it is the CI ``verify`` job.
 
 This module imports ``repro.core`` lazily (inside functions) so the analysis
 package stays importable from ``core/plan.py`` without a cycle.
@@ -21,12 +22,16 @@ from __future__ import annotations
 import argparse
 import functools
 import os
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 from repro.analysis.errors import PlanVerificationError, VerificationReport
 from repro.analysis.ir import PlanTables
-from repro.analysis.protocol import check_protocol, check_seam_protocol
-from repro.analysis.schedule import check_schedule, check_seam
+from repro.analysis.protocol import (
+    check_a2a_seam_protocol,
+    check_protocol,
+    check_seam_protocol,
+)
+from repro.analysis.schedule import check_a2a_seam, check_schedule, check_seam
 
 __all__ = [
     "verify_plan",
@@ -35,14 +40,24 @@ __all__ = [
     "verify_seq_tables",
     "check_candidate",
     "check_seq_candidate",
+    "check_a2a_candidate",
     "verify_space",
     "verify_seq_space",
     "main",
 ]
 
 # shipped plan space: what `--all` (and the CI verify job) proves well-formed
-SPACE_WORLDS = (2, 4, 8)
+# (world 3 exercises the non-power-of-2 all2all rotation fallback)
+SPACE_WORLDS = (2, 3, 4, 8)
 SPACE_CHANNELS = (1, 2, 4)
+
+# fused multi-op pairs selectable from the CLI (--kind) and swept by --all
+SEQ_KIND = "seq_rs_ag"
+A2A_SEQ_KIND = "seq_a2a_moe"
+SEQ_OPS = {
+    SEQ_KIND: ("matmul_rs", "ag_matmul"),
+    A2A_SEQ_KIND: ("a2a_dispatch", "combine_rs"),
+}
 
 
 def _protocol_max_world() -> int:
@@ -107,19 +122,26 @@ def verify_seq_tables(
     by either half alone, is caught.
     """
     producer, consumer = tables
+    is_a2a = producer.flow == "a2a" or consumer.flow == "a2a_rs"
     checks = 0
     for i, t in enumerate(tables):
         try:
             checks += check_schedule(t)
         except PlanVerificationError as e:
             raise e.with_op_index(i) from None
-    checks += check_seam(producer, consumer)
+    if is_a2a:
+        checks += check_a2a_seam(producer, consumer)
+    else:
+        checks += check_seam(producer, consumer)
     passes = ["schedule", "seam"]
     events = 0
     if protocol is None:
         protocol = producer.world <= _protocol_max_world()
     if protocol:
-        pchecks, events = check_seam_protocol(producer, consumer)
+        if is_a2a:
+            pchecks, events = check_a2a_seam_protocol(producer, consumer)
+        else:
+            pchecks, events = check_seam_protocol(producer, consumer)
         checks += pchecks
         passes.append("protocol")
     return VerificationReport(
@@ -184,6 +206,21 @@ def check_seq_candidate(order: str, world: int, num_channels: int) -> Optional[s
     return None
 
 
+@functools.lru_cache(maxsize=4096)
+def check_a2a_candidate(order: str, world: int, num_channels: int) -> Optional[str]:
+    """Cached legality probe for a fused ``a2a_dispatch -> combine_rs`` pair."""
+    from repro.core.channels import BlockChannel, CommSpec
+    from repro.core.plan import build_seq_plan
+
+    ch = BlockChannel(axis="model", comm=CommSpec(order=order), num_channels=num_channels)
+    try:
+        seq = build_seq_plan(("a2a_dispatch", "combine_rs"), (ch, ch), world, num_channels)
+        verify_seq_plan(seq)
+    except PlanVerificationError as e:
+        return str(e)
+    return None
+
+
 def verify_space(
     *,
     kinds: Optional[Sequence[str]] = None,
@@ -207,17 +244,19 @@ def verify_space(
 
 def verify_seq_space(
     *,
+    kinds: Tuple[str, str] = ("matmul_rs", "ag_matmul"),
     orders: Optional[Sequence[str]] = None,
     worlds: Sequence[int] = SPACE_WORLDS,
     channels: Sequence[int] = SPACE_CHANNELS,
     protocol: Optional[bool] = None,
 ):
-    """Yield a VerificationReport per fused ``matmul_rs -> ag_matmul`` seam.
+    """Yield a VerificationReport per fused 2-op pair of ``kinds``.
 
-    One shared order per seam (mixed-order seams are legal — the composition
+    Covers the RS->AG layer seam and the a2a dispatch/combine pair.  One
+    shared order per pair (mixed-order seams are legal — the composition
     invariant only involves the home/seed identities — but the shipped space
-    is what the ``compile_overlap`` seq form emits: matching channels on both
-    halves).
+    is what the ``compile_overlap`` list form emits: matching channels on
+    both halves).
     """
     from repro.core.channels import ORDERS, BlockChannel, CommSpec
     from repro.core.plan import build_seq_plan
@@ -226,7 +265,7 @@ def verify_seq_space(
         for world in worlds:
             for nch in channels:
                 ch = BlockChannel(axis="model", comm=CommSpec(order=order), num_channels=nch)
-                seq = build_seq_plan(("matmul_rs", "ag_matmul"), (ch, ch), world, nch)
+                seq = build_seq_plan(tuple(kinds), (ch, ch), world, nch)
                 yield verify_seq_plan(seq, protocol=protocol, requested_channels=nch)
 
 
@@ -248,21 +287,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     from repro.core.channels import ORDERS
     from repro.core.plan import FLOW_OF_KIND
 
-    # "seq_rs_ag" selects the fused seam space; any single-op kind narrows to
-    # single-op plans only.  Default (--all / no --kind) verifies both.
-    SEQ_KIND = "seq_rs_ag"
-    kinds = args.kind or sorted(FLOW_OF_KIND) + [SEQ_KIND]
+    # "seq_rs_ag" selects the fused RS->AG seam space and "seq_a2a_moe" the
+    # fused dispatch/combine pair; any single-op kind narrows to single-op
+    # plans only.  Default (--all / no --kind) verifies everything.
+    kinds = args.kind or sorted(FLOW_OF_KIND) + sorted(SEQ_OPS)
     ok = failed = 0
     for kind in kinds:
         for order in args.order or ORDERS:
             try:
                 space = (
                     verify_seq_space(
+                        kinds=SEQ_OPS[kind],
                         orders=[order],
                         worlds=args.world or SPACE_WORLDS,
                         channels=args.channels or SPACE_CHANNELS,
                     )
-                    if kind == SEQ_KIND
+                    if kind in SEQ_OPS
                     else verify_space(
                         kinds=[kind],
                         orders=[order],

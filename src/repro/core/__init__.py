@@ -16,7 +16,6 @@ from repro.core.plan import (
 )
 from repro.core.compiler import (
     compile_overlap,
-    compile_overlap_seq,
     SeamFallbackWarning,
     KINDS,
     SEQ_KINDS,
@@ -39,7 +38,6 @@ __all__ = [
     "build_seq_plan",
     "plan_cache_info",
     "compile_overlap",
-    "compile_overlap_seq",
     "SeamFallbackWarning",
     "KINDS",
     "SEQ_KINDS",

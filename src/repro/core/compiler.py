@@ -60,7 +60,6 @@ from repro.core import overlap as _xla
 
 __all__ = [
     "compile_overlap",
-    "compile_overlap_seq",
     "SeamFallbackWarning",
     "KINDS",
     "SEQ_KINDS",
@@ -74,8 +73,10 @@ BACKENDS = ("xla", "pallas")
 # kinds with a fused-kernel lowering; the others map their communication to
 # the copy engine via host primitives (paper Fig. 5/6), i.e. backend="xla"
 PALLAS_KINDS = ("ag_matmul", "matmul_rs")
-# op sequences with a fused seam lowering (compile_overlap list form)
-SEQ_KINDS = (("matmul_rs", "ag_matmul"),)
+# op sequences with a fused lowering (compile_overlap list form): the RS->AG
+# layer seam and the expert-parallel MoE dispatch/combine pair
+SEQ_KINDS = (("matmul_rs", "ag_matmul"), ("a2a_dispatch", "combine_rs"))
+A2A_SEQ = ("a2a_dispatch", "combine_rs")
 
 
 def unsupported_error(kind: str, backend: str) -> NotImplementedError:
@@ -126,9 +127,10 @@ def compile_overlap(
     """Compile a tile program. See module docstring.
 
     ``kind`` is a single kind name, or a list/tuple of kinds (optionally
-    ``(kind, channel)`` pairs) naming a fused op-sequence seam — the only
-    supported sequence is ``["matmul_rs", "ag_matmul"]``, the shared-ring
-    layer seam.  ``channel`` is either an explicit :class:`BlockChannel` or
+    ``(kind, channel)`` pairs) naming a fused op sequence — the supported
+    sequences are ``["matmul_rs", "ag_matmul"]`` (the shared-ring layer seam)
+    and ``["a2a_dispatch", "combine_rs"]`` (the expert-parallel MoE
+    dispatch/combine pair).  ``channel`` is either an explicit :class:`BlockChannel` or
     the string ``"auto"`` (seq form also accepts None for the default
     channel); ``comp`` is None (use the channel's CompSpec), ``"auto"``
     (tune the compute half), or an explicit CompSpec / (tm, tn, tk) tuple;
@@ -323,19 +325,16 @@ def _compile_seq(
     tune_space=None,
     **kw,
 ) -> Callable:
-    """Compile a fused multi-op seam: op N's RS flow feeds op N+1's AG flow.
+    """Compile a fused multi-op sequence (the ``compile_overlap`` list form).
 
-    Reached through ``compile_overlap`` when ``kind`` is a list/tuple of op
-    kinds (the public surface); ``compile_overlap_seq`` is the deprecated
-    alias for the same path.
+    ``ops`` is a sequence of kind names or ``(kind, channel)`` pairs; the
+    supported sequences are:
 
-    ``ops`` is a sequence of kind names or ``(kind, channel)`` pairs; the only
-    supported sequence is ``["matmul_rs", "ag_matmul"]`` — the layer seam
-    where a down/out projection's reduce-scatter hands its home segments
-    directly to the next op's all-gather over one shared ring pass
-    (``core/overlap.matmul_rs_ag`` via ``core/plan.build_seq_plan``).
-
-    The returned callable has the signature
+    ``["matmul_rs", "ag_matmul"]`` — the layer seam where a down/out
+    projection's reduce-scatter hands its home segments directly to the next
+    op's all-gather over one shared ring pass (``core/overlap.matmul_rs_ag``
+    via ``core/plan.build_seq_plan``).  The returned callable has the
+    signature
 
         fn(x, w1, w2, *, residual=None, glue=None) -> (y, ag_out)
 
@@ -344,16 +343,28 @@ def _compile_seq(
     elementwise (e.g. the consumer block's rms_norm), applied to the full
     home segment so the float ops match the unfused pair exactly.
 
-    ``channel`` is a shared :class:`BlockChannel`, ``"auto"`` (the seam-aware
-    tuner picks fused vs. unfused per shape — ``repro.tune.resolve_seq``), or
-    None (the default channel); a per-op ``(kind, channel)`` entry overrides
-    it for that op.  ``overlapped=False`` compiles the operator-centric
-    unfused baseline pair.
+    ``["a2a_dispatch", "combine_rs"]`` — the expert-parallel MoE pair: each
+    step's direct pairwise exchange lands a peer's token tile + routing
+    tables, the local experts' grouped GEMM runs while the next exchange is
+    in flight, and the weighted partial returns home along the reversed edge
+    (``core/moe_overlap.a2a_moe``).  The returned callable has the signature
 
-    If the two halves are schedule-incompatible at call time (mismatched
+        fn(x, topk_ids, topk_w, w_gu, w_down, *, capacity_factor=..., act=...)
+            -> [m_loc, d]
+
+    ``channel`` is a shared :class:`BlockChannel`, ``"auto"`` (the pair-aware
+    tuner resolves both halves jointly per shape — ``repro.tune.resolve_seq``
+    / ``resolve_a2a``), or None (the default channel); a per-op ``(kind,
+    channel)`` entry overrides it for that op.  ``overlapped=False`` compiles
+    the operator-centric unfused baseline pair (``a2a_moe_baseline`` for the
+    MoE pair, with matching per-sub-chunk capacity semantics).
+
+    If the RS->AG halves are schedule-incompatible at call time (mismatched
     worlds, or channel counts whose extents clamp differently), the call
     degrades LOUDLY to the unfused pair via one :class:`SeamFallbackWarning`
-    — never a silent perf cliff, never a crash.
+    — never a silent perf cliff, never a crash.  The a2a pair has no such
+    cliff: both halves chunk the same token extent, so their effective
+    channel counts always agree.
     """
     kinds, chans = [], []
     for op in ops:
@@ -369,6 +380,18 @@ def _compile_seq(
             f"compile_overlap: op sequence {kinds!r} is not supported on "
             f"backend={backend!r} (supported: {SEQ_KINDS} on backend='xla'); "
             "lower each op separately via single-kind compile_overlap calls"
+        )
+    if kinds == A2A_SEQ:
+        return _compile_a2a(
+            chans,
+            channel=channel,
+            overlapped=overlapped,
+            axis=axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            tune_base=tune_base,
+            tune_space=tune_space,
+            **kw,
         )
     if any(ch == "auto" for ch in chans):
         base = next((ch for ch in chans if isinstance(ch, BlockChannel)), tune_base)
@@ -412,20 +435,111 @@ def _compile_seq(
     return seq_fn
 
 
-def compile_overlap_seq(ops, **kwargs) -> Callable:
-    """Deprecated alias: pass the op list to :func:`compile_overlap` instead.
+def _compile_a2a(
+    chans,
+    *,
+    channel,
+    overlapped: bool,
+    axis: str,
+    mesh,
+    tune_ranker: Optional[str],
+    tune_base: Optional[BlockChannel] = None,
+    tune_space=None,
+    **kw,
+) -> Callable:
+    """Compile the expert-parallel ``a2a_dispatch -> combine_rs`` pair.
 
-    ``compile_overlap_seq(ops, ...)`` == ``compile_overlap(ops, ...)`` — the
-    seam path folded into the main entry; this name only adds a
-    ``DeprecationWarning``.
+    See :func:`_compile_seq` for the public contract.  Unlike the RS->AG seam
+    there is no schedule-incompatibility fallback: both halves chunk the same
+    local token extent, so their effective channel counts always agree and the
+    a2a-seam invariants hold for every order (proven per ``build_seq_plan``
+    miss).
     """
-    warnings.warn(
-        "compile_overlap_seq is deprecated; pass the op list to compile_overlap "
-        "instead: compile_overlap(['matmul_rs', 'ag_matmul'], channel=...)",
-        DeprecationWarning,
-        stacklevel=2,
+    from repro.core import moe_overlap
+
+    if any(ch == "auto" for ch in chans):
+        base = next((ch for ch in chans if isinstance(ch, BlockChannel)), tune_base)
+        return _auto_overlap_a2a(
+            axis=base.axis if base is not None else axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            base=base,
+            space=tune_space,
+            overlapped=overlapped,
+            **kw,
+        )
+    ch_d, ch_c = (
+        ch if isinstance(ch, BlockChannel) else BlockChannel(axis=axis) for ch in chans
     )
-    return _compile_seq(ops, **kwargs)
+    if not overlapped:
+        return functools.partial(
+            moe_overlap.a2a_moe_baseline,
+            axis=ch_d.axis,
+            num_channels=ch_d.num_channels,
+            **kw,
+        )
+    return functools.partial(
+        moe_overlap.a2a_moe, axis=ch_d.axis, channel=ch_d, channel2=ch_c, **kw
+    )
+
+
+def _auto_overlap_a2a(
+    *,
+    axis: str,
+    mesh,
+    tune_ranker: Optional[str],
+    base: Optional[BlockChannel],
+    space=None,
+    overlapped: bool,
+    **kw,
+) -> Callable:
+    """Pair-aware auto resolution for the MoE dispatch/combine.
+
+    ``repro.tune.resolve_a2a`` resolves both halves jointly (shared effective
+    C, like seams) on the a2a cost model — per-step wire priced from the real
+    peer hop counts of the order — and verdicts fused vs. the unfused
+    AG+GroupGEMM+RS baseline per shape.
+    """
+
+    def auto_fn(x, topk_ids, topk_w, w_gu, w_down, **call_kw):
+        import jax.numpy as jnp
+
+        from repro import backend as _backend
+        from repro.core import moe_overlap
+        from repro.tune import resolve_a2a
+
+        world = int(mesh.shape[axis]) if mesh is not None else int(_backend.axis_size(axis))
+        resolve_kw = {} if space is None else {"space": space}
+        fused, ch_d, ch_c = resolve_a2a(
+            shapes=(
+                jnp.shape(x),
+                jnp.shape(topk_ids),
+                jnp.shape(topk_w),
+                jnp.shape(w_gu),
+                jnp.shape(w_down),
+            ),
+            mesh=mesh,
+            axis=axis,
+            world=world,
+            base=base,
+            ranker=tune_ranker,
+            capacity_factor=call_kw.get("capacity_factor"),
+            **resolve_kw,
+        )
+        if fused and overlapped:
+            fn = functools.partial(
+                moe_overlap.a2a_moe, axis=axis, channel=ch_d, channel2=ch_c, **kw
+            )
+        else:
+            fn = functools.partial(
+                moe_overlap.a2a_moe_baseline,
+                axis=axis,
+                num_channels=ch_d.num_channels,
+                **kw,
+            )
+        return fn(x, topk_ids, topk_w, w_gu, w_down, **call_kw)
+
+    return auto_fn
 
 
 def _auto_overlap_seq(

@@ -36,9 +36,18 @@ from jax import lax
 from repro.backend import axis_size
 from repro.core.channels import BlockChannel
 from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot
-from repro.core.overlap import _plan_for, run_plan
+from repro.core.mapping import effective_channels
+from repro.core.overlap import _plan_for, run_a2a_seq, run_plan
+from repro.core.plan import build_seq_plan
 
-__all__ = ["ag_moe", "ag_moe_baseline", "local_expert_ffn", "moe_router"]
+__all__ = [
+    "ag_moe",
+    "ag_moe_baseline",
+    "a2a_moe",
+    "a2a_moe_baseline",
+    "local_expert_ffn",
+    "moe_router",
+]
 
 
 def moe_router(x, w_router, *, num_experts: int, top_k: int, valid_experts: Optional[int] = None):
@@ -210,6 +219,125 @@ def ag_moe_baseline(
     )(xg, idg, wg)  # [R, m_loc, d]
     out = lax.psum_scatter(part, axis, scatter_dimension=0, tiled=False)
     return out.reshape(m_loc, -1)
+
+
+def a2a_moe(
+    x,
+    topk_ids,
+    topk_w,
+    w_gu,
+    w_down,
+    *,
+    axis: str,
+    capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+    channel: Optional[BlockChannel] = None,
+    channel2: Optional[BlockChannel] = None,
+):
+    """Overlapped expert-parallel MoE: fused a2a dispatch -> GroupGEMM -> combine.
+
+    Per-shard: x [m_loc, d] (token chunk, sharded over ``axis``), expert
+    weights local to the rank (EP over the same axis).  Each step's direct
+    pairwise exchange (``a2a_dispatch`` plan) lands a peer's token tile *and
+    its routing tables* (the paper's f_R/f_S travel with the data); the local
+    experts' grouped GEMM runs on the landed tile while the next exchange is
+    in flight, and the weighted partial returns straight home along the
+    reversed edge (``combine_rs`` plan).  Capacity/dropping happens at tile
+    granularity: every (landing rank, origin sub-chunk) pair applies the same
+    per-sub-chunk capacity slice, and dropped tokens simply contribute a zero
+    partial to the combine — the same mask the unfused baseline computes, so
+    the kept/dropped token set matches it bitwise.
+
+    Returns [m_loc, d] combined outputs for the local token chunk.
+    """
+    channel = channel or BlockChannel(axis=axis)
+    channel2 = channel2 or channel
+    rank = lax.axis_index(axis)
+    m_loc, _d = x.shape
+    k = topk_ids.shape[1]
+    e_loc = w_gu.shape[0]
+    world = axis_size(axis)
+
+    nch = effective_channels(m_loc, channel.num_channels, kind="a2a_dispatch")
+    seq = build_seq_plan(("a2a_dispatch", "combine_rs"), (channel, channel2), world, nch)
+    dispatch = seq.ops[0]
+    e_total = e_loc * world
+    m_sub = m_loc // nch
+    cap = _capacity(m_sub, k, e_total, capacity_factor)
+    flow = jnp.dtype(dispatch.flow_dtype)
+    comp_tile = tuple(channel.comp.tile)  # per-expert GEMM blocking (CompSpec)
+    e_lo = rank * e_loc
+
+    # token tiles + their dynamic routing tables exchange together per channel
+    chunks = [
+        (
+            x[c * m_sub : (c + 1) * m_sub],
+            topk_ids[c * m_sub : (c + 1) * m_sub],
+            topk_w[c * m_sub : (c + 1) * m_sub],
+        )
+        for c in range(nch)
+    ]
+
+    def moe_tile(ctx, tile, _carry):
+        xs, ids, wts = tile
+        part = local_expert_ffn(
+            xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act, tile=comp_tile
+        )
+        return part.astype(flow)  # the combine return travels in the flow dtype
+
+    accs = run_a2a_seq(seq, moe_tile, state=chunks)
+    out = accs[0] if nch == 1 else jnp.concatenate(accs, axis=0)
+    return out.astype(x.dtype)
+
+
+def a2a_moe_baseline(
+    x,
+    topk_ids,
+    topk_w,
+    w_gu,
+    w_down,
+    *,
+    axis: str,
+    capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+    num_channels: int = 1,
+):
+    """Non-overlapping EP reference: AllGather tokens+tables, GroupGEMM, ReduceScatter.
+
+    ``num_channels`` must be the overlapped path's *effective* channel count:
+    capacity is applied per ``m_loc / num_channels`` sub-chunk, exactly the
+    tile granularity ``a2a_moe`` drops at, so the two paths keep/drop the
+    same token set bitwise and differ only in summation order.
+    """
+    world = axis_size(axis)
+    rank = lax.axis_index(axis)
+    m_loc, d = x.shape
+    k = topk_ids.shape[1]
+    e_loc = w_gu.shape[0]
+    e_total = e_loc * world
+    nch = effective_channels(m_loc, num_channels, kind="a2a_dispatch", warn=False)
+    m_sub = m_loc // nch
+    cap = _capacity(m_sub, k, e_total, capacity_factor)  # per-sub-chunk capacity
+    e_lo = rank * e_loc
+
+    xg = lax.all_gather(x, axis, axis=0, tiled=False)  # [R, m_loc, d]
+    idg = lax.all_gather(topk_ids, axis, axis=0, tiled=False)
+    wg = lax.all_gather(topk_w, axis, axis=0, tiled=False)
+
+    # sub-chunk-wise expert FFN keeps capacity semantics identical to the
+    # overlapped path's per-channel tiles
+    part = jax.vmap(
+        lambda xc, ic, wc: local_expert_ffn(
+            xc, ic, wc, w_gu, w_down, e_lo=e_lo, cap=cap, act=act
+        )
+    )(
+        xg.reshape(world * nch, m_sub, d),
+        idg.reshape(world * nch, m_sub, k),
+        wg.reshape(world * nch, m_sub, k),
+    )
+    part = part.reshape(world, m_loc, d).astype(jnp.float32)
+    out = lax.psum_scatter(part, axis, scatter_dimension=0, tiled=False)
+    return out.reshape(m_loc, d).astype(x.dtype)
 
 
 def _capacity(m: int, k: int, e_total: int, factor: float) -> int:

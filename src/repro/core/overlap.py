@@ -55,6 +55,7 @@ from repro.core.plan import SeqPlan, TilePlan, build_plan, build_seq_plan
 __all__ = [
     "run_plan",
     "run_seq_plan",
+    "run_a2a_seq",
     "TileContext",
     "ag_matmul",
     "ag_matmul_baseline",
@@ -124,10 +125,26 @@ def run_plan(
         permutes as the tiles, plus one final alignment hop sending each
         channel's reduction to its home rank.  Returns the per-channel
         reductions.
+
+    plan.flow == "a2a" (expert-parallel dispatch):
+        ``state[c]`` is channel c's *own* token tile.  Each step is a direct
+        pairwise exchange of the original tiles (``a2a_perm`` — nothing is
+        forwarded): the executor issues step s+1's exchange, then calls
+        ``tile_fn(ctx, landed, carry) -> carry`` on the tile that landed this
+        step (step 0's landed tile is the own tile).  Returns the final carry.
+
+    plan.flow == "a2a_rs" (expert-parallel combine):
+        Nothing flows in; ``tile_fn(ctx, None, None) -> partial`` computes
+        the weighted expert output for tokens of origin ``ctx.src``; the
+        executor returns each step's partial straight home along the reversed
+        exchange edge (``combine_perm``) and accumulates there — the
+        accumulator never travels, unlike "ag_rs".  Returns the per-channel
+        home accumulators.
     """
     axis, nch = plan.axis, plan.num_channels
     rank = lax.axis_index(axis)
     accs: List[Any] = [None] * nch
+    own = list(state) if plan.flow == "a2a" and state is not None else None
 
     for s in range(plan.steps):
         nxt = None
@@ -135,6 +152,11 @@ def run_plan(
             # producer: issue every channel's step s+1 transfer (tile_push_data)
             nxt = [
                 _permute(state[c], axis, plan.channels[c].flow_perm(s)) for c in range(nch)
+            ]
+        elif plan.flow == "a2a" and s < plan.steps - 1:
+            # direct exchange: step s+1 permutes the ORIGINAL own tiles
+            nxt = [
+                _permute(own[c], axis, plan.channels[c].a2a_perm(s + 1)) for c in range(nch)
             ]
         for c in range(nch):
             sched = plan.channels[c]
@@ -146,11 +168,19 @@ def run_plan(
                 else:
                     # peer_tile_wait/notify: previous partial arrives and fuses
                     accs[c] = _tree_add(_permute(accs[c], axis, sched.rs_perm(s - 1)), part)
+            elif plan.flow == "a2a_rs":
+                src = jnp.asarray(sched.source_table(s))[rank]
+                part = tile_fn(TileContext(s, c, src, plan), None, None)
+                if s == 0:
+                    accs[c] = part  # own tokens: the partial is already home
+                else:
+                    # return along the reversed exchange edge, accumulate home
+                    accs[c] = _tree_add(accs[c], _permute(part, axis, sched.combine_perm(s)))
             else:
                 # consumer_tile_wait is the SSA dependence on state[c]
                 src = jnp.asarray(sched.source_table(s))[rank]
                 ctx = TileContext(s, c, src, plan)
-                if plan.flow == "ag":
+                if plan.flow in ("ag", "a2a"):
                     carry = tile_fn(ctx, state[c], carry)
                 else:  # ag_rs: reduction rides the tile flow
                     part = tile_fn(ctx, state[c], None)
@@ -163,7 +193,7 @@ def run_plan(
         if nxt is not None:
             state = nxt
 
-    if plan.flow == "ag":
+    if plan.flow in ("ag", "a2a"):
         return carry
     if plan.flow == "ag_rs":
         # final hop: each channel's reduction goes home (rank it belongs to)
@@ -203,6 +233,56 @@ def run_seq_plan(
     seam_out, state, carry = seam_fn(accs, carry)
     carry = run_plan(consumer, ag_tile_fn, state=state, carry=carry)
     return seam_out, carry
+
+
+def run_a2a_seq(
+    seq: SeqPlan,
+    tile_fn: Callable,
+    *,
+    state: Sequence[Any],
+) -> List[Any]:
+    """Execute a fused ``a2a_dispatch -> combine_rs`` pair as one pipeline.
+
+    ``state[c]`` is channel c's own (token tile, routing tables) pytree.  Per
+    step the executor issues step s+1's direct pairwise exchange of the
+    original tiles, calls ``tile_fn(ctx, landed, None) -> partial`` (the
+    grouped expert GEMM — the paper's f_R/f_S travel *with* the data, so the
+    callback sees the landed routing tables, not a global view) on the tile
+    that landed this step while the next exchange is in flight, and returns
+    the partial straight home along the reversed edge (``combine_perm``)
+    where it accumulates.  Step 0 is rank-local on both sides (a2a_seed).
+
+    Soundness of reversing the edges — the combine's return destination is
+    exactly the dispatch edge traversed backwards — is the
+    ``a2a_seam_composition`` invariant, statically proven for every
+    ``build_seq_plan`` miss.  Returns the per-channel home accumulators
+    (channel c holds the combined outputs for the tokens of own chunk c).
+    """
+    dispatch, combine = seq.ops
+    axis, nch = dispatch.axis, dispatch.num_channels
+    rank = lax.axis_index(axis)
+    own = list(state)
+    landed = list(state)
+    accs: List[Any] = [None] * nch
+
+    for s in range(dispatch.steps):
+        nxt = None
+        if s < dispatch.steps - 1:
+            nxt = [
+                _permute(own[c], axis, dispatch.channels[c].a2a_perm(s + 1))
+                for c in range(nch)
+            ]
+        for c in range(nch):
+            sched = combine.channels[c]
+            src = jnp.asarray(sched.source_table(s))[rank]
+            part = tile_fn(TileContext(s, c, src, dispatch), landed[c], None)
+            if s == 0:
+                accs[c] = part  # own tokens: the partial is already home
+            else:
+                accs[c] = _tree_add(accs[c], _permute(part, axis, sched.combine_perm(s)))
+        if nxt is not None:
+            landed = nxt
+    return accs
 
 
 def _plan_for(kind: str, channel: BlockChannel, axis: str, extent: int):

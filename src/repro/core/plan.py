@@ -20,9 +20,14 @@ A plan captures a producer/consumer tile graph over ``world`` ranks:
     destination tables in the Pallas kernels;
   * the **flow kind**: "ag" (tiles flow, consumer accumulates locally), "rs"
     (partial results flow and reduce; the segment schedule is the time
-    reversal of sigma, ending at the home rank — paper Fig. 4), or "ag_rs"
+    reversal of sigma, ending at the home rank — paper Fig. 4), "ag_rs"
     (MoE double ring: tiles flow forward while a reduction flows alongside,
-    plus a final alignment hop);
+    plus a final alignment hop), "a2a" (expert-parallel dispatch: each step
+    is a *direct* pairwise exchange of the ranks' own token tiles — rank r
+    receives origin sigma(r, s)'s tile straight from the holder, nothing is
+    forwarded), or "a2a_rs" (expert-parallel combine: per-step partial expert
+    outputs are returned along the reversed exchange edge and accumulated on
+    the home rank);
   * the **flow dtype** (``CompSpec.accum_dtype``) partial reductions travel in.
 
 Plans are host-side, hashable, and cached: ``build_plan`` is keyed on
@@ -84,6 +89,8 @@ FLOW_OF_KIND = {
     "matmul_rs": "rs",
     "psum_scatter": "rs",
     "ag_moe": "ag_rs",
+    "a2a_dispatch": "a2a",
+    "combine_rs": "a2a_rs",
 }
 
 
@@ -136,6 +143,35 @@ class ChannelSchedule:
                 step=step + 1,
             )
         return tuple((j, inv[self.source(j, step)]) for j in range(self.world))
+
+    # ---- all-to-all exchange view (direct pairwise, no forwarding) ----------
+    def a2a_perm(self, step: int) -> Tuple[Tuple[int, int], ...]:
+        """ppermute pairs of the *direct* exchange landing step ``step``.
+
+        Unlike ``flow_perm`` (which forwards the currently held tile), every
+        a2a step permutes the ranks' *own* tiles: rank j sends its tile to
+        the rank d that consumes it at ``step`` (sigma(d, step) == j).  For
+        the all2all XOR order this is the involution ``d = j ^ step``.
+        """
+        inv = {self.source(d, step): d for d in range(self.world)}
+        if len(inv) != self.world:
+            raise PlanVerificationError(
+                "source schedule is not a per-step permutation",
+                check="per_step_permutation",
+                order=self.order,
+                world=self.world,
+                step=step,
+            )
+        return tuple((j, inv[j]) for j in range(self.world))
+
+    def combine_perm(self, step: int) -> Tuple[Tuple[int, int], ...]:
+        """ppermute pairs returning step ``step``'s partial to its home rank.
+
+        At ``step`` rank j holds the expert output for tokens of origin
+        sigma(j, step); send it back there — the per-step generalization of
+        ``align_perm`` (which is exactly ``combine_perm(world - 1)``).
+        """
+        return tuple((j, self.source(j, step)) for j in range(self.world))
 
     def align_perm(self) -> Tuple[Tuple[int, int], ...]:
         """Final hop routing a tile-following reduction to its home rank.
@@ -228,6 +264,20 @@ class TilePlan:
             for ch in self.channels
         )
 
+    def a2a_dst_tables(self) -> Tuple[Tuple[Tuple[int, ...], ...], ...]:
+        """A2A: rank each rank sends its *own* tile to, per (c, step).
+
+        Step 0 is the local/seed step (identity row).  The combine return
+        destinations need no extra table — they are exactly ``src_tables``
+        (rank j returns step s's partial to sigma(j, s)).
+        """
+        return tuple(
+            tuple(
+                tuple(dst for _, dst in ch.a2a_perm(s)) for s in range(self.steps)
+            )
+            for ch in self.channels
+        )
+
 
 def _directions(order: str, num_channels: int) -> Tuple[int, ...]:
     """Channel -> ring direction.
@@ -286,16 +336,19 @@ def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) 
 
 @dataclasses.dataclass(frozen=True)
 class SeqPlan:
-    """A multi-op plan graph: op N's RS flow feeds op N+1's AG flow.
+    """A multi-op plan graph: op N's outbound flow feeds op N+1's inbound flow.
 
-    The only supported shape today is the layer seam ``matmul_rs ->
-    ag_matmul``: one RS ring pass whose home segments become, in place, the
-    consumer's step-0 local tiles for a second ring pass over the *same* axis
-    and channel split.  The seam-composition invariant (module docstring)
-    guarantees the handoff is rank-local for every order, so the executor
-    (``core/overlap.run_seq_plan``) never materializes the resharded
-    intermediate across a shard_map boundary and never serializes the RS
-    drain against the AG fill.
+    Two shapes are supported: the layer seam ``matmul_rs -> ag_matmul`` (one
+    RS ring pass whose home segments become, in place, the consumer's step-0
+    local tiles for a second ring pass over the *same* axis and channel
+    split), and the expert-parallel MoE pair ``a2a_dispatch -> combine_rs``
+    (each dispatch step's direct pairwise exchange lands token tiles whose
+    expert outputs return along the reversed edge while the next exchange is
+    in flight).  The composition invariants (module docstring) guarantee the
+    handoff is rank-local for every order, so the executors
+    (``core/overlap.run_seq_plan`` / ``run_a2a_seq``) never materialize a
+    resharded intermediate across a shard_map boundary and never serialize
+    the producer drain against the consumer fill.
     """
 
     ops: Tuple[TilePlan, ...]
@@ -304,10 +357,10 @@ class SeqPlan:
         if len(self.ops) != 2:
             raise ValueError(f"SeqPlan supports exactly 2 chained ops, got {len(self.ops)}")
         a, b = self.ops
-        if (a.flow, b.flow) != ("rs", "ag"):
+        if (a.flow, b.flow) not in (("rs", "ag"), ("a2a", "a2a_rs")):
             raise ValueError(
-                f"SeqPlan seam must chain an rs producer into an ag consumer, "
-                f"got flows {(a.flow, b.flow)}"
+                f"SeqPlan must chain an rs producer into an ag consumer or an "
+                f"a2a dispatch into an a2a_rs combine, got flows {(a.flow, b.flow)}"
             )
         if a.axis != b.axis or a.world != b.world or a.num_channels != b.num_channels:
             raise ValueError(

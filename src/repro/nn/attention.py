@@ -208,7 +208,7 @@ def _project_qkv(params, h, pc, lay, hd, qkv=None):
 
 def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
               rope_theta=None, attn_chunk=1024, return_kv=False, tune=False,
-              qkv=None, next_proj=None):
+              qkv=None, next_proj=None, ep=None):
     """Full-sequence attention block body (call inside pc.smap manual region).
 
     x: [B, s_loc, D] sequence-sharded. Returns [B, s_loc, D] (residual added);
@@ -221,8 +221,13 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
     (see :func:`seam_proj`); ``next_proj=(glue, w)`` fuses the output-proj RS
     with the next consumer's AG over one shared ring pass, changing the
     return value to ``(y, next_out)`` (with ``return_kv``: ``(y, next_out,
-    kv)``).
+    kv)``).  ``ep`` is accepted for keyword-surface symmetry across the nn
+    blocks but must be falsy: attention has no expert-parallel form.
     """
+    if ep:
+        raise ValueError(
+            "attention.apply_seq has no expert-parallel form; ep= selects "
+            "the dispatch/combine a2a in moe.apply_seq only")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     lay = _lay(cfg, pc.tp)
@@ -257,7 +262,7 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
 
 
 def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
-                   rope_theta=None, tune=False, next_proj=None):
+                   rope_theta=None, tune=False, next_proj=None, ep=None):
     """AG-Q + ring-KV attention block body (paper Fig. 6 layer form).
 
     Where :func:`apply_seq` gathers the WHOLE qkv projection through the
@@ -282,6 +287,10 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
     heads map to.  The extra wire per tile is ``kv_pad``-fold, still far
     below the ``h``-wide AG of :func:`apply_seq`.
     """
+    if ep:
+        raise ValueError(
+            "attention.apply_seq_ring has no expert-parallel form; ep= "
+            "selects the dispatch/combine a2a in moe.apply_seq only")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     lay = _lay(cfg, pc.tp)

@@ -51,12 +51,15 @@ def seam_proj(params, cfg):
     return (lambda y: rms_norm(y, params["ln"], cfg.norm_eps)), params["w_gu"]
 
 
-def apply_seq(params, x, pc, cfg, *, tune=False, gu=None, next_proj=None):
+def apply_seq(params, x, pc, cfg, *, tune=False, gu=None, next_proj=None,
+              ep=None):
     """x: [B, s_loc, D] -> [B, s_loc, D] (+residual). Inside manual region.
 
     Per-shard w_gu is [D, 2*f_loc] with gate|up halves interleaved per shard
     (column-parallel), so the activation is local.  ``tune=True`` lets each
     collective op resolve its own autotuned BlockChannel (repro.tune).
+    ``ep`` is accepted for keyword-surface symmetry across the nn blocks but
+    must be falsy: a dense MLP has no expert-parallel form.
 
     Inter-op seam fusion (``pc.fuse_seams``): ``gu`` is this layer's gate/up
     projection already produced by the UPSTREAM op's fused RS->AG ring pass
@@ -66,6 +69,10 @@ def apply_seq(params, x, pc, cfg, *, tune=False, gu=None, next_proj=None):
     (e.g. the next layer norm) and ``w`` is the consumer's per-shard weight.
     With ``next_proj`` the return value is ``(y, next_out)``.
     """
+    if ep:
+        raise ValueError(
+            "ffn.apply_seq has no expert-parallel form; ep= selects the "
+            "dispatch/combine a2a in moe.apply_seq only")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     if gu is None:

@@ -12,6 +12,13 @@ consumers have a compute-tile axis in the joint search space).
 Shared experts (DeepSeek-style) run as a dense TP MLP in parallel with the
 routed path (paper §7.3 does the same for Qwen1.5's shared experts).
 
+With ``ParallelContext(ep_axis=...)`` (or ``apply_seq(..., ep=True)``) the
+routed path switches to true expert parallelism: the overlapped
+dispatch/combine all-to-all (``pc.a2a_moe`` -> ``core/moe_overlap.a2a_moe``),
+where token tiles and their routing tables exchange pairwise per step, local
+experts' grouped GEMMs run on landed tiles while the next exchange is in
+flight, and weighted partials return home along the reversed edge.
+
 Expert count is padded up to a multiple of the EP degree; padding experts get
 -inf router logits and are never selected (their weights receive zero gradient
 structurally — no masks needed).
@@ -65,14 +72,38 @@ def specs(cfg, tp: int, dp) -> dict:
     return s
 
 
-def apply_seq(params, x, pc, cfg, *, tune=False):
+def apply_seq(params, x, pc, cfg, *, tune=False, ep=None, next_proj=None):
     """x: [B, s_loc, D] -> ([B, s_loc, D], aux_loss). Inside manual region.
 
     Batch rows are routed/dispatched independently (vmap over B) so the
     DP-sharded batch dim partitions cleanly; capacity is per (batch row,
-    sequence chunk).  ``tune=True`` lets the AG+MoE double ring (and the
+    sequence chunk).  ``tune=True`` lets the routed exchange (and the
     shared-expert MLP, which sees the same pc) resolve autotuned
-    BlockChannels (repro.tune)."""
+    BlockChannels (repro.tune).
+
+    ``ep`` selects the expert-parallel path (``pc.a2a_moe``: overlapped
+    dispatch/combine all-to-all with the routing tables riding the token
+    tiles) instead of the TP AG+MoE double ring (``pc.ag_moe``).  It
+    defaults to whether the context opted in via
+    ``ParallelContext(ep_axis=...)``; passing ``ep=True`` without an
+    ``ep_axis`` raises.  Both paths share capacity/drop semantics.
+
+    ``next_proj`` is accepted for keyword-surface symmetry with
+    ffn/attention ``apply_seq`` but must be None: the MoE combine ends at
+    the residual stream (a reduction, not a projection), so there is no
+    RS -> AG seam to fuse into a downstream consumer.
+    """
+    if next_proj is not None:
+        raise ValueError(
+            "moe.apply_seq does not support next_proj: the MoE combine ends "
+            "at the residual stream, so there is no RS->AG seam to fuse "
+            "into a consumer")
+    if ep is None:
+        ep = pc.ep_axis is not None
+    if ep and pc.ep_axis is None:
+        raise ValueError(
+            "moe.apply_seq(ep=True) requires ParallelContext(ep_axis=...); "
+            "expert parallelism is opt-in")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
     m = cfg.moe
@@ -84,10 +115,11 @@ def apply_seq(params, x, pc, cfg, *, tune=False):
                           top_k=m.top_k, valid_experts=m.num_experts)
 
     ids, wts, aux = jax.vmap(route)(h)  # [B, s_loc, k], aux [B]
+    moe_op = pc.a2a_moe if ep else pc.ag_moe
     out = jax.vmap(
-        lambda t, i, w: pc.ag_moe(t, i, w, params["w_gu"], params["w_down"],
-                                  capacity_factor=m.capacity_factor,
-                                  act=ACTS[cfg.act])
+        lambda t, i, w: moe_op(t, i, w, params["w_gu"], params["w_down"],
+                               capacity_factor=m.capacity_factor,
+                               act=ACTS[cfg.act])
     )(h, ids, wts)
     # aux loss: mean over batch rows + ring members
     aux = jax.lax.pmean(aux.mean(), pc.axis)

@@ -81,8 +81,15 @@ class ParallelContext:
     tune_ranker: Optional[str] = None  # "measure" | "model" | "auto"/None
     fuse_seams: bool = False  # fuse layer RS->AG seams into one ring
                                             # pass (compile_overlap seq form)
+    ep_axis: Optional[str] = None  # expert-parallel opt-in: mesh axis the
+                                            # MoE dispatch/combine a2a runs
+                                            # over (usually == axis)
 
     def __post_init__(self):
+        if self.ep_axis is not None and self.ep_axis not in dict(self.mesh.shape):
+            raise ValueError(
+                f"ep_axis {self.ep_axis!r} is not a mesh axis "
+                f"(mesh axes: {tuple(dict(self.mesh.shape))})")
         if self.channel is None:
             object.__setattr__(self, "channel", BlockChannel(axis=self.axis))
         elif self.channel.axis != self.axis:
@@ -196,6 +203,37 @@ class ParallelContext:
             "ag_moe", (jnp.shape(x), jnp.shape(ids), jnp.shape(wts),
                        jnp.shape(w_gu), jnp.shape(w_down)),
         )(x, ids, wts, w_gu, w_down, **kw)
+
+    def a2a_moe(self, x, ids, wts, w_gu, w_down, **kw):
+        """Expert-parallel MoE: overlapped dispatch/combine all-to-all.
+
+        Lowers the ``["a2a_dispatch", "combine_rs"]`` pair through
+        ``compile_overlap`` over ``ep_axis``: each step's direct pairwise
+        exchange lands a peer's token tile + routing tables, the local
+        experts' grouped GEMM runs while the next exchange is in flight, and
+        the weighted partial returns home along the reversed edge.  Requires
+        ``ParallelContext(ep_axis=...)`` — expert parallelism is opt-in.
+        ``mode="baseline"`` (or an unfused tuner verdict under ``tune=True``)
+        runs ``a2a_moe_baseline`` with identical capacity/drop semantics.
+        """
+        if self.ep_axis is None:
+            raise ValueError(
+                "a2a_moe requires ParallelContext(ep_axis=...); expert "
+                "parallelism is opt-in (use ag_moe for the TP MoE path)")
+        ch = self.channel if self.ep_axis == self.axis else self.channel.with_(
+            axis=self.ep_axis)
+        ops = ["a2a_dispatch", "combine_rs"]
+        if self.tune and self.mode == "overlap":
+            from repro.tune import JOINT_SPACE
+
+            fn = compile_overlap(
+                ops, channel="auto", axis=self.ep_axis, mesh=self.mesh,
+                tune_ranker=self.tune_ranker, tune_base=ch,
+                tune_space=JOINT_SPACE)
+        else:
+            fn = compile_overlap(
+                ops, channel=ch, overlapped=(self.mode == "overlap"))
+        return fn(x, ids, wts, w_gu, w_down, **kw)
 
     def psum(self, x):
         return lax.psum(x, self.axis)

@@ -59,16 +59,20 @@ from repro.tune import cost as _cost
 from repro.tune import measure as _measure
 from repro.tune import sweep as _sweep
 from repro.tune.candidates import (
+    A2A_SEQ_KIND,
     COMP_TILE_LATTICE,
     DEFAULT_SPACE,
     GEMM_TILE_KINDS,
     JOINT_SPACE,
+    MOE_SIG_KINDS,
     SEQ_KIND,
     Candidate,
     Space,
     TUNABLE_KINDS,
+    a2a_sigs,
     chunk_extent,
     comp_tile_candidates,
+    enumerate_a2a_candidates,
     enumerate_candidates,
     enumerate_seq_candidates,
     seq_sigs,
@@ -79,6 +83,7 @@ __all__ = [
     "autotune",
     "resolve_channel",
     "resolve_seq",
+    "resolve_a2a",
     "TuneResult",
     "Space",
     "Candidate",
@@ -88,12 +93,16 @@ __all__ = [
     "GEMM_TILE_KINDS",
     "TUNABLE_KINDS",
     "SEQ_KIND",
+    "A2A_SEQ_KIND",
+    "MOE_SIG_KINDS",
     "RANKERS",
     "CACHE_SCHEMA",
     "signature",
     "enumerate_candidates",
     "enumerate_seq_candidates",
+    "enumerate_a2a_candidates",
     "seq_sigs",
+    "a2a_sigs",
     "comp_tile_candidates",
     "chunk_extent",
 ]
@@ -379,6 +388,75 @@ def resolve_seq(
         ch = best_f.channel(axis, base)
         return True, ch, ch
     return False, res_rs.channel, res_ag.channel
+
+
+def resolve_a2a(
+    *,
+    shapes: Optional[Sequence[Tuple[int, ...]]] = None,
+    sig: Optional[Sequence[int]] = None,
+    mesh=None,
+    axis: str = "model",
+    world: Optional[int] = None,
+    base: Optional[BlockChannel] = None,
+    ranker: Optional[str] = None,
+    space: Space = DEFAULT_SPACE,
+    capacity_factor: Optional[float] = None,
+    imbalance: Optional[float] = None,
+) -> Tuple[bool, BlockChannel, BlockChannel]:
+    """Joint resolution for ``compile_overlap(["a2a_dispatch", "combine_rs"],
+    channel="auto")``.
+
+    Returns ``(fused, ch_dispatch, ch_combine)``: whether to run the
+    overlapped expert-parallel pipeline, and the channel for each half.
+    The overlapped program is priced over the shared-channel candidates
+    (``enumerate_a2a_candidates`` — every point already model-checked as a
+    full dispatch -> GEMM -> combine protocol) with the pipeline overlap
+    credited (``cost.a2a_saving``); the split program prices the same
+    exchange without the credit, which is what ``a2a_moe_baseline`` (bulk
+    all_gather + psum_scatter) degrades to.  Because the credit is strictly
+    positive, unfused only wins when NO legal shared-channel candidate
+    exists (e.g. a world the order cannot schedule) — the baseline then
+    keeps numerical parity while the verifier keeps its guarantees.
+
+    ``capacity_factor``/``imbalance`` fold into the signature's quantized
+    MoE workload axes (``signature(..., imbalance=, capacity=)``) so tight
+    capacities and hot experts rank their own winners.  Pure host-side
+    model arithmetic (the a2a halves have no single-op measured path), so
+    this is trace-safe like :func:`resolve_seq`; ``ranker`` is accepted for
+    signature symmetry and reserved for a future measured path.
+    """
+    del ranker  # model-ranked (see docstring)
+    if world is None and mesh is not None:
+        world = int(mesh.shape[axis])
+    if world is None:
+        raise ValueError("resolve_a2a needs a mesh or an explicit world size")
+    if sig is None:
+        if shapes is None:
+            raise ValueError("resolve_a2a needs shapes or a signature")
+        shapes = [tuple(s) for s in shapes]
+        cap_rows = None
+        if capacity_factor is not None:
+            from repro.core.moe_overlap import _capacity
+
+            m_loc, top_k, e_loc = shapes[0][-2], shapes[1][-1], shapes[3][0]
+            cap_rows = _capacity(
+                int(m_loc), int(top_k), max(1, int(e_loc) * world), float(capacity_factor)
+            )
+        sig = signature(A2A_SEQ_KIND, shapes, imbalance=imbalance, capacity=cap_rows)
+    sig = tuple(int(s) for s in sig)
+
+    best, best_score = None, float("inf")
+    for cand in enumerate_a2a_candidates(sig=sig, world=world, space=space):
+        score = _cost.predict_a2a_cost(sig, world, cand, fused=True)
+        if score < best_score:  # strict: ties keep enumeration order
+            best, best_score = cand, score
+
+    if best is None:
+        ch = base or BlockChannel(axis=axis)
+        ch = ch.with_(axis=axis)
+        return False, ch, ch
+    ch = best.channel(axis, base)
+    return True, ch, ch
 
 
 def resolve_channel(

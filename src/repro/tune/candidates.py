@@ -46,11 +46,15 @@ __all__ = [
     "COMP_TILE_LATTICE",
     "GEMM_TILE_KINDS",
     "SEQ_KIND",
+    "A2A_SEQ_KIND",
+    "MOE_SIG_KINDS",
     "enumerate_candidates",
     "enumerate_seq_candidates",
+    "enumerate_a2a_candidates",
     "comp_tile_candidates",
     "signature",
     "seq_sigs",
+    "a2a_sigs",
     "chunk_extent",
 ]
 
@@ -59,6 +63,15 @@ TUNABLE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention", "ag_moe")
 # the fused RS -> AG layer seam (compile_overlap seq form); tuned through its
 # shared-channel enumerator + seam-aware cost, not the single-op paths above
 SEQ_KIND = "seq_rs_ag"
+
+# the expert-parallel MoE dispatch -> combine exchange (compile_overlap
+# ["a2a_dispatch", "combine_rs"]); tuned through enumerate_a2a_candidates +
+# cost.predict_a2a_cost, resolved jointly by tune.resolve_a2a
+A2A_SEQ_KIND = "seq_a2a_moe"
+
+# kinds whose signature may carry the optional trailing MoE workload axes
+# (expert imbalance, capacity) — see signature()
+MOE_SIG_KINDS = ("ag_moe", A2A_SEQ_KIND)
 
 # kinds whose consumer compute is a plain GEMM the (tm, tn, tk) tile blocks
 # directly; the attention and MoE consumers interpret the same tile through
@@ -168,8 +181,10 @@ def _tile_dims(
     if kind == "ag_attention":
         _b, _h, _hkv, s_loc, d = sig
         return s_loc, d, max(1, s_loc // nch)
-    if kind == "ag_moe":
-        m_loc, d_model, _top_k, _e_loc, d_exp = sig
+    if kind in ("ag_moe", "a2a_dispatch"):
+        # sig[:5] — MoE signatures may carry trailing (imbalance, capacity)
+        # workload axes the tile lattice never reads
+        m_loc, d_model, _top_k, _e_loc, d_exp = sig[:5]
         return max(1, m_loc // nch), 2 * d_exp, d_model
     return None
 
@@ -294,8 +309,27 @@ def enumerate_candidates(
     return tuple(out)
 
 
+def _moe_axes(imbalance, capacity) -> Tuple[int, ...]:
+    """Quantized optional MoE workload axes appended to a MoE signature.
+
+    ``imbalance`` (hottest-expert load over the balanced mean, >= 1.0)
+    quantizes to quarter-units so near-identical routing skews share one
+    cache entry; ``capacity`` (per-expert row budget) quantizes up to the
+    8-row sublane, matching ``moe_overlap._capacity``.  Capacity implies the
+    imbalance slot (default balanced) so positions stay unambiguous:
+    ``sig[5]`` is always imbalance, ``sig[6]`` always capacity.
+    """
+    if imbalance is None and capacity is None:
+        return ()
+    axes = (max(4, int(round(4.0 * float(1.0 if imbalance is None else imbalance)))),)
+    if capacity is not None:
+        axes += (max(8, -(-int(capacity) // 8) * 8),)
+    return axes
+
+
 def signature(kind: str, shapes: Sequence[Tuple[int, ...]],
-              decode: bool = False) -> Tuple[int, ...]:
+              decode: bool = False, *, imbalance=None,
+              capacity=None) -> Tuple[int, ...]:
     """Canonical shape signature from *per-shard* operand shapes.
 
     Takes the positional operand shapes exactly as the ``compile_overlap``
@@ -307,11 +341,22 @@ def signature(kind: str, shapes: Sequence[Tuple[int, ...]],
     entries (and resolve their own joint winners) instead of aliasing the
     prefill entry for the same dims.  Cost-model consumers read
     ``abs(sig[0])``; the tile lattice never reads the lead at all.
+
+    MoE kinds (``ag_moe`` and the ``seq_a2a_moe`` pair) may append the
+    optional quantized workload axes ``imbalance``/``capacity`` (see
+    :func:`_moe_axes`): routing skew and capacity both move the tuning
+    landscape (a hot expert gates the grouped GEMM; a tight capacity bounds
+    it), so they are part of a result's identity.  Every signature consumer
+    slices the shape half with ``sig[:5]``.
     """
     if decode and kind not in GEMM_TILE_KINDS:
         raise ValueError(
             f"decode signatures are defined for the GEMM kinds "
             f"{GEMM_TILE_KINDS}, not {kind!r}")
+    if (imbalance is not None or capacity is not None) and kind not in MOE_SIG_KINDS:
+        raise ValueError(
+            f"imbalance/capacity signature axes are defined for the MoE "
+            f"kinds {MOE_SIG_KINDS}, not {kind!r}")
 
     def _lead(x):
         lead = math.prod(x[:-2]) if len(x) > 2 else 1
@@ -332,10 +377,13 @@ def signature(kind: str, shapes: Sequence[Tuple[int, ...]],
         # s_loc comes from K: the KV shard is the ring extent — queries may
         # arrive gathered (the AG-Q + ring-KV layer form)
         return (q[0], q[1], k[1], k[2], q[3])  # (b, h, hkv, s_loc, d)
-    if kind == "ag_moe":
+    if kind in MOE_SIG_KINDS:
+        # ag_moe and the a2a pair take the same operand order
+        # (x, topk_ids, topk_w, w_gu, w_down)
         x, ids, w_gu = shapes[0], shapes[1], shapes[3]
-        # (m_loc, d_model, top_k, e_loc, d_expert)
-        return (x[-2], x[-1], ids[-1], w_gu[0], w_gu[-1] // 2)
+        # (m_loc, d_model, top_k, e_loc, d_expert) + optional workload axes
+        base = (x[-2], x[-1], ids[-1], w_gu[0], w_gu[-1] // 2)
+        return base + _moe_axes(imbalance, capacity)
     raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
 
 
@@ -396,6 +444,61 @@ def enumerate_seq_candidates(
     return tuple(out)
 
 
+def a2a_sigs(sig: Tuple[int, ...], world: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Split a ``seq_a2a_moe`` signature into its per-kind signatures.
+
+    Unlike the RS -> AG seam, both halves of the MoE exchange see the SAME
+    token extent — dispatch carries the tiles out, combine returns the
+    weighted partials over the reverse of the same pairing — so both get the
+    full signature (the combine's cost terms only read ``sig[:2]``).
+    """
+    sig = tuple(sig)
+    return sig, sig
+
+
+def enumerate_a2a_candidates(
+    *,
+    sig: Sequence[int],
+    world: int,
+    space: Space = DEFAULT_SPACE,
+) -> Tuple[Candidate, ...]:
+    """Shared-channel feasible design points for the MoE dispatch/combine
+    exchange.
+
+    Both halves chunk the same ``m_loc`` token extent, so (unlike the RS ->
+    AG seam) every requested count clamps identically for the pair — there
+    is no divergence case to degrade on.  Each surviving (order, C) point is
+    statically verified as a full dispatch -> combine program
+    (``analysis.check_a2a_candidate``: exchange legality, seam composition,
+    protocol model check); compute tiles are pruned against the dispatch
+    half's per-expert grouped GEMM.
+    """
+    from repro.analysis import check_a2a_candidate
+
+    sig = tuple(int(s) for s in sig)
+    m_loc = sig[0]
+    if world < 1:
+        return ()
+    out, seen = [], set()
+    for order in space.orders:
+        for req in space.channel_counts:
+            nch = effective_channels(m_loc, req, kind="a2a_dispatch", warn=False)
+            if check_a2a_candidate(order, world, nch) is not None:
+                continue
+            for accum in space.accum_dtypes:
+                tiles = comp_tile_candidates(
+                    "a2a_dispatch", sig, world=world, nch=nch, accum_dtype=accum, space=space
+                )
+                for tile in tiles:
+                    cand = Candidate(
+                        order=order, num_channels=nch, accum_dtype=accum, comp_tile=tile
+                    )
+                    if cand not in seen:
+                        seen.add(cand)
+                        out.append(cand)
+    return tuple(out)
+
+
 def chunk_extent(kind: str, sig: Tuple[int, ...]) -> int:
     """The extent ``num_channels`` chunks for ``kind`` (what C must divide)."""
     if kind == "ag_matmul":
@@ -404,6 +507,6 @@ def chunk_extent(kind: str, sig: Tuple[int, ...]) -> int:
         return sig[3]  # n columns of the partial
     if kind == "ag_attention":
         return sig[3]  # s_loc KV rows of the local shard
-    if kind == "ag_moe":
+    if kind in ("ag_moe", "a2a_dispatch", "combine_rs"):
         return sig[0]  # m_loc token rows of the local chunk
     raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")

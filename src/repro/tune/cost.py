@@ -15,7 +15,9 @@ vs. per-tile FLOPs over peak, composed into a pipelined makespan:
 
 Order effects: a bidirectional ring with >= 2 channels splits traffic across
 both ICI link directions (halving per-link bytes); all2all pays the mean ring
-distance (R/4 hops) per payload on a physical ring/torus.  The flow dtype
+distance per payload on a physical ring/torus — computed from the actual
+``schedules.all2all_peer`` tables (``_order_hops``), never a closed-form
+guess, so cost and schedule agree for non-power-of-2 worlds too.  The flow dtype
 scales wire bytes only for flows whose *partials* travel (rs / ag_rs); for
 pure AG flows the input tiles travel in their own dtype, so the model is
 flow-dtype-neutral there and the enumeration order (float32 first) breaks the
@@ -53,14 +55,23 @@ absolute calibration is not critical.
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import schedules
 from repro.core.comp_tiles import DEFAULT_TILE, largest_divisor, resolve_tile, tile_footprint_bytes
 from repro.launch.roofline import HW
-from repro.tune.candidates import Candidate, GEMM_TILE_KINDS, _tile_dims, chunk_extent, seq_sigs
+from repro.tune.candidates import (
+    Candidate,
+    GEMM_TILE_KINDS,
+    _tile_dims,
+    a2a_sigs,
+    chunk_extent,
+    seq_sigs,
+)
 
 __all__ = [
     "ALPHA_S",
@@ -71,6 +82,8 @@ __all__ = [
     "predict_cost",
     "seam_saving",
     "predict_seq_cost",
+    "a2a_saving",
+    "predict_a2a_cost",
 ]
 
 # per-transfer launch/synchronization latency (seconds); the alpha of a
@@ -96,8 +109,51 @@ _SOFTMAX_OPS = 8.0
 _VPU_FRACTION = 1.0 / 16.0
 
 
+# bytes per (token, slot) routing entry riding a dispatch tile: one int32
+# expert id plus one float32 gate weight (the paper's f_R/f_S travel with data)
+_ROUTE_BYTES = 8
+
+
 def _flow_bytes(accum_dtype: str) -> int:
     return jnp.dtype(accum_dtype).itemsize
+
+
+@functools.lru_cache(maxsize=None)
+def _order_hops(order: str, world: int) -> float:
+    """Mean ring-distance per payload of one schedule step for ``order``.
+
+    Derived from the actual peer tables (``schedules.all2all_peer``) rather
+    than a closed form, so the cost model and the baked schedule cannot
+    disagree — in particular for non-power-of-2 worlds, where the all2all
+    order falls back to rotation peers instead of XOR pairing.  Ring orders
+    always step to a physical neighbor (one hop).
+    """
+    if order != "all2all" or world <= 1:
+        return 1.0
+    total = 0
+    for s in range(1, world):
+        for r in range(world):
+            p = schedules.all2all_peer(r, s, world)
+            total += min((p - r) % world, (r - p) % world)
+    return max(1.0, total / float((world - 1) * world))
+
+
+def _moe_rows(sig: Tuple[int, ...], world: int) -> float:
+    """Effective grouped-GEMM token rows per step for a MoE signature.
+
+    The base count is ``m_loc * top_k`` assignment rows.  The optional MoE
+    signature axes refine it: ``sig[5]`` is the hottest-expert imbalance in
+    quarter-units (4 == balanced; a hot expert gates the grouped GEMM), and
+    ``sig[6]`` is the per-expert capacity row count (dropping bounds the
+    work from above, so an aggressively low capacity factor models faster).
+    """
+    m_loc, _d_model, top_k, e_loc, _d_exp = sig[:5]
+    rows = float(m_loc * max(1, top_k))
+    if len(sig) > 5:
+        rows *= max(1.0, sig[5] / 4.0)
+    if len(sig) > 6:
+        rows = min(rows, float(max(1, e_loc * world) * sig[6]))
+    return rows
 
 
 def step_terms(
@@ -126,11 +182,24 @@ def step_terms(
         wire = 2.0 * b * hkv * s_loc * d * _TILE_BYTES  # K and V tiles
         flops = 4.0 * b * h * s_loc * s_loc * d  # QK^T + PV
     elif kind == "ag_moe":
-        m_loc, d_model, top_k, e_loc, d_exp = sig
+        m_loc, d_model, _top_k, _e_loc, d_exp = sig[:5]
         # double ring: token tiles flow forward AND the combined reduction
         # rides the same permutes (in the flow dtype)
         wire = m_loc * d_model * (_TILE_BYTES + fb)
-        flops = 6.0 * m_loc * d_model * d_exp * max(1, top_k)
+        flops = 6.0 * _moe_rows(sig, world) * d_model * d_exp
+    elif kind == "a2a_dispatch":
+        m_loc, d_model, top_k, _e_loc, d_exp = sig[:5]
+        # pairwise exchange of original token tiles plus the routing tables
+        # (expert ids + gate weights) that travel with them
+        wire = m_loc * d_model * _TILE_BYTES + m_loc * max(1, top_k) * _ROUTE_BYTES
+        # the expert FFN on landed tiles runs while the next exchange flies
+        flops = 6.0 * _moe_rows(sig, world) * d_model * d_exp
+    elif kind == "combine_rs":
+        m_loc, d_model = sig[0], sig[1]
+        # weighted partials return straight home in the flow dtype; the only
+        # compute on this half is the per-token accumulate
+        wire = m_loc * d_model * fb
+        flops = 2.0 * m_loc * d_model
     else:
         raise ValueError(f"no cost model for kind {kind!r}")
     return float(wire), float(flops)
@@ -233,13 +302,16 @@ def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate)
         t_mem = bytes_touched / HW["hbm_bw"]
         return max(t_flops + t_soft, t_mem) + BETA_TILE_S * n_tiles
 
-    # ag_moe: per-expert grouped GEMMs over capacity-sized token groups
-    m_loc, d_model, top_k, e_loc, _d_exp = sig
+    # ag_moe / a2a_dispatch: per-expert grouped GEMMs over capacity-sized
+    # token groups
+    m_loc, d_model, top_k, e_loc, _d_exp = sig[:5]
     e_total = max(1, e_loc * world)
     m_sub = max(1, m_loc // nch)
     # per-expert row count: the capacity proxy (moe_overlap._capacity with
     # factor 1 — rounded up to the 8-row sublane)
     rows = max(8, ((m_sub * max(1, top_k) + e_total - 1) // e_total + 7) // 8 * 8)
+    if len(sig) > 6:  # the signature's capacity axis caps the expert groups
+        rows = min(rows, int(sig[6]))
     tm_e = min(tm, rows)
     row_tiles = -(-rows // tm_e)
     occupancy = rows / float(row_tiles * tm_e)  # last-row-tile padding waste
@@ -260,7 +332,7 @@ def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -
 
     # per-link effective bytes for this tile order
     dirs = 2.0 if (cand.order == "bidir_ring" and cand.num_channels >= 2) else 1.0
-    hops = max(1.0, world / 4.0) if cand.order == "all2all" else 1.0
+    hops = _order_hops(cand.order, world)
 
     t_comm = wire * hops / (HW["link_bw"] * dirs)
     t_comp = comp_step_time(kind, sig, world, cand)
@@ -276,7 +348,7 @@ def _fill_drain_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidat
     ``predict_cost``'s ``fill``)."""
     wire, _ = step_terms(kind, sig, world, cand.accum_dtype)
     dirs = 2.0 if (cand.order == "bidir_ring" and cand.num_channels >= 2) else 1.0
-    hops = max(1.0, world / 4.0) if cand.order == "all2all" else 1.0
+    hops = _order_hops(cand.order, world)
     t_comm = wire * hops / (HW["link_bw"] * dirs)
     t_comp = comp_step_time(kind, sig, world, cand)
     return (t_comm + t_comp) / cand.num_channels
@@ -314,6 +386,39 @@ def predict_seq_cost(
     )
     if fused:
         total -= seam_saving(sig, world, cand)
+    return total
+
+
+def a2a_saving(sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
+    """Modeled time the overlapped dispatch/combine pipeline removes vs.
+    running the two exchanges back to back (seconds).
+
+    In the overlapped executor the combine of step ``s`` flies while the
+    dispatch of step ``s + 1`` is in flight (``core/overlap.run_a2a_seq``),
+    so — exactly like :func:`seam_saving` — the shorter half's fill/drain
+    tail hides inside the longer one.  Strictly positive, so a legal
+    overlapped plan is never modeled slower than the same candidate split.
+    """
+    d_sig, c_sig = a2a_sigs(tuple(sig), world)
+    return min(
+        _fill_drain_time("a2a_dispatch", d_sig, world, cand),
+        _fill_drain_time("combine_rs", c_sig, world, cand),
+    )
+
+
+def predict_a2a_cost(
+    sig: Tuple[int, ...], world: int, cand: Candidate, *, fused: bool = True
+) -> float:
+    """Predicted makespan (seconds) of the MoE dispatch -> combine exchange
+    under one shared candidate: the two per-kind makespans, minus the
+    overlap credit when fused.  ``fused=False`` models the unfused
+    ``a2a_moe_baseline`` style split (dispatch fully lands, then combine)."""
+    d_sig, c_sig = a2a_sigs(tuple(sig), world)
+    total = predict_cost("a2a_dispatch", d_sig, world, cand) + predict_cost(
+        "combine_rs", c_sig, world, cand
+    )
+    if fused:
+        total -= a2a_saving(sig, world, cand)
     return total
 
 
