@@ -1,0 +1,244 @@
+"""Quantized-flows bench + CI smoke (``--smoke`` -> ``BENCH_quant.json``).
+
+The QuantSpec claim made gateable, four ways:
+
+  * **modeled** — for every comm-bound GEMM shape the best int8-wire
+    candidate must beat the best full-precision candidate on the MODELED
+    cost scale: the int8 wire quarters bytes-on-wire at a fixed scale-table
+    overhead, so a non-win means the wire pricing (``tune/cost.step_terms``
+    with ``wire_dtype``) or the flow-axis enumeration broke;
+  * **resolve** — ``channel="auto"`` with the quant-widened space must
+    actually explore the flow axis end-to-end and return an int8 winner on
+    a comm-bound shape (``result.candidate.flow == "int8"``);
+  * **measured** — the int8-wire executor must stay within tolerance of the
+    full-precision path on a real (emulated) mesh, and the fp32 wire must
+    stay BITWISE identical to the pre-quant default;
+  * **migration** — a schema-3 cache record (pre flow axis) must re-tune
+    silently and be rewritten as schema 4 with the winner's ``flow``.
+
+Modeled costs land under ungated ``*_modeled_us`` leaves; the ``ok`` health
+leaves gate exactly via benchmarks/compare.py.  Any violation exits non-zero
+so CI fails loudly.
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import tune
+from repro.compat import shard_map
+from repro.core import BlockChannel, compile_overlap
+from repro.core.quant import QuantSpec
+from repro.tune import cost as tune_cost
+from repro.tune.candidates import QUANT_SPACE, enumerate_candidates
+
+try:  # package import (python -m benchmarks.quant_bench / pytest)
+    from benchmarks.common import mesh_tp, row, time_fn
+except ImportError:  # plain script: the benchmarks/ dir is sys.path[0]
+    from common import mesh_tp, row, time_fn
+
+WORLD = 4
+
+# comm-bound GEMM signatures: narrow contraction per byte moved, so the wire
+# gates the pipeline and the int8 repricing shows.  matmul_rs sigs are
+# (lead, m_glob, k_loc, n); ag_matmul sigs are (lead, m_loc, k, n_loc).
+SHAPES = {
+    "rs-long-seq": ("matmul_rs", (1, 2048, 32, 2048)),
+    "rs-wide-out": ("matmul_rs", (1, 1024, 128, 4096)),
+    "ag-deep-k": ("ag_matmul", (1, 512, 4096, 512)),
+}
+# compute-bound control: int8 may NOT win here (overlap already hides the
+# wire); keeps the flow axis honest in both directions
+CONTROL = ("matmul_rs", (1, 256, 2048, 256))
+
+
+def _best(kind, sig, flow):
+    """(cost_us, candidate) of the cheapest design point at one wire flow."""
+    cands = [c for c in enumerate_candidates(
+        kind, space=QUANT_SPACE, sig=sig, world=WORLD) if c.flow == flow]
+    if not cands:
+        raise ValueError(f"no flow={flow!r} candidates for {kind} sig={sig}")
+    best = min(cands, key=lambda c: tune_cost.predict_cost(kind, sig, WORLD, c))
+    return tune_cost.predict_cost(kind, sig, WORLD, best) * 1e6, best
+
+
+def _jit(mesh, fn):
+    f = shard_map(fn, mesh, in_specs=(P(None, None), P(None, None)),
+                  out_specs=P("model", None), check_rep=False,
+                  axis_names={"model"})
+    return jax.jit(f)
+
+
+def smoke(out_path: str = "BENCH_quant.json") -> int:
+    results, failures = {"shapes": {}}, []
+
+    # ---- modeled: int8 wire beats full precision on comm-bound shapes ------
+    for name, (kind, sig) in SHAPES.items():
+        entry = {"kind": kind, "signature": list(sig)}
+        try:
+            f32_us, _ = _best(kind, sig, None)
+            int8_us, cand = _best(kind, sig, "int8")
+            ok = int8_us < f32_us
+            if not ok:
+                failures.append(
+                    f"{name}: int8 wire modeled {int8_us:.1f}us does not beat "
+                    f"full precision {f32_us:.1f}us on a comm-bound shape — "
+                    f"the wire repricing is dead")
+            entry.update(
+                winner=cand.label(),
+                f32_modeled_us=round(f32_us, 3),
+                int8_modeled_us=round(int8_us, 3),
+                ok=ok,
+            )
+            row(f"quant/{name}/modeled/{cand.label()}", int8_us,
+                f"f32 {f32_us:.0f}us ({f32_us / max(int8_us, 1e-9):.2f}x)")
+        except Exception as exc:  # loud: any flow-axis error fails CI
+            failures.append(f"{name}: {type(exc).__name__}: {exc}")
+            entry["error"] = str(exc)
+        results["shapes"][name] = entry
+
+    # ---- resolve: channel="auto" explores the flow axis end-to-end ---------
+    try:
+        kind, sig = SHAPES["rs-long-seq"]
+        with tempfile.TemporaryDirectory() as tmp:
+            res = tune.autotune(kind, signature=sig, world=WORLD,
+                                axis="model", ranker="model",
+                                space=QUANT_SPACE, cache_dir=tmp)
+        ok = res.candidate.flow == "int8"
+        if not ok:
+            failures.append(
+                f"resolve: auto winner flow={res.candidate.flow!r} on a "
+                f"comm-bound shape (expected 'int8')")
+        quant = res.channel.quant
+        results["resolve"] = {
+            "winner": res.candidate.label(),
+            "flow": res.candidate.flow,
+            "wire_dtype": None if quant is None else quant.wire_dtype,
+            "ok": ok,
+        }
+    except Exception as exc:
+        failures.append(f"resolve: {type(exc).__name__}: {exc}")
+        results["resolve"] = {"error": str(exc), "ok": False}
+
+    # ---- control: compute-bound shape records its verdict (ungated) --------
+    try:
+        kind, sig = CONTROL
+        f32_us, _ = _best(kind, sig, None)
+        int8_us, _ = _best(kind, sig, "int8")
+        results["control"] = {
+            "kind": kind, "signature": list(sig),
+            "f32_modeled_us": round(f32_us, 3),
+            "int8_modeled_us": round(int8_us, 3),
+            "int8_wins": bool(int8_us < f32_us),
+        }
+    except Exception as exc:
+        failures.append(f"control: {type(exc).__name__}: {exc}")
+        results["control"] = {"error": str(exc)}
+
+    # ---- measured: int8 parity within tolerance; fp32 wire bitwise ---------
+    try:
+        mesh = mesh_tp(WORLD)
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (256, 128), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 256), jnp.float32) * 0.1
+        ch = BlockChannel(axis="model")
+        f_f32 = _jit(mesh, compile_overlap("matmul_rs", ch))
+        f_int8 = _jit(mesh, compile_overlap(
+            "matmul_rs", ch, quant=QuantSpec(wire_dtype="int8")))
+        f_wire32 = _jit(mesh, compile_overlap(
+            "matmul_rs", ch, quant=QuantSpec(wire_dtype="float32")))
+        y_f32, y_int8, y_wire32 = f_f32(x, w), f_int8(x, w), f_wire32(x, w)
+        rel = float(jnp.linalg.norm(y_int8 - y_f32) / jnp.linalg.norm(y_f32))
+        parity_ok = rel < 0.05  # per-tile symmetric absmax: elemwise <= scale/2
+        bitwise_ok = bool(jnp.all(y_wire32 == y_f32))
+        if not parity_ok:
+            failures.append(f"measured: int8 wire relative error {rel:.3e} "
+                            f"exceeds the 5% smoke tolerance")
+        if not bitwise_ok:
+            failures.append("measured: fp32 wire is not bitwise identical to "
+                            "the pre-quant default path")
+        int8_us = time_fn(f_int8, x, w)
+        f32_us = time_fn(f_f32, x, w)
+        results["measured"] = {
+            "int8": {"us": round(int8_us, 1)},
+            "f32": {"us": round(f32_us, 1)},
+            "rel_err": rel,
+            "bitwise_f32_wire": bitwise_ok,
+            "ok": parity_ok and bitwise_ok,
+        }
+        row("quant/measured/int8", int8_us, f"rel_err {rel:.2e}")
+        row("quant/measured/f32", f32_us)
+    except Exception as exc:  # loud: the executor path must run on CPU
+        failures.append(f"measured: {type(exc).__name__}: {exc}")
+        results["measured"] = {"error": str(exc), "ok": False}
+
+    # ---- migration: schema-3 records re-tune into schema-4 entries ---------
+    try:
+        from repro.tune import CACHE_SCHEMA, _entry_key, _parse_record
+        from repro.tune import cache as tune_cache
+
+        kind, sig = SHAPES["rs-long-seq"]
+        with tempfile.TemporaryDirectory() as tmp:
+            fp = tune_cache.mesh_fingerprint(None, axis="model", world=WORLD)
+            key = _entry_key(kind, "model", WORLD, sig, QUANT_SPACE)
+            v3 = {"schema": 3, "kind": kind, "signature": list(sig),
+                  "world": WORLD, "order": "ring", "num_channels": 1,
+                  "accum_dtype": "float32", "comp_tile": [64, 128, 128],
+                  "ranker": "model", "score": 1.0}
+            tune_cache.store_entry(fp, key, v3, directory=tmp)
+            stale_rejected = _parse_record(v3) is None
+            res = tune.autotune(kind, signature=sig, world=WORLD,
+                                axis="model", ranker="model",
+                                space=QUANT_SPACE, cache_dir=tmp)
+            rec = tune_cache.load_entry(fp, key, directory=tmp)
+        migrated = rec is not None and int(rec.get("schema", 0)) == CACHE_SCHEMA
+        has_flow = rec is not None and "flow" in rec
+        ok = stale_rejected and migrated and has_flow
+        if not ok:
+            failures.append(
+                f"migration: stale_rejected={stale_rejected} "
+                f"migrated={migrated} has_flow={has_flow} — v3 records must "
+                f"re-tune into schema-{CACHE_SCHEMA} entries carrying 'flow'")
+        results["migration"] = {
+            "stale_rejected": stale_rejected,
+            "schema": None if rec is None else rec.get("schema"),
+            "winner_flow": None if rec is None else rec.get("flow"),
+            "retuned_winner": res.candidate.label(),
+            "ok": ok,
+        }
+    except Exception as exc:
+        failures.append(f"migration: {type(exc).__name__}: {exc}")
+        results["migration"] = {"error": str(exc), "ok": False}
+
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {len(results['shapes'])} shapes, "
+          f"{len(failures)} failures")
+    for f_ in failures:
+        print(f"FAIL {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> int:
+    print(f"# modeled int8-wire vs full-precision cost per shape (world={WORLD})")
+    for name, (kind, sig) in list(SHAPES.items()) + [("control", CONTROL)]:
+        f32_us, _ = _best(kind, sig, None)
+        int8_us, cand = _best(kind, sig, "int8")
+        row(f"quant/{name}/{cand.label()}", int8_us,
+            f"f32 {f32_us:.0f}us ({f32_us / max(int8_us, 1e-9):.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: gate the int8-win/parity/migration "
+                         "contract, write BENCH_quant.json")
+    ap.add_argument("--out", default="BENCH_quant.json")
+    args = ap.parse_args()
+    sys.exit(smoke(args.out) if args.smoke else main())

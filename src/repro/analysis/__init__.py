@@ -19,6 +19,7 @@ from repro.analysis.ir import PlanTables
 from repro.analysis.verify import (
     check_a2a_candidate,
     check_candidate,
+    check_quant,
     check_seq_candidate,
     verify_plan,
     verify_seq_plan,
@@ -34,6 +35,7 @@ __all__ = [
     "PlanTables",
     "check_a2a_candidate",
     "check_candidate",
+    "check_quant",
     "check_seq_candidate",
     "verify_plan",
     "verify_seq_plan",

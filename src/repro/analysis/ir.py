@@ -41,6 +41,13 @@ class PlanTables:
     rs_dst: Optional[Table]  # RS push destination (last row identity, unused)
     align: Tuple[Tuple[int, ...], ...]  # [channel][rank] ag_rs final-hop dst
     a2a_dst: Optional[Table] = None  # a2a direct-exchange destination (step 0 identity)
+    # quant snapshot (wire-edge dtype split).  All None on duck-typed plan
+    # objects without a QuantSpec — the quant pass then evaluates 0 checks,
+    # so the mutation suite's hand-built tables are unaffected.
+    accum_dtype: Optional[str] = None  # reduction dtype
+    wire_dtype: Optional[str] = None  # dtype travelling the permutes
+    granularity: Optional[str] = None  # scale granularity (per_tile/per_channel)
+    scale_slots: Optional[int] = None  # scale-table coverage the plan allocates
 
     @classmethod
     def from_plan(cls, plan) -> "PlanTables":
@@ -57,6 +64,13 @@ class PlanTables:
                 a2a_dst = plan.a2a_dst_tables()
             except Exception:
                 a2a_dst = None  # schedule pass reports the root cause from src
+        accum_dtype = getattr(plan, "accum_dtype", None)
+        quant = getattr(plan, "quant", None)
+        wire_dtype = granularity = scale_slots = None
+        if quant is not None and accum_dtype is not None:
+            wire_dtype = quant.resolve_wire(accum_dtype)
+            granularity = quant.granularity
+            scale_slots = plan.quant_table_spec()
         return cls(
             kind=plan.kind,
             order=plan.channels[0].order,
@@ -69,6 +83,10 @@ class PlanTables:
             rs_dst=rs_dst,
             align=tuple(tuple(d for _, d in ch.align_perm()) for ch in plan.channels),
             a2a_dst=a2a_dst,
+            accum_dtype=accum_dtype,
+            wire_dtype=wire_dtype,
+            granularity=granularity,
+            scale_slots=scale_slots,
         )
 
     # ---- mutation helpers (test suite) --------------------------------------

@@ -34,6 +34,7 @@ from repro.analysis.protocol import (
 from repro.analysis.schedule import check_a2a_seam, check_schedule, check_seam
 
 __all__ = [
+    "check_quant",
     "verify_plan",
     "verify_tables",
     "verify_seq_plan",
@@ -64,6 +65,52 @@ def _protocol_max_world() -> int:
     return int(os.environ.get("REPRO_VERIFY_PROTOCOL_MAX_WORLD", "32"))
 
 
+def check_quant(tables: PlanTables) -> int:
+    """Wire-dtype pass: the plan's scale-table spec must cover every encoded
+    wire edge of its schedule.
+
+    Evaluates 0 checks when the tables carry no quant snapshot (duck-typed /
+    hand-built tables) — then there is nothing the executors would allocate.
+    An identity wire legitimately needs 0 slots and still passes through the
+    coverage equation (both sides are 0).
+    """
+    slots = getattr(tables, "scale_slots", None)
+    wire = getattr(tables, "wire_dtype", None)
+    if slots is None or wire is None:
+        return 0
+    from repro.core.quant import GRANULARITIES, WIRE_DTYPES, QuantSpec
+
+    checks = 0
+    if wire not in WIRE_DTYPES:
+        raise PlanVerificationError(
+            f"wire dtype {wire!r} is not one of {WIRE_DTYPES}",
+            check="quant_wire_dtype",
+            kind=tables.kind, order=tables.order, world=tables.world,
+        )
+    checks += 1
+    gran = getattr(tables, "granularity", None)
+    if gran not in GRANULARITIES:
+        raise PlanVerificationError(
+            f"scale granularity {gran!r} is not one of {GRANULARITIES}",
+            check="quant_granularity",
+            kind=tables.kind, order=tables.order, world=tables.world,
+        )
+    checks += 1
+    steps = len(tables.src[0]) if tables.src else tables.world
+    expected = QuantSpec(wire_dtype=wire, granularity=gran).scale_slots(
+        tables.flow, tables.world, tables.num_channels, steps
+    )
+    if int(slots) != int(expected):
+        raise PlanVerificationError(
+            f"scale table allocates {slots} slot(s) but the {tables.flow!r} "
+            f"flow quantizes {expected} wire edge(s) over {steps} step(s)",
+            check="quant_scale_slots",
+            kind=tables.kind, order=tables.order, world=tables.world,
+        )
+    checks += 1
+    return checks
+
+
 def verify_tables(
     tables: PlanTables,
     *,
@@ -72,6 +119,7 @@ def verify_tables(
 ) -> VerificationReport:
     """Verify baked tables; raises PlanVerificationError, returns a report."""
     checks = check_schedule(tables)
+    checks += check_quant(tables)
     passes = ["schedule"]
     events = 0
     if protocol is None:
@@ -127,6 +175,7 @@ def verify_seq_tables(
     for i, t in enumerate(tables):
         try:
             checks += check_schedule(t)
+            checks += check_quant(t)
         except PlanVerificationError as e:
             raise e.with_op_index(i) from None
     if is_a2a:

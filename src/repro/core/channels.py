@@ -15,9 +15,15 @@ all workload kinds:
                       all2all) for tiles and flowing partials alike;
   ``num_channels``    chunks each rank's shard into C independently scheduled
                       flows (C outstanding transfers — the paper's f_C);
-  ``comp.accum_dtype``is the flow dtype: what partial reductions accumulate
-                      in and travel the wire in (fp32 = reduction-exact,
-                      bf16 = half the ring bytes);
+  ``comp.accum_dtype``is the reduction dtype: what partial reductions
+                      accumulate in (fp32 = reduction-exact);
+  ``quant``           is the wire half of the dtype axis
+                      (:class:`~repro.core.quant.QuantSpec`): what tiles and
+                      flowing partials travel the wire in — ``None`` wire
+                      inherits ``accum_dtype`` (bitwise-identical default),
+                      bf16 halves the ring bytes, int8/fp8 quarter them with
+                      scales riding the plan, and ``weight_dtype`` packs
+                      weights for dequant-GEMM fused into the ring;
   ``comp.tile``       is the (tm, tn, tk) consumer compute tile — tunable
                       independently of the comm half (``core/comp_tiles``);
   ``comm.resource``   / ``comm.mode`` select the transfer engine and
@@ -33,7 +39,10 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-__all__ = ["BlockChannel", "CommSpec", "CompSpec", "ORDERS", "RESOURCES", "MODES"]
+from repro.core.quant import QuantSpec
+
+__all__ = ["BlockChannel", "CommSpec", "CompSpec", "QuantSpec", "ORDERS",
+           "RESOURCES", "MODES"]
 
 ORDERS = ("ring", "bidir_ring", "all2all")
 RESOURCES = ("dma", "core")
@@ -80,9 +89,11 @@ class CompSpec:
                  "backend-chosen blocking"; a non-default tile is honored
                  literally by both backends (clamped to divisors of the
                  operand extents — see core/comp_tiles).
-    accum_dtype: dtype partial reductions accumulate in AND travel the wire in
-                 (the flow dtype): "float32" is reduction-exact, "bfloat16"
-                 halves the flowing bytes (§Perf optimization).
+    accum_dtype: dtype partial reductions accumulate in — the reduction
+                 dtype only.  What travels the wire is the *quant* half
+                 (``BlockChannel.quant``); with the default QuantSpec the
+                 wire inherits this dtype, so "float32" is reduction-exact
+                 end to end and "bfloat16" halves the flowing bytes.
     """
 
     tile: Tuple[int, int, int] = (128, 128, 128)
@@ -111,12 +122,16 @@ class BlockChannel:
                    does not divide the chunked extent at trace time, the plan
                    layer falls back to the largest divisor <= C (with a warning).
     comm/comp:     the two independent halves of the design space.
+    quant:         the wire half of the dtype axis (QuantSpec); the default
+                   inherits ``comp.accum_dtype`` as the wire dtype, which is
+                   bitwise-identical to the pre-split behavior.
     """
 
     axis: str
     num_channels: int = 1
     comm: CommSpec = CommSpec()
     comp: CompSpec = CompSpec()
+    quant: QuantSpec = QuantSpec()
     name: Optional[str] = None
 
     def __post_init__(self):
@@ -128,6 +143,8 @@ class BlockChannel:
             raise TypeError(f"comm must be a CommSpec, got {type(self.comm)}")
         if not isinstance(self.comp, CompSpec):
             raise TypeError(f"comp must be a CompSpec, got {type(self.comp)}")
+        if not isinstance(self.quant, QuantSpec):
+            raise TypeError(f"quant must be a QuantSpec, got {type(self.quant)}")
 
     def with_(self, **kw) -> "BlockChannel":
         return dataclasses.replace(self, **kw)

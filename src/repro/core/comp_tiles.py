@@ -9,7 +9,7 @@ the one place its semantics live, shared by every executor:
     rule ``mapping.effective_channels`` applies to the comm half, so a tuned
     tile degrades predictably instead of crashing on an awkward shape;
   * :func:`blocked_dot` computes a (possibly batched) GEMM in (tm, tn, tk)
-    blocks accumulated in the flow dtype — the XLA-path compute callbacks
+    blocks accumulated in the accum dtype — the XLA-path compute callbacks
     (``core/overlap.py``) and the fused Pallas kernels
     (``kernels/ag_gemm.py``, ``gemm_rs.py``) all honor a non-default tile
     through it, so a tuner winner behaves identically on both backends;
@@ -26,6 +26,8 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core.quant import PackedWeight, dequantize_weight
 
 __all__ = [
     "DEFAULT_TILE",
@@ -77,7 +79,13 @@ def blocked_dot(
 ) -> jnp.ndarray:
     """``a @ b`` computed in (tm, tn, tk) blocks, accumulated in ``accum``.
 
-    ``a``: [..., m, k] (leading batch dims allowed), ``b``: [k, n].  The tile
+    ``a``: [..., m, k] (leading batch dims allowed), ``b``: [k, n] — or a
+    :class:`~repro.core.quant.PackedWeight` of the same logical shape
+    (weight-only int8/int4): its codes are dequantized with their
+    per-output-channel scales/zero-points INSIDE the decomposition, per
+    (tk, tn) block on the ``unroll=True`` path — in VMEM right before the
+    MXU in the Pallas kernel bodies — and as one fused elementwise producer
+    on the XLA paths (XLA fuses it into the dot's operand read).  The tile
     is clamped through :func:`resolve_tile` first; a tile covering the whole
     problem takes the single-dot fast path (bit-identical to the untiled
     contraction).
@@ -94,6 +102,7 @@ def blocked_dot(
         is already bounded by the kernel's per-chunk operand sizes.
     """
     m, k = a.shape[-2], a.shape[-1]
+    packed = isinstance(b, PackedWeight)
     n = b.shape[-1]
     accum = jnp.dtype(accum)
     tm, tn, tk = resolve_tile(tile, m, n, k)
@@ -103,13 +112,18 @@ def blocked_dot(
         return lax.dot_general(x, y, dims, preferred_element_type=accum)
 
     if (tm, tn, tk) == (m, n, k):
-        out = dot(a, b)
+        bv = dequantize_weight(b.q, b.scale, b.zero, accum) if packed else b
+        out = dot(a, bv)
         return out.astype(out_dtype) if out_dtype is not None else out
 
     if not unroll:
+        # whole-weight dequant here is the same fused elementwise producer
+        # XLA builds for the per-block form — only the Pallas path below
+        # needs the dequant spelled per block (VMEM residency)
+        bv = dequantize_weight(b.q, b.scale, b.zero, accum) if packed else b
         lead = a.shape[:-2]
         a4 = a.reshape(lead + (m // tm, tm, k // tk, tk))
-        b4 = b.reshape(k // tk, tk, n // tn, tn)
+        b4 = bv.reshape(k // tk, tk, n // tn, tn)
         nd = a4.ndim
         # contract (k-block, tk) jointly: the blocked layout stays explicit,
         # the emitted program stays a single op
@@ -118,18 +132,23 @@ def blocked_dot(
         out = out.reshape(lead + (m, n))  # [..., m/tm, tm, n/tn, tn] -> [..., m, n]
         return out.astype(out_dtype) if out_dtype is not None else out
 
+    def b_block(ni, ki):
+        """One (tk, tn) weight block, dequantized at the point of use."""
+        ns = slice(ni * tn, (ni + 1) * tn)
+        ks = slice(ki * tk, (ki + 1) * tk)
+        if not packed:
+            return b[ks, ns]
+        zero = None if b.zero is None else b.zero[ns]
+        return dequantize_weight(b.q[ks, ns], b.scale[ns], zero, accum)
+
     rows = []
     for mi in range(m // tm):
         a_mi = a[..., mi * tm : (mi + 1) * tm, :]
         cols = []
         for ni in range(n // tn):
-            b_ni = b[:, ni * tn : (ni + 1) * tn]
-            blk = dot(a_mi[..., 0:tk], b_ni[0:tk, :])
+            blk = dot(a_mi[..., 0:tk], b_block(ni, 0))
             for ki in range(1, k // tk):
-                blk = blk + dot(
-                    a_mi[..., ki * tk : (ki + 1) * tk],
-                    b_ni[ki * tk : (ki + 1) * tk, :],
-                )
+                blk = blk + dot(a_mi[..., ki * tk : (ki + 1) * tk], b_block(ni, ki))
             cols.append(blk)
         rows.append(cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=-1))
     out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=-2)

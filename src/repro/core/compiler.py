@@ -10,7 +10,9 @@ real (if small) compiler pipeline:
   2. **plan** — ``core/plan.build_plan`` lowers the channel's CommSpec/CompSpec
      into a :class:`~repro.core.plan.TilePlan`: per-channel per-step peer
      schedules (from ``schedules.SCHEDULES``), flow permutations, flow kind,
-     and flow dtype.  Plans are cached on ``(kind, channel, world,
+     and the wire dtype (``plan.flow_dtype``, resolved from the channel's
+     QuantSpec against its accum dtype).  Plans are cached on ``(kind,
+     channel, world,
      num_channels)`` — ``plan.plan_cache_info()`` shows reuse;
   3. **execute** — one of two backends consumes the SAME plan:
 
@@ -39,9 +41,18 @@ CompSpec): ``comp="auto"`` adds the pruned (tm, tn, tk) consumer-tile
 lattice to the search — with ``channel="auto"`` the two halves are searched
 jointly; with an explicit channel only the compute half is tuned, the comm
 half held fixed.  An explicit ``CompSpec`` overrides the whole compute half
-(tile AND flow dtype) without tuning; a bare (tm, tn, tk) tuple overrides
-the tile ONLY, leaving the flow dtype to the channel (or, with
+(tile AND accum dtype) without tuning; a bare (tm, tn, tk) tuple overrides
+the tile ONLY, leaving the accum dtype to the channel (or, with
 ``channel="auto"``, to the comm search).
+
+``quant`` selects the *wire* half (the :class:`~repro.core.quant.QuantSpec`
+axis — what travels, decoupled from what accumulates): an explicit
+``QuantSpec`` pins it on every candidate/channel; ``quant="auto"`` (or
+``True``) opens the wire-dtype flow axis to the search
+(``tune.QUANT_SPACE``-style, enumerated for the ``QUANT_WIRE_KINDS`` only),
+so a comm-bound shape can resolve an int8 wire that beats the best
+full-width candidate on modeled cost; ``None`` (default) keeps the
+channel's own QuantSpec — the identity wire unless the caller set one.
 
 ``interpret=None`` defers to ``repro.backend.default_interpret()``: interpret
 on CPU-only hosts, Mosaic on real TPUs.
@@ -56,6 +67,7 @@ import warnings
 from typing import Callable, Optional, Tuple, Union
 
 from repro.core.channels import BlockChannel, CompSpec
+from repro.core.quant import QuantSpec
 from repro.core import overlap as _xla
 
 __all__ = [
@@ -94,8 +106,8 @@ def _normalize_comp(comp) -> Union[None, str, CompSpec, Tuple[int, int, int]]:
     """None | "auto" | CompSpec | (tm, tn, tk).
 
     A bare tuple stays a tuple: it pins the TILE only, leaving the channel's
-    (or the search's) flow dtype untouched; a full CompSpec pins the whole
-    compute half (tile AND accum/flow dtype).
+    (or the search's) accum dtype untouched; a full CompSpec pins the whole
+    compute half (tile AND accum dtype).
     """
     if comp is None or comp == "auto":
         return comp
@@ -111,11 +123,23 @@ def _normalize_comp(comp) -> Union[None, str, CompSpec, Tuple[int, int, int]]:
     )
 
 
+def _normalize_quant(quant) -> Union[None, str, QuantSpec]:
+    """None | "auto" | QuantSpec (``True`` is shorthand for ``"auto"``)."""
+    if quant is None or isinstance(quant, QuantSpec):
+        return quant
+    if quant is True or quant == "auto":
+        return "auto"
+    raise ValueError(
+        f"quant must be None, 'auto'/True, or a QuantSpec, got {quant!r}"
+    )
+
+
 def compile_overlap(
     kind,
     channel: Union[BlockChannel, str, None] = None,
     *,
     comp=None,
+    quant=None,
     backend: str = "xla",
     overlapped: bool = True,
     interpret: Optional[bool] = None,
@@ -134,6 +158,9 @@ def compile_overlap(
     the string ``"auto"`` (seq form also accepts None for the default
     channel); ``comp`` is None (use the channel's CompSpec), ``"auto"``
     (tune the compute half), or an explicit CompSpec / (tm, tn, tk) tuple;
+    ``quant`` is None (use the channel's QuantSpec), ``"auto"``/``True``
+    (open the wire-dtype flow axis to the search), or an explicit
+    :class:`~repro.core.quant.QuantSpec` pin;
     ``axis``/``mesh``/``tune_ranker`` only apply to auto resolution (a mesh
     widens the tuning-cache fingerprint to the full topology).
     """
@@ -151,6 +178,7 @@ def compile_overlap(
             axis=axis,
             mesh=mesh,
             tune_ranker=tune_ranker,
+            quant=quant,
             **kw,
         )
     if kind not in KINDS:
@@ -163,16 +191,21 @@ def compile_overlap(
         # the first trace
         raise unsupported_error(kind, backend)
     comp = _normalize_comp(comp)
+    quant = _normalize_quant(quant)
     if isinstance(channel, str):
         if channel != "auto":
             raise ValueError(f"channel must be a BlockChannel or 'auto', got {channel!r}")
         base = None
         if isinstance(comp, CompSpec):
             # pinned compute half, tuned comm half: the explicit CompSpec
-            # fixes the tile AND the flow dtype (its accum_dtype); every
-            # candidate inherits it through the base channel and the
-            # narrowed space built in _auto_overlap
+            # fixes the tile AND the accum dtype; every candidate inherits it
+            # through the base channel and the narrowed space built in
+            # _auto_overlap
             base = BlockChannel(axis=axis, comp=comp)
+        if isinstance(quant, QuantSpec):
+            # pinned wire half: every candidate inherits it through the base
+            # channel (the flow axis stays closed — nothing to search)
+            base = (base or BlockChannel(axis=axis)).with_(quant=quant)
         return _auto_overlap(
             kind,
             backend=backend,
@@ -182,19 +215,24 @@ def compile_overlap(
             mesh=mesh,
             tune_ranker=tune_ranker,
             comp=comp,
+            quant="auto" if quant == "auto" else None,
             base=base,
             **kw,
         )
     if not isinstance(channel, BlockChannel):
         raise TypeError(f"channel must be a BlockChannel, got {type(channel)}")
+    if isinstance(quant, QuantSpec):
+        channel = channel.with_(quant=quant)
+        quant = None
     if isinstance(comp, CompSpec):
         channel = channel.with_(comp=comp)
     elif isinstance(comp, tuple):
-        # tile-only override: the channel's flow/accum dtype is untouched
+        # tile-only override: the channel's accum dtype is untouched
         channel = channel.with_(comp=dataclasses.replace(channel.comp, tile=comp))
-    elif comp == "auto":
-        # explicit comm half, tuned compute half: resolve per call shapes
-        # with the channel's own comm point as the (only) comm candidate
+    if comp == "auto" or quant == "auto":
+        # explicit comm half, tuned compute and/or wire half: resolve per
+        # call shapes with the channel's own comm point as the (only) comm
+        # candidate
         return _auto_overlap(
             kind,
             backend=backend,
@@ -203,7 +241,8 @@ def compile_overlap(
             axis=channel.axis,
             mesh=mesh,
             tune_ranker=tune_ranker,
-            comp="auto",
+            comp=comp if comp == "auto" else None,
+            quant=quant,
             base=channel,
             **kw,
         )
@@ -323,6 +362,7 @@ def _compile_seq(
     tune_ranker: Optional[str] = None,
     tune_base: Optional[BlockChannel] = None,
     tune_space=None,
+    quant=None,
     **kw,
 ) -> Callable:
     """Compile a fused multi-op sequence (the ``compile_overlap`` list form).
@@ -381,6 +421,7 @@ def _compile_seq(
             f"backend={backend!r} (supported: {SEQ_KINDS} on backend='xla'); "
             "lower each op separately via single-kind compile_overlap calls"
         )
+    quant = _normalize_quant(quant)
     if kinds == A2A_SEQ:
         return _compile_a2a(
             chans,
@@ -391,10 +432,15 @@ def _compile_seq(
             tune_ranker=tune_ranker,
             tune_base=tune_base,
             tune_space=tune_space,
+            quant=quant,
             **kw,
         )
     if any(ch == "auto" for ch in chans):
         base = next((ch for ch in chans if isinstance(ch, BlockChannel)), tune_base)
+        if isinstance(quant, QuantSpec):
+            base = (base or BlockChannel(axis=axis)).with_(quant=quant)
+        elif quant == "auto":
+            tune_space = _widen_flows(tune_space)
         return _auto_overlap_seq(
             axis=base.axis if base is not None else axis,
             mesh=mesh,
@@ -407,6 +453,28 @@ def _compile_seq(
     ch_rs, ch_ag = (
         ch if isinstance(ch, BlockChannel) else BlockChannel(axis=axis) for ch in chans
     )
+    if isinstance(quant, QuantSpec):
+        ch_rs, ch_ag = ch_rs.with_(quant=quant), ch_ag.with_(quant=quant)
+    elif quant == "auto":
+        # quant-only search over explicit seam channels: pin the comm and
+        # compute halves to the producer's point, search only the flow axis
+        from repro.tune import Space as _Space
+
+        return _auto_overlap_seq(
+            axis=ch_rs.axis,
+            mesh=mesh,
+            tune_ranker=tune_ranker,
+            base=ch_rs,
+            space=_Space(
+                orders=(ch_rs.comm.order,),
+                channel_counts=(ch_rs.num_channels,),
+                accum_dtypes=(ch_rs.comp.accum_dtype,),
+                comp_tiles=(tuple(ch_rs.comp.tile),),
+                flows=(None, "int8"),
+            ),
+            overlapped=overlapped,
+            **kw,
+        )
     if not overlapped:
         return _seq_unfused(ch_rs, ch_ag, overlapped=False, **kw)
 
@@ -435,6 +503,13 @@ def _compile_seq(
     return seq_fn
 
 
+def _widen_flows(space):
+    """Open the wire-dtype flow axis on ``space`` (None = the default)."""
+    from repro.tune import DEFAULT_SPACE
+
+    return dataclasses.replace(space or DEFAULT_SPACE, flows=(None, "int8"))
+
+
 def _compile_a2a(
     chans,
     *,
@@ -445,6 +520,7 @@ def _compile_a2a(
     tune_ranker: Optional[str],
     tune_base: Optional[BlockChannel] = None,
     tune_space=None,
+    quant=None,
     **kw,
 ) -> Callable:
     """Compile the expert-parallel ``a2a_dispatch -> combine_rs`` pair.
@@ -459,6 +535,10 @@ def _compile_a2a(
 
     if any(ch == "auto" for ch in chans):
         base = next((ch for ch in chans if isinstance(ch, BlockChannel)), tune_base)
+        if isinstance(quant, QuantSpec):
+            base = (base or BlockChannel(axis=axis)).with_(quant=quant)
+        # quant="auto" is a no-op for the a2a pair: the MoE kinds are not
+        # QUANT_WIRE_KINDS, so the enumerator never opens the flow axis there
         return _auto_overlap_a2a(
             axis=base.axis if base is not None else axis,
             mesh=mesh,
@@ -471,6 +551,8 @@ def _compile_a2a(
     ch_d, ch_c = (
         ch if isinstance(ch, BlockChannel) else BlockChannel(axis=axis) for ch in chans
     )
+    if isinstance(quant, QuantSpec):
+        ch_d, ch_c = ch_d.with_(quant=quant), ch_c.with_(quant=quant)
     if not overlapped:
         return functools.partial(
             moe_overlap.a2a_moe_baseline,
@@ -601,6 +683,7 @@ def _auto_overlap(
     mesh,
     tune_ranker: Optional[str],
     comp=None,
+    quant=None,
     base=None,
     **kw,
 ) -> Callable:
@@ -615,6 +698,10 @@ def _auto_overlap(
     ``comp="auto"`` widens the search to the compute-tile lattice: jointly
     with the comm half when ``base`` is None, or comp-only (the base
     channel's comm point held fixed) when ``base`` is an explicit channel.
+    ``quant="auto"`` opens the wire-dtype flow axis on top of whichever
+    space the rest of the request selected (an explicit base channel with
+    nothing else tuned pins the comm+comp halves, so only the flow axis is
+    searched).
     """
 
     def auto_fn(*args, **call_kw):
@@ -626,12 +713,12 @@ def _auto_overlap(
 
         world = int(mesh.shape[axis]) if mesh is not None else int(_backend.axis_size(axis))
         if isinstance(comp, CompSpec):
-            # pinned compute half (tile + flow dtype), tuned comm half: the
+            # pinned compute half (tile + accum dtype), tuned comm half: the
             # single-tile space is honored (clamped, never pruned) and every
             # candidate inherits the rest of the CompSpec through ``base``
             space = Space(accum_dtypes=(comp.accum_dtype,), comp_tiles=(tuple(comp.tile),))
         elif isinstance(comp, tuple):
-            # pinned tile only: the flow dtype stays part of the comm search
+            # pinned tile only: the accum dtype stays part of the comm search
             space = Space(comp_tiles=(comp,))
         elif comp == "auto" and base is not None:
             space = Space(
@@ -642,8 +729,19 @@ def _auto_overlap(
             )
         elif comp == "auto":
             space = JOINT_SPACE
+        elif quant == "auto" and base is not None:
+            # quant-only search over an explicit channel: pin the comm and
+            # compute halves to the base's own point
+            space = Space(
+                orders=(base.comm.order,),
+                channel_counts=(base.num_channels,),
+                accum_dtypes=(base.comp.accum_dtype,),
+                comp_tiles=(tuple(base.comp.tile),),
+            )
         else:
             space = DEFAULT_SPACE
+        if quant == "auto":
+            space = dataclasses.replace(space, flows=(None, "int8"))
         channel = resolve_channel(
             kind,
             shapes=[jnp.shape(a) for a in args],

@@ -18,7 +18,10 @@ step ``s`` while both flows' permutes are in flight — an extended
 producer-consumer chain (AG -> GroupGEMM -> TopkReduce -> RS) matching the
 paper's §7.2 MoE kernel, with the ICI DMA engine as the copy resource.
 ``num_channels`` splits the local token chunk into independently scheduled
-flows; the reduction travels in ``CompSpec.accum_dtype``.
+flows; the reduction accumulates in ``CompSpec.accum_dtype`` (the reduction
+dtype) and travels the wire per ``BlockChannel.quant`` — with the default
+QuantSpec the wire inherits the accum dtype; a quantized wire re-encodes at
+each send edge inside the generic executor.
 
 Expert dispatch inside a chunk uses capacity-based one-hot dispatch (GShard
 style) — the XLA-friendly realization of the paper's Gather/Scatter fusion; the
@@ -160,7 +163,7 @@ def ag_moe(
     e_total = e_loc * plan.world
     m_sub = m_loc // plan.num_channels
     cap = _capacity(m_sub, k, e_total, capacity_factor)
-    flow = jnp.dtype(plan.flow_dtype)
+    accum = jnp.dtype(plan.accum_dtype)
     comp_tile = tuple(channel.comp.tile)  # per-expert GEMM blocking (CompSpec)
     e_lo = rank * e_loc
 
@@ -179,7 +182,7 @@ def ag_moe(
         part = local_expert_ffn(
             xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act, tile=comp_tile
         )
-        return part.astype(flow)  # reduction travels in the flow dtype
+        return part.astype(accum)  # the executor encodes the wire edges
 
     accs = run_plan(plan, moe_tile, state=chunks)
     out = accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=0)
@@ -264,7 +267,7 @@ def a2a_moe(
     e_total = e_loc * world
     m_sub = m_loc // nch
     cap = _capacity(m_sub, k, e_total, capacity_factor)
-    flow = jnp.dtype(dispatch.flow_dtype)
+    accum = jnp.dtype(dispatch.accum_dtype)
     comp_tile = tuple(channel.comp.tile)  # per-expert GEMM blocking (CompSpec)
     e_lo = rank * e_loc
 
@@ -283,7 +286,7 @@ def a2a_moe(
         part = local_expert_ffn(
             xs, ids, wts, w_gu, w_down, e_lo=e_lo, cap=cap, act=act, tile=comp_tile
         )
-        return part.astype(flow)  # the combine return travels in the flow dtype
+        return part.astype(accum)  # the executor encodes the wire edges
 
     accs = run_a2a_seq(seq, moe_tile, state=chunks)
     out = accs[0] if nch == 1 else jnp.concatenate(accs, axis=0)

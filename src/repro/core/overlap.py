@@ -13,8 +13,11 @@ consumes exactly the permuted value, so it can never be hoisted above the
 There is exactly ONE schedule loop here: :func:`run_plan` executes any
 :class:`~repro.core.plan.TilePlan` — every workload kind is a per-tile compute
 callback plugged into it (GEMM tile, online-softmax tile, grouped-GEMM tile in
-``core/moe_overlap.py``), so ``CommSpec.order``, ``num_channels``, and
-``CompSpec.accum_dtype`` behave identically across all kinds.  Every
+``core/moe_overlap.py``), so ``CommSpec.order``, ``num_channels``,
+``CompSpec.accum_dtype`` (the reduction dtype), and the wire half of the
+dtype axis (``BlockChannel.quant`` — what travels, encoded at the send edge
+and decoded at the consumer, quantized payloads carrying their scales through
+the same permutes) behave identically across all kinds.  Every
 callback additionally honors a non-default ``CompSpec.tile``: the GEMM
 callbacks compute in explicit (tm, tn, tk) blocks
 (``core/comp_tiles.blocked_dot``), the attention callback maps (tm, tk)
@@ -51,6 +54,7 @@ from repro.core.channels import BlockChannel
 from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
 from repro.core.plan import SeqPlan, TilePlan, build_plan, build_seq_plan
+from repro.core.quant import PackedWeight, decode_tree, encode_tree
 
 __all__ = [
     "run_plan",
@@ -115,9 +119,19 @@ def run_plan(
     plan.flow == "rs":
         Nothing flows in; ``tile_fn(ctx, None, None) -> partial`` computes the
         partial for segment ``ctx.src``; the executor keeps one flowing
-        accumulator per channel (``acc = ppermute(acc) + partial``, wire dtype
-        = plan.flow_dtype).  Returns the per-channel fully reduced home
-        segments (a list, channel-major).
+        accumulator per channel (``acc = decode(ppermute(encode(acc))) +
+        partial`` — encode/decode are the plan's wire edges, identity for the
+        default QuantSpec, a cast for a float wire, scaled int8/fp8 payloads
+        otherwise; the add always runs in ``plan.accum_dtype``).  Returns the
+        per-channel fully reduced home segments (a list, channel-major).
+
+    Wire encoding (``plan.quant``): flowing tiles ("ag"/"ag_rs"/"a2a" state)
+    are encoded ONCE at entry and stay encoded across every permute — each
+    consumer step decodes its held tile before the callback, so per-tile
+    quantization error is independent of world size.  Flowing reductions
+    ("rs", the "ag_rs" ride-along, the "a2a_rs" returns) re-encode at each
+    send edge.  With the default spec every edge is the identity function —
+    bitwise-identical to the pre-QuantSpec executor.
 
     plan.flow == "ag_rs" (MoE double ring):
         ``state`` flows exactly as in "ag"; ``tile_fn(ctx, tile, None) ->
@@ -144,6 +158,22 @@ def run_plan(
     axis, nch = plan.axis, plan.num_channels
     rank = lax.axis_index(axis)
     accs: List[Any] = [None] * nch
+
+    # wire edges: encode at send, decode at the consumer (identity when the
+    # wire inherits accum_dtype — the bitwise-identical default)
+    spec, adt = plan.quant, plan.accum_dtype
+    wire_id = spec.is_identity(adt)
+
+    def enc(t):
+        return encode_tree(t, spec, adt)
+
+    def dec(t):
+        return decode_tree(t, spec, adt)
+
+    if state is not None and not wire_id:
+        # tiles are quantized exactly ONCE here; they stay encoded across
+        # every permute and each consumer decodes its held copy
+        state = [enc(st) for st in state]
     own = list(state) if plan.flow == "a2a" and state is not None else None
 
     for s in range(plan.steps):
@@ -167,7 +197,10 @@ def run_plan(
                     accs[c] = part
                 else:
                     # peer_tile_wait/notify: previous partial arrives and fuses
-                    accs[c] = _tree_add(_permute(accs[c], axis, sched.rs_perm(s - 1)), part)
+                    # (encoded for the wire, decoded back to accum_dtype)
+                    accs[c] = _tree_add(
+                        dec(_permute(enc(accs[c]), axis, sched.rs_perm(s - 1))), part
+                    )
             elif plan.flow == "a2a_rs":
                 src = jnp.asarray(sched.source_table(s))[rank]
                 part = tile_fn(TileContext(s, c, src, plan), None, None)
@@ -175,20 +208,24 @@ def run_plan(
                     accs[c] = part  # own tokens: the partial is already home
                 else:
                     # return along the reversed exchange edge, accumulate home
-                    accs[c] = _tree_add(accs[c], _permute(part, axis, sched.combine_perm(s)))
+                    # (each partial is encoded exactly once for its one hop)
+                    accs[c] = _tree_add(
+                        accs[c], dec(_permute(enc(part), axis, sched.combine_perm(s)))
+                    )
             else:
                 # consumer_tile_wait is the SSA dependence on state[c]
                 src = jnp.asarray(sched.source_table(s))[rank]
                 ctx = TileContext(s, c, src, plan)
+                held = state[c] if wire_id else dec(state[c])
                 if plan.flow in ("ag", "a2a"):
-                    carry = tile_fn(ctx, state[c], carry)
+                    carry = tile_fn(ctx, held, carry)
                 else:  # ag_rs: reduction rides the tile flow
-                    part = tile_fn(ctx, state[c], None)
+                    part = tile_fn(ctx, held, None)
                     if s == 0:
                         accs[c] = part
                     else:
                         accs[c] = _tree_add(
-                            _permute(accs[c], axis, sched.flow_perm(s - 1)), part
+                            dec(_permute(enc(accs[c]), axis, sched.flow_perm(s - 1))), part
                         )
         if nxt is not None:
             state = nxt
@@ -197,7 +234,10 @@ def run_plan(
         return carry
     if plan.flow == "ag_rs":
         # final hop: each channel's reduction goes home (rank it belongs to)
-        accs = [_permute(accs[c], axis, plan.channels[c].align_perm()) for c in range(nch)]
+        accs = [
+            dec(_permute(enc(accs[c]), axis, plan.channels[c].align_perm()))
+            for c in range(nch)
+        ]
     return accs
 
 
@@ -261,6 +301,13 @@ def run_a2a_seq(
     dispatch, combine = seq.ops
     axis, nch = dispatch.axis, dispatch.num_channels
     rank = lax.axis_index(axis)
+
+    # wire edges (see run_plan): token tiles encode once at entry; each
+    # returning combine partial encodes once for its single hop home
+    spec, adt = dispatch.quant, dispatch.accum_dtype
+    wire_id = spec.is_identity(adt)
+    if not wire_id:
+        state = [encode_tree(st, spec, adt) for st in state]
     own = list(state)
     landed = list(state)
     accs: List[Any] = [None] * nch
@@ -275,11 +322,18 @@ def run_a2a_seq(
         for c in range(nch):
             sched = combine.channels[c]
             src = jnp.asarray(sched.source_table(s))[rank]
-            part = tile_fn(TileContext(s, c, src, dispatch), landed[c], None)
+            held = landed[c] if wire_id else decode_tree(landed[c], spec, adt)
+            part = tile_fn(TileContext(s, c, src, dispatch), held, None)
             if s == 0:
                 accs[c] = part  # own tokens: the partial is already home
             else:
-                accs[c] = _tree_add(accs[c], _permute(part, axis, sched.combine_perm(s)))
+                accs[c] = _tree_add(
+                    accs[c],
+                    decode_tree(
+                        _permute(encode_tree(part, spec, adt), axis, sched.combine_perm(s)),
+                        spec, adt,
+                    ),
+                )
         if nxt is not None:
             landed = nxt
     return accs
@@ -295,6 +349,33 @@ def _plan_for(kind: str, channel: BlockChannel, axis: str, extent: int):
 def _dot(a, b, accum=jnp.float32):
     """MXU-friendly contraction of the last dim of a with first dim of b."""
     return lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=accum)
+
+
+def _consume_dot(a, w, comp_tile, accum, out_dtype=None):
+    """One consumer GEMM tile: ``a @ w`` honoring the CompSpec tile.
+
+    The default tile means "XLA's own blocking" (one dot); a tuned
+    (tm, tn, tk) forces the explicit block decomposition.  A
+    :class:`~repro.core.quant.PackedWeight` ``w`` (weight-only int8/int4)
+    always routes through ``blocked_dot``, which fuses the per-channel
+    dequant into the contraction.
+    """
+    if comp_tile != DEFAULT_TILE or isinstance(w, PackedWeight):
+        tile = comp_tile
+        if comp_tile == DEFAULT_TILE:
+            # packed weight with backend-chosen blocking: cover the whole
+            # problem (single dot over the dequantized codes)
+            tile = (a.shape[-2], w.shape[-1], a.shape[-1])
+        return blocked_dot(a, w, tile, accum=accum, out_dtype=out_dtype)
+    out = _dot(a, w, accum=accum)
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def _w_cols(w, lo: int, hi: int):
+    """Column-slice a weight operand (PackedWeight slices its scales too)."""
+    if isinstance(w, PackedWeight):
+        return w.col_slice(lo, hi)
+    return w[..., lo:hi]
 
 
 def _row_update(out, part, row):
@@ -332,7 +413,10 @@ def ag_matmul(
     ``channel.num_channels`` sub-chunks flowing independently per
     ``channel.comm.order`` (C in-flight transfers — the paper's f_C); each
     arrived tile is consumed by a GEMM accumulated in
-    ``channel.comp.accum_dtype``.
+    ``channel.comp.accum_dtype``.  With a quantized wire
+    (``channel.quant``) each sub-chunk is quantized exactly once at entry
+    and travels as int8/fp8 codes + scale; ``w`` may be a
+    :class:`~repro.core.quant.PackedWeight` for weight-only dequant-GEMM.
     """
     channel = channel or BlockChannel(axis=axis)
     out_dtype = out_dtype or x.dtype
@@ -346,12 +430,7 @@ def ag_matmul(
     out0 = jnp.zeros(x.shape[:-2] + (plan.world * m_loc, n_loc), dtype=out_dtype)
 
     def gemm_tile(ctx, tile, out):
-        # CompSpec tile: the default means "XLA's own blocking" (one dot);
-        # a tuned (tm, tn, tk) forces that explicit block decomposition
-        if comp_tile != DEFAULT_TILE:
-            part = blocked_dot(tile, w, comp_tile, accum=accum, out_dtype=out_dtype)
-        else:
-            part = _dot(tile, w, accum=accum).astype(out_dtype)
+        part = _consume_dot(tile, w, comp_tile, accum, out_dtype=out_dtype)
         # f_S: the tile covers rows [src * m_loc + c * m_sub, ...) globally
         return _row_update(out, part, ctx.src * m_loc + ctx.channel * m_sub)
 
@@ -388,9 +467,12 @@ def matmul_rs(
     each step the executor fuses the arriving partial into this rank's GEMM
     tile for the scheduled segment, overlapping the in-flight permute with
     the GEMM.  ``num_channels`` chunks the N columns into independent flows;
-    partials travel in ``channel.comp.accum_dtype`` — the dot PRODUCES the
-    flow dtype natively (preferred_element_type), so bf16 halves ring bytes
-    (§Perf optimization).
+    partials accumulate in ``channel.comp.accum_dtype`` — the dot PRODUCES
+    that dtype natively (preferred_element_type) — and travel the wire per
+    ``channel.quant`` (default: the accum dtype itself, so bf16 accum halves
+    ring bytes; an int8/fp8 wire re-encodes the flowing accumulator at each
+    send edge, quartering them).  ``w`` may be a
+    :class:`~repro.core.quant.PackedWeight` for weight-only dequant-GEMM.
     """
     channel = channel or BlockChannel(axis=axis)
     out_dtype = out_dtype or x.dtype
@@ -400,15 +482,13 @@ def matmul_rs(
     assert m_glob % plan.world == 0, (m_glob, plan.world)
     m_loc = m_glob // plan.world
     n_sub = n // plan.num_channels
-    flow = jnp.dtype(plan.flow_dtype)
+    accum = jnp.dtype(plan.accum_dtype)
     comp_tile = tuple(channel.comp.tile)
 
     def gemm_tile(ctx, _tile, _carry):
         xs = _row_slice(x, ctx.src * m_loc, m_loc)
-        wc = w[..., ctx.channel * n_sub : (ctx.channel + 1) * n_sub]
-        if comp_tile != DEFAULT_TILE:
-            return blocked_dot(xs, wc, comp_tile, accum=flow)
-        return _dot(xs, wc, accum=flow)
+        wc = _w_cols(w, ctx.channel * n_sub, (ctx.channel + 1) * n_sub)
+        return _consume_dot(xs, wc, comp_tile, accum)
 
     accs = run_plan(plan, gemm_tile)
     out = accs[0] if plan.num_channels == 1 else jnp.concatenate(accs, axis=-1)
@@ -471,17 +551,15 @@ def matmul_rs_ag(
     rs_plan, ag_plan = seq.ops
     n_sub = n_mid // nch
     m_sub = m_loc // nch
-    flow = jnp.dtype(rs_plan.flow_dtype)
+    accum = jnp.dtype(rs_plan.accum_dtype)
     accum2 = jnp.dtype(channel2.comp.accum_dtype)
     comp_tile = tuple(channel.comp.tile)
     comp_tile2 = tuple(channel2.comp.tile)
 
     def rs_tile(ctx, _tile, _carry):
         xs = _row_slice(x, ctx.src * m_loc, m_loc)
-        wc = w1[..., ctx.channel * n_sub : (ctx.channel + 1) * n_sub]
-        if comp_tile != DEFAULT_TILE:
-            return blocked_dot(xs, wc, comp_tile, accum=flow)
-        return _dot(xs, wc, accum=flow)
+        wc = _w_cols(w1, ctx.channel * n_sub, (ctx.channel + 1) * n_sub)
+        return _consume_dot(xs, wc, comp_tile, accum)
 
     def seam(accs, _carry):
         rs_out = accs[0] if nch == 1 else jnp.concatenate(accs, axis=-1)
@@ -496,10 +574,7 @@ def matmul_rs_ag(
         return y, state, out0
 
     def ag_tile(ctx, tile, out):
-        if comp_tile2 != DEFAULT_TILE:
-            part = blocked_dot(tile, w2, comp_tile2, accum=accum2, out_dtype=out.dtype)
-        else:
-            part = _dot(tile, w2, accum=accum2).astype(out.dtype)
+        part = _consume_dot(tile, w2, comp_tile2, accum2, out_dtype=out.dtype)
         return _row_update(out, part, ctx.src * m_loc + ctx.channel * m_sub)
 
     return run_seq_plan(seq, rs_tile, seam, ag_tile)

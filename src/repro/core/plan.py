@@ -28,7 +28,14 @@ A plan captures a producer/consumer tile graph over ``world`` ranks:
     forwarded), or "a2a_rs" (expert-parallel combine: per-step partial expert
     outputs are returned along the reversed exchange edge and accumulated on
     the home rank);
-  * the **flow dtype** (``CompSpec.accum_dtype``) partial reductions travel in.
+  * the **dtype axis, split**: ``accum_dtype`` (``CompSpec.accum_dtype``) is
+    what partial reductions accumulate in; the **wire dtype** is what tiles
+    and flowing partials travel in, described by the plan's ``quant``
+    (:class:`~repro.core.quant.QuantSpec`) — ``plan.flow_dtype`` derives from
+    it (wire inherits accum when unset).  Quantized wires carry their
+    scale/zero-point tables through the same permutes the payload rides,
+    exactly like the a2a routing tables (``quant_table_spec`` names the
+    coverage the verifier checks).
 
 Plans are host-side, hashable, and cached: ``build_plan`` is keyed on
 ``(kind, channel, world, num_channels)`` (bounded LRU; ``plan_cache_info``
@@ -71,6 +78,7 @@ from typing import Tuple
 from repro.analysis.errors import PlanVerificationError
 from repro.core import schedules
 from repro.core.channels import BlockChannel, ORDERS
+from repro.core.quant import QuantSpec
 
 __all__ = [
     "ChannelSchedule",
@@ -216,12 +224,33 @@ class TilePlan:
     world: int
     flow: str  # "ag" | "rs" | "ag_rs"
     num_channels: int  # effective (validated divisor of the extent)
-    flow_dtype: str  # CompSpec.accum_dtype — wire dtype of partials
+    accum_dtype: str  # CompSpec.accum_dtype — reduction dtype only
     channels: Tuple[ChannelSchedule, ...]
+    quant: QuantSpec = QuantSpec()  # the wire half of the dtype axis
 
     @property
     def steps(self) -> int:
         return self.world
+
+    @property
+    def flow_dtype(self) -> str:
+        """The wire dtype — what actually travels (quant descriptor view).
+
+        Derived: the quant spec's wire dtype, inheriting ``accum_dtype`` when
+        unset.  Kernels that size wire buffers read this; accumulation reads
+        ``accum_dtype`` — the two are independent after the split.
+        """
+        return self.quant.resolve_wire(self.accum_dtype)
+
+    def quant_table_spec(self) -> int:
+        """Scale-table slot coverage a quantized wire needs for this plan.
+
+        0 for float wires.  One scale per quantize site (see
+        ``QuantSpec.scale_slots``); the verifier checks executor-declared
+        coverage against this alongside schedule legality.
+        """
+        return self.quant.scale_slots(
+            self.flow, self.world, self.num_channels, self.steps)
 
     # ---- flat tables for the Pallas kernels ---------------------------------
     # [num_channels][steps][world] nested tuples; wrappers jnp.asarray them and
@@ -324,8 +353,9 @@ def build_plan(kind: str, channel: BlockChannel, world: int, num_channels: int) 
         world=world,
         flow=FLOW_OF_KIND[kind],
         num_channels=num_channels,
-        flow_dtype=channel.comp.accum_dtype,
+        accum_dtype=channel.comp.accum_dtype,
         channels=chans,
+        quant=channel.quant,
     )
     if os.environ.get("REPRO_VERIFY", "1").lower() not in ("0", "false", "off"):
         from repro import analysis  # lazy: analysis imports back into core

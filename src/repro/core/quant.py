@@ -1,0 +1,337 @@
+"""QuantSpec — the wire-dtype half of the design space, split from accumulation.
+
+Historically ``CompSpec.accum_dtype`` meant two things at once: the dtype
+partial reductions accumulate in AND the dtype tiles/partials travel the wire
+in.  That conflation made int8/fp8 flows and weight-only dequant-GEMM — the
+flagship pairing in tile-lang's exemplars — unreachable: the tuner could
+never price a quantized wire because the IR had no word for it.
+
+:class:`QuantSpec` is that word.  It rides :class:`~repro.core.channels.BlockChannel`
+next to ``CommSpec``/``CompSpec`` and describes ONLY what travels:
+
+  ``wire_dtype``     what tiles / flowing partials travel the wire in.
+                     ``None`` (default) inherits ``CompSpec.accum_dtype`` —
+                     the pre-split behavior, bitwise identical (the encode /
+                     decode edges are literal identity functions, not casts).
+                     A float wire ("bfloat16") is a cast at the send edge; a
+                     quantized wire ("int8", fp8 where the backend has it)
+                     sends scaled integer payloads with their scales riding
+                     the same permute (``WirePayload``).
+  ``granularity``    scale granularity for quantized wires: "per_tile" (one
+                     scale per flowing tile — each tile is quantized exactly
+                     ONCE at its send edge, so end-to-end error is independent
+                     of world size) or "per_channel" (one scale per trailing
+                     output channel — tighter for skewed activations).
+  ``weight_dtype``   optional weight-only quantization ("int8" | "int4"):
+                     weights are packed once (:func:`pack_weight`) and
+                     dequantized per-tile INSIDE the consumer GEMM
+                     (``core/comp_tiles.blocked_dot``; in VMEM before the MXU
+                     on the Pallas backend) — bytes-on-wire AND VMEM both drop.
+  ``zero_point``     asymmetric weight quantization (per-channel zero points);
+                     only meaningful with ``weight_dtype``.
+
+``accum_dtype`` reverts to meaning only the reduction dtype.  The executors
+quantize at the send edge and dequantize fused into the per-tile compute
+callbacks; reductions always accumulate in ``accum_dtype``.
+
+This module is also the ONE quantization codepath in the tree:
+``training/compression.py``'s gradient compression re-exports
+:func:`quantize_int8` / :func:`dequantize_int8` from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "WirePayload",
+    "PackedWeight",
+    "WIRE_DTYPES",
+    "GRANULARITIES",
+    "WEIGHT_DTYPES",
+    "quantize_int8",
+    "dequantize_int8",
+    "quantize",
+    "dequantize",
+    "encode_tree",
+    "decode_tree",
+    "pack_weight",
+    "dequantize_weight",
+    "wire_itemsize",
+]
+
+_FP8 = getattr(jnp, "float8_e4m3fn", None)
+
+# float wires are casts; quantized wires carry scales
+_FLOAT_WIRES = ("float32", "bfloat16", "float16")
+_QUANT_WIRES = ("int8",) + (("float8_e4m3fn",) if _FP8 is not None else ())
+WIRE_DTYPES = _FLOAT_WIRES + _QUANT_WIRES
+GRANULARITIES = ("per_tile", "per_channel")
+WEIGHT_DTYPES = ("int8", "int4")
+
+# symmetric ranges: int8 uses +/-127 (matches the gradient-compression
+# contract pinned in test_properties.py); fp8 e4m3 saturates at 448
+_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0}
+_WEIGHT_QMAX = {"int8": 127.0, "int4": 7.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Wire/flow dtype descriptor — validated at construction."""
+
+    wire_dtype: Optional[str] = None
+    granularity: str = "per_tile"
+    weight_dtype: Optional[str] = None
+    zero_point: bool = False
+
+    def __post_init__(self):
+        if self.wire_dtype is not None and self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"unsupported wire_dtype {self.wire_dtype!r}; "
+                f"supported: {WIRE_DTYPES} (None inherits accum_dtype)")
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(
+                f"unsupported quant granularity {self.granularity!r}; "
+                f"supported: {GRANULARITIES}")
+        if self.weight_dtype is not None and self.weight_dtype not in WEIGHT_DTYPES:
+            raise ValueError(
+                f"unsupported weight_dtype {self.weight_dtype!r}; "
+                f"supported: {WEIGHT_DTYPES} (None = full-precision weights)")
+        if self.zero_point and self.weight_dtype is None:
+            raise ValueError(
+                "zero_point=True is only meaningful with weight_dtype set "
+                "(asymmetric weight-only quantization)")
+
+    # ---- derived ---------------------------------------------------------
+    @property
+    def is_quantized(self) -> bool:
+        """True when the wire carries scaled integer/fp8 payloads."""
+        return self.wire_dtype in _QUANT_WIRES
+
+    def resolve_wire(self, accum_dtype: str) -> str:
+        """The dtype that actually travels, given the reduction dtype."""
+        return self.wire_dtype if self.wire_dtype is not None else str(
+            jnp.dtype(accum_dtype))
+
+    def is_identity(self, accum_dtype: str) -> bool:
+        """True when encode/decode are no-ops (bitwise-identical path)."""
+        return self.resolve_wire(accum_dtype) == str(jnp.dtype(accum_dtype))
+
+    def scale_slots(self, flow: str, world: int, num_channels: int,
+                    steps: int) -> int:
+        """Scale-table coverage the executors allocate for a quantized wire.
+
+        One scale per quantize site: "ag" tiles are quantized ONCE at their
+        origin (world x C slots); flowing reductions ("rs", and the rs halves
+        of "ag_rs"/"a2a_rs") are re-encoded at every send edge
+        ((steps - 1) x C slots).  The verifier checks this coverage against
+        the plan's schedule (analysis/verify.check_quant).
+        """
+        if not self.is_quantized:
+            return 0
+        if flow == "ag":
+            return world * num_channels
+        if flow in ("rs", "a2a"):
+            return max(0, steps - 1) * num_channels
+        if flow in ("ag_rs", "a2a_rs"):  # tiles AND a flowing reduction
+            return world * num_channels + max(0, steps - 1) * num_channels
+        raise ValueError(f"unknown flow kind {flow!r}")
+
+
+# ---- wire payloads ---------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WirePayload:
+    """A quantized tile on the wire: integer payload + its scale(s).
+
+    Registered as a pytree so the generic executor's ``ppermute`` tree-maps
+    straight through it — the scales ride the same permute as the payload,
+    exactly like the a2a routing tables ride the token tiles.
+    """
+
+    q: Any
+    scale: Any
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight:
+    """A weight tensor packed for weight-only dequant-GEMM.
+
+    ``q``: integer codes (int4 codes live in an int8 container), same shape
+    as the source weight [k, n].  ``scale``: per-output-channel scales [n].
+    ``zero``: per-output-channel zero points [n] (asymmetric) or None.
+    ``dtype``: the logical code dtype ("int8" | "int4") — aux data, so two
+    packings with different code widths never compare pytree-equal.
+    """
+
+    q: Any
+    scale: Any
+    zero: Any = None
+    dtype: str = "int8"
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def col_slice(self, lo: int, hi: int) -> "PackedWeight":
+        """The packed view of ``w[..., lo:hi]`` (scales/zeros are per-column)."""
+        return PackedWeight(
+            self.q[..., lo:hi], self.scale[lo:hi],
+            None if self.zero is None else self.zero[lo:hi], self.dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale, self.zero), self.dtype
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux)
+
+
+# ---- the one quantization codepath ----------------------------------------
+
+
+def quantize_int8(g) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8: (codes, float32 scale).
+
+    The gradient-compression primitive (scale floor 1e-12, +/-127 clip) —
+    semantics pinned by ``tests/test_properties.py``'s error-feedback bound.
+    """
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize(x, wire_dtype: str, granularity: str = "per_tile"
+             ) -> WirePayload:
+    """Symmetric absmax quantization of one flowing tile.
+
+    "per_tile": one scalar scale for the whole tile.  "per_channel": one
+    scale per trailing output channel (reduced over every other axis), shape
+    ``x.shape[-1:]`` — broadcasts cleanly against the payload at dequant.
+    """
+    qmax = _QMAX[wire_dtype]
+    x32 = x.astype(jnp.float32)
+    if granularity == "per_channel" and x.ndim >= 1:
+        absmax = jnp.abs(x32).max(axis=tuple(range(x.ndim - 1)))
+    else:
+        absmax = jnp.abs(x32).max()
+    scale = (jnp.maximum(absmax, 1e-12) / qmax).astype(jnp.float32)
+    if wire_dtype == "int8":
+        q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
+    else:  # fp8: the cast itself rounds; scaling keeps the payload in range
+        q = (x32 / scale).astype(_FP8)
+    return WirePayload(q, scale)
+
+
+def dequantize(payload: WirePayload, dtype) -> jnp.ndarray:
+    return (payload.q.astype(jnp.float32) * payload.scale).astype(dtype)
+
+
+# ---- send-edge encode / receive-edge decode (executor hooks) ---------------
+
+
+def encode_tree(tree, spec: QuantSpec, accum_dtype):
+    """Encode a pytree of flowing values for the wire.
+
+    Identity (bitwise) when the wire inherits ``accum_dtype``; a cast for a
+    float wire; quantized :class:`WirePayload` leaves for int8/fp8 — the
+    scales travel with the payloads through the same ``ppermute``.  Non-float
+    leaves (e.g. a2a routing tables riding the token tiles) pass through
+    untouched.
+    """
+    if spec.is_identity(accum_dtype):
+        return tree
+    wire = jnp.dtype(spec.resolve_wire(accum_dtype)) if not spec.is_quantized else None
+
+    def enc(a):
+        if not jnp.issubdtype(jnp.result_type(a), jnp.floating):
+            return a
+        if spec.is_quantized:
+            return quantize(a, spec.wire_dtype, spec.granularity)
+        return a.astype(wire)
+
+    return jax.tree_util.tree_map(enc, tree)
+
+
+def decode_tree(tree, spec: QuantSpec, accum_dtype):
+    """Inverse of :func:`encode_tree`, back to the reduction dtype."""
+    if spec.is_identity(accum_dtype):
+        return tree
+    dt = jnp.dtype(accum_dtype)
+
+    def dec(v):
+        if isinstance(v, WirePayload):
+            return dequantize(v, dt)
+        if not jnp.issubdtype(jnp.result_type(v), jnp.floating):
+            return v
+        return v.astype(dt)
+
+    return jax.tree_util.tree_map(
+        dec, tree, is_leaf=lambda v: isinstance(v, WirePayload))
+
+
+# ---- weight-only packing ---------------------------------------------------
+
+
+def pack_weight(w, spec: QuantSpec) -> PackedWeight:
+    """Pack a [k, n] weight for weight-only dequant-GEMM.
+
+    Per-output-channel scales (axis -1).  Symmetric by default; with
+    ``spec.zero_point`` the full asymmetric range is used (min/max affine),
+    which matters for int4's 16 codes.  Codes are stored in an int8
+    container either way — dequant happens per-tile inside the GEMM, so no
+    packed-nibble arithmetic is ever needed.
+    """
+    if spec.weight_dtype is None:
+        raise ValueError("pack_weight requires QuantSpec.weight_dtype")
+    qmax = _WEIGHT_QMAX[spec.weight_dtype]
+    w32 = w.astype(jnp.float32)
+    axes = tuple(range(w.ndim - 1))
+    if spec.zero_point:
+        lo = w32.min(axis=axes)
+        hi = w32.max(axis=axes)
+        scale = jnp.maximum(hi - lo, 1e-12) / (2.0 * qmax)
+        zero = jnp.round(-qmax - lo / scale)
+        q = jnp.clip(jnp.round(w32 / scale) + zero, -qmax - 1, qmax)
+    else:
+        scale = jnp.maximum(jnp.abs(w32).max(axis=axes), 1e-12) / qmax
+        zero = None
+        q = jnp.clip(jnp.round(w32 / scale), -qmax, qmax)
+    return PackedWeight(q.astype(jnp.int8), scale.astype(jnp.float32),
+                        None if zero is None else zero.astype(jnp.float32),
+                        spec.weight_dtype)
+
+
+def dequantize_weight(q, scale, zero=None, dtype=jnp.float32):
+    """Dequantize weight codes (or any [k-slice, n-slice] block of them).
+
+    The per-tile form of this runs inside ``blocked_dot`` — in VMEM before
+    the MXU on the Pallas backend.
+    """
+    w = q.astype(jnp.float32)
+    if zero is not None:
+        w = w - zero
+    return (w * scale).astype(dtype)
+
+
+def wire_itemsize(wire_dtype: str) -> int:
+    """Bytes per element on the wire — what the cost model prices."""
+    return jnp.dtype(wire_dtype).itemsize

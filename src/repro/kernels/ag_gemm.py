@@ -45,25 +45,13 @@ from repro.core.channels import BlockChannel
 from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
 from repro.core.plan import build_plan
+from repro.core.quant import PackedWeight
 
 __all__ = ["ag_gemm_shard"]
 
 
 def _ag_gemm_kernel(
-    x_ref,
-    w_ref,
-    src_tbl,
-    dst_tbl,
-    o_ref,
-    buf,
-    x_vmem,
-    acc,
-    out_tile,
-    copy_sem,
-    send_sem,
-    recv_sems,
-    out_sem,
-    *,
+    *refs,
     axis: str,
     world: int,
     nch: int,
@@ -74,7 +62,18 @@ def _ag_gemm_kernel(
     bn: int,
     tk: int,
     accum,
+    packed: bool,
 ):
+    if packed:
+        # weight-only dequant-GEMM: int8/int4 codes + per-column scale/zero
+        (x_ref, w_ref, scale_ref, zero_ref, src_tbl, dst_tbl, o_ref,
+         buf, x_vmem, acc, out_tile, copy_sem, send_sem, recv_sems,
+         out_sem) = refs
+    else:
+        (x_ref, w_ref, src_tbl, dst_tbl, o_ref,
+         buf, x_vmem, acc, out_tile, copy_sem, send_sem, recv_sems,
+         out_sem) = refs
+        scale_ref = zero_ref = None
     s = pl.program_id(0)
     c = pl.program_id(1)
     j = pl.program_id(2)
@@ -120,7 +119,13 @@ def _ag_gemm_kernel(
     # compute tile j of the consumer GEMM (CompSpec tile, accum dtype);
     # a tuned (tm, tk) decomposes the [m_sub, k] x [k, bn] contraction into
     # explicit MXU blocks, the default keeps the whole-chunk dot
-    acc[...] = blocked_dot(x_vmem[...], w_ref[...], (tm, bn, tk), accum=accum, unroll=True)
+    w_val = w_ref[...]
+    if packed:
+        # dequant in VMEM right before the MXU: the [k, bn] block arrives as
+        # int8 codes (int4 codes in an int8 container), so HBM->VMEM moves
+        # 1/2-1/4 the bytes; scales/zeros are per output column
+        w_val = (w_val.astype(accum) - zero_ref[0, :][None, :]) * scale_ref[0, :][None, :]
+    acc[...] = blocked_dot(x_vmem[...], w_val, (tm, bn, tk), accum=accum, unroll=True)
     out_tile[...] = acc[...].astype(out_tile.dtype)
     oc = backend.make_async_copy(
         out_tile,
@@ -149,16 +154,30 @@ def ag_gemm_shard(
     """Per-shard fused AG+GEMM. x: [m_loc, K], w: [K, n_loc] -> [R*m_loc, n_loc].
 
     Call inside shard_map over ``channel.axis``.  The schedule (order,
-    channels), the accumulation dtype, and the (tm, tn, tk) compute tile come
-    from ``channel`` via the plan layer; ``bn`` overrides
-    ``channel.comp.tile[1]``.  ``interpret=True`` runs the interpreter (CPU
-    validation); False lowers to Mosaic on TPU hosts — on a CPU-only host the
-    emulated backend target interprets regardless, since there is no Mosaic
-    toolchain to compile with.
+    channels), the accumulation dtype (``channel.comp.accum_dtype`` — the
+    reduction dtype, independent of what travels), and the (tm, tn, tk)
+    compute tile come from ``channel`` via the plan layer; ``bn`` overrides
+    ``channel.comp.tile[1]``.  ``w`` may be a
+    :class:`~repro.core.quant.PackedWeight` (weight-only int8/int4): the
+    weight blocks stream HBM->VMEM as integer codes and are dequantized in
+    VMEM right before the MXU.  Quantized *activation* wires
+    (``channel.quant.wire_dtype`` int8/fp8) are XLA-backend only — the scale
+    side-channel per remote DMA is not plumbed here; this raises rather than
+    silently sending unscaled codes.  ``interpret=True`` runs the
+    interpreter (CPU validation); False lowers to Mosaic on TPU hosts — on a
+    CPU-only host the emulated backend target interprets regardless, since
+    there is no Mosaic toolchain to compile with.
     """
     channel = channel or BlockChannel(axis="model")
+    if channel.quant.is_quantized:
+        raise NotImplementedError(
+            "ag_gemm_shard: quantized activation wires (QuantSpec.wire_dtype="
+            f"{channel.quant.wire_dtype!r}) are not supported by the fused "
+            "Pallas kernel; use backend='xla' (weight-only quantization via "
+            "PackedWeight IS supported here)")
     axis = channel.axis
     m_loc, k = x.shape
+    packed = isinstance(w, PackedWeight)
     _, n_loc = w.shape
     comp_tile = tuple(channel.comp.tile)
     bn = bn or comp_tile[1]
@@ -174,7 +193,7 @@ def ag_gemm_shard(
     else:
         tm = largest_divisor(m_sub, comp_tile[0])
         tk = largest_divisor(k, comp_tile[2])
-    accum = jnp.dtype(plan.flow_dtype)
+    accum = jnp.dtype(plan.accum_dtype)
     src_tbl = jnp.asarray(plan.src_tables(), jnp.int32).reshape(-1)
     dst_tbl = jnp.asarray(plan.flow_dst_tables(), jnp.int32).reshape(-1)
 
@@ -190,16 +209,34 @@ def ag_gemm_shard(
         bn=bn,
         tk=tk,
         accum=accum,
+        packed=packed,
     )
+    in_specs = [
+        pl.BlockSpec(memory_space=backend.ANY),
+        pl.BlockSpec((k, bn), lambda s, c, j: (0, j)),
+    ]
+    operands = [x]
+    if packed:
+        operands.append(w.q)
+        # per-output-column scale/zero ride as (1, bn) blocks next to the
+        # weight block they dequantize (zero points default to 0 — symmetric)
+        zero = w.zero if w.zero is not None else jnp.zeros_like(w.scale)
+        operands.extend([w.scale.reshape(1, n_loc), zero.reshape(1, n_loc)])
+        in_specs.extend([
+            pl.BlockSpec((1, bn), lambda s, c, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda s, c, j: (0, j)),
+        ])
+    else:
+        operands.append(w)
+    in_specs.extend([
+        pl.BlockSpec(memory_space=backend.ANY),  # src schedule table
+        pl.BlockSpec(memory_space=backend.ANY),  # dst schedule table
+    ])
+    operands.extend([src_tbl, dst_tbl])
     return backend.pallas_call(
         kern,
         grid=(world_size, nch, n_tiles),
-        in_specs=[
-            pl.BlockSpec(memory_space=backend.ANY),
-            pl.BlockSpec((k, bn), lambda s, c, j: (0, j)),
-            pl.BlockSpec(memory_space=backend.ANY),  # src schedule table
-            pl.BlockSpec(memory_space=backend.ANY),  # dst schedule table
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((world_size * m_loc, n_loc), x.dtype),
         scratch_shapes=[
@@ -214,4 +251,4 @@ def ag_gemm_shard(
         ],
         dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         interpret=interpret,
-    )(x, w, src_tbl, dst_tbl)
+    )(*operands)

@@ -5,9 +5,11 @@ plan's reduce-scatter view (the time reversal of the order's source schedule —
 for "ring" in the plan's default orientation exactly the paper's
 ``seg = (rank + stage + 1) % W``) is baked in
 as int32 segment/destination tables, so ``CommSpec.order``, ``num_channels``
-(column chunking, C independent flows), ``CompSpec.accum_dtype`` (the flow
-dtype partials travel in) and the CompSpec (tm, tn, tk) compute tile behave
-identically on both backends.
+(column chunking, C independent flows), ``CompSpec.accum_dtype`` (the dtype
+partials are *reduced* in), ``BlockChannel.quant`` (the wire dtype partials
+*travel* in — a float wire is cast at each send edge and widened back before
+the add) and the CompSpec (tm, tn, tk) compute tile behave identically on
+both backends.
 
 Stage ``s``, channel ``c`` at rank ``r``:
   1. ``consumer_tile_wait``   — wait for the partial pushed by the plan's
@@ -48,25 +50,13 @@ from repro.core.channels import BlockChannel
 from repro.core.comp_tiles import DEFAULT_TILE, blocked_dot, largest_divisor
 from repro.core.mapping import effective_channels
 from repro.core.plan import build_plan
+from repro.core.quant import PackedWeight
 
 __all__ = ["gemm_rs_shard"]
 
 
 def _gemm_rs_kernel(
-    x_ref,
-    w_ref,
-    seg_tbl,
-    dst_tbl,
-    o_ref,
-    x_vmem,
-    acc,
-    prev,
-    out_cast,
-    copy_sem,
-    send_sems,
-    recv_sems,
-    rbuf,
-    *,
+    *refs,
     axis: str,
     world: int,
     nch: int,
@@ -76,8 +66,24 @@ def _gemm_rs_kernel(
     tm: int,
     bn: int,
     tk: int,
-    flow,
+    accum,
+    packed: bool,
+    split: bool,
 ):
+    if packed:
+        # weight-only dequant-GEMM: int8/int4 codes + per-column scale/zero
+        (x_ref, w_ref, scale_ref, zero_ref, seg_tbl, dst_tbl, o_ref,
+         x_vmem, acc, prev, out_cast, copy_sem, send_sems, recv_sems,
+         rbuf, *rest) = refs
+    else:
+        (x_ref, w_ref, seg_tbl, dst_tbl, o_ref,
+         x_vmem, acc, prev, out_cast, copy_sem, send_sems, recv_sems,
+         rbuf, *rest) = refs
+        scale_ref = zero_ref = None
+    # when the wire dtype differs from the accumulation dtype partials are
+    # cast into a per-channel send staging buffer before each hop (the
+    # accumulator itself stays in accum dtype)
+    send_buf = rest[0] if split else None
     s = pl.program_id(0)
     c = pl.program_id(1)
     j = pl.program_id(2)
@@ -88,15 +94,20 @@ def _gemm_rs_kernel(
 
     def _push_rdma(stage):
         # identical descriptor on sender & receiver (SPMD) — sender start()s,
-        # receiver wait_recv()s, sender wait_send()s before the accumulator
-        # columns are overwritten.  Source: the channel's accumulator columns.
-        # The send semaphore is per-channel: with a shared one the wait_send
-        # credits of concurrent channels are interchangeable, so channel c's
-        # stage-(s-1) push could still be reading its acc columns when stage s
-        # overwrites them (analysis.protocol flags this as
-        # overwritten_before_wait for num_channels >= 2).
+        # receiver wait_recv()s, sender wait_send()s before the source
+        # columns are overwritten.  Source: the channel's accumulator columns
+        # (wire == accum), or the channel's rows of the wire-dtype staging
+        # buffer (wire != accum).  The send semaphore is per-channel: with a
+        # shared one the wait_send credits of concurrent channels are
+        # interchangeable, so channel c's stage-(s-1) push could still be
+        # reading its source when stage s overwrites it (analysis.protocol
+        # flags this as overwritten_before_wait for num_channels >= 2).
+        if split:
+            src = send_buf.at[pl.ds(c * m_loc, m_loc), :]
+        else:
+            src = acc.at[:, pl.ds(c * n_sub, n_sub)]
         return primitives.make_tile_push(
-            src_ref=acc.at[:, pl.ds(c * n_sub, n_sub)],
+            src_ref=src,
             dst_ref=rbuf.at[stage * nch + c],
             send_sem=send_sems.at[c],
             recv_sem=recv_sems.at[stage * nch + c],
@@ -131,12 +142,18 @@ def _gemm_rs_kernel(
     # GEMM tile j for segment `seg` (+ fused reduction of the incoming
     # partial); a tuned (tm, tk) decomposes the [m_loc, k_loc] x [k_loc, bn]
     # contraction into explicit MXU blocks, the default keeps one dot
-    part = blocked_dot(x_vmem[...], w_ref[...], (tm, bn, tk), accum=flow, unroll=True)
+    w_val = w_ref[...]
+    if packed:
+        # dequant in VMEM right before the MXU: the [k_loc, bn] block arrives
+        # as int8 codes (int4 codes in an int8 container), so HBM->VMEM moves
+        # 1/2-1/4 the bytes; scales/zeros are per output column
+        w_val = (w_val.astype(accum) - zero_ref[0, :][None, :]) * scale_ref[0, :][None, :]
+    part = blocked_dot(x_vmem[...], w_val, (tm, bn, tk), accum=accum, unroll=True)
     col = c * n_sub + j * bn
 
     @pl.when(s > 0)
     def _add_prev():
-        acc[:, pl.ds(col, bn)] = part + prev[:, pl.ds(j * bn, bn)]
+        acc[:, pl.ds(col, bn)] = part + prev[:, pl.ds(j * bn, bn)].astype(part.dtype)
 
     @pl.when(s == 0)
     def _no_prev():
@@ -146,6 +163,12 @@ def _gemm_rs_kernel(
     def _stage_finish():
         @pl.when(s < world - 1)
         def _push():
+            if split:
+                # wire-dtype cast at the send edge; safe to overwrite — the
+                # stage-(s-1) push from these rows drained at this stage's
+                # j == 0 wait_send
+                send_buf[pl.ds(c * m_loc, m_loc), :] = (
+                    acc[:, pl.ds(c * n_sub, n_sub)].astype(send_buf.dtype))
             _push_rdma(s).start()  # tile_push_data + peer_tile_notify
 
         @pl.when(s == world - 1)
@@ -169,15 +192,28 @@ def gemm_rs_shard(
     """Per-shard fused GEMM+RS. x: [M, k_loc], w: [k_loc, N] -> [M/R, N].
 
     Call inside shard_map over ``channel.axis``; the schedule (order,
-    channels), the flow dtype partials accumulate/travel in, and the
+    channels), the accumulation dtype (``channel.comp.accum_dtype``) and the
+    wire dtype partials travel in (``channel.quant`` — a float wire casts at
+    each send edge, the default inherits the accumulation dtype), and the
     (tm, tn, tk) compute tile come from ``channel`` via the plan layer;
-    ``bn`` overrides ``channel.comp.tile[1]``.  ``interpret=False`` lowers to
-    Mosaic only on TPU hosts — on a CPU-only host the emulated backend target
-    interprets regardless.
+    ``bn`` overrides ``channel.comp.tile[1]``.  ``w`` may be a
+    :class:`~repro.core.quant.PackedWeight` (weight-only int8/int4): the
+    weight blocks stream HBM->VMEM as integer codes and are dequantized in
+    VMEM right before the MXU.  Quantized *activation* wires (int8/fp8) are
+    XLA-backend only — the scale side-channel per remote DMA is not plumbed
+    here.  ``interpret=False`` lowers to Mosaic only on TPU hosts — on a
+    CPU-only host the emulated backend target interprets regardless.
     """
     channel = channel or BlockChannel(axis="model")
+    if channel.quant.is_quantized:
+        raise NotImplementedError(
+            "gemm_rs_shard: quantized activation wires (QuantSpec.wire_dtype="
+            f"{channel.quant.wire_dtype!r}) are not supported by the fused "
+            "Pallas kernel; use backend='xla' (weight-only quantization via "
+            "PackedWeight IS supported here)")
     axis = channel.axis
     m_glob, k_loc = x.shape
+    packed = isinstance(w, PackedWeight)
     _, n = w.shape
     assert m_glob % world_size == 0
     m_loc = m_glob // world_size
@@ -195,7 +231,9 @@ def gemm_rs_shard(
     else:
         tm = largest_divisor(m_loc, comp_tile[0])
         tk = largest_divisor(k_loc, comp_tile[2])
-    flow = jnp.dtype(plan.flow_dtype)
+    accum = jnp.dtype(plan.accum_dtype)
+    wire = jnp.dtype(plan.flow_dtype)
+    split = wire != accum
     seg_tbl = jnp.asarray(plan.rs_seg_tables(), jnp.int32).reshape(-1)
     dst_tbl = jnp.asarray(plan.rs_dst_tables(), jnp.int32).reshape(-1)
 
@@ -210,29 +248,52 @@ def gemm_rs_shard(
         tm=tm,
         bn=bn,
         tk=tk,
-        flow=flow,
+        accum=accum,
+        packed=packed,
+        split=split,
     )
+    in_specs = [
+        pl.BlockSpec(memory_space=backend.ANY),
+        pl.BlockSpec((k_loc, bn), lambda s, c, j: (0, c * (n_sub // bn) + j)),
+    ]
+    operands = [x]
+    if packed:
+        operands.append(w.q)
+        # per-output-column scale/zero ride as (1, bn) blocks next to the
+        # weight block they dequantize (zero points default to 0 — symmetric)
+        zero = w.zero if w.zero is not None else jnp.zeros_like(w.scale)
+        operands.extend([w.scale.reshape(1, n), zero.reshape(1, n)])
+        in_specs.extend([
+            pl.BlockSpec((1, bn), lambda s, c, j: (0, c * (n_sub // bn) + j)),
+            pl.BlockSpec((1, bn), lambda s, c, j: (0, c * (n_sub // bn) + j)),
+        ])
+    else:
+        operands.append(w)
+    in_specs.extend([
+        pl.BlockSpec(memory_space=backend.ANY),  # segment schedule table
+        pl.BlockSpec(memory_space=backend.ANY),  # push-dst schedule table
+    ])
+    operands.extend([seg_tbl, dst_tbl])
+    scratch = [
+        backend.vmem_scratch((m_loc, k_loc), x.dtype),  # x segment
+        backend.vmem_scratch((m_loc, n), accum),  # stage accumulator
+        backend.vmem_scratch((m_loc, n_sub), wire),  # received partial
+        backend.vmem_scratch((m_loc, n_sub), x.dtype),  # final cast
+        backend.dma_semaphore(),  # local copies
+        backend.dma_semaphore((nch,)),  # per-channel sends (release order)
+        backend.dma_semaphore((world_size * nch,)),  # per-(stage,ch) recv
+        backend.vmem_scratch((world_size * nch, m_loc, n_sub), wire),  # rbuf
+    ]
+    if split:
+        # per-channel wire-dtype send staging (rows c*m_loc:(c+1)*m_loc)
+        scratch.append(backend.vmem_scratch((nch * m_loc, n_sub), wire))
     return backend.pallas_call(
         kern,
         grid=(world_size, nch, n_tiles),
-        in_specs=[
-            pl.BlockSpec(memory_space=backend.ANY),
-            pl.BlockSpec((k_loc, bn), lambda s, c, j: (0, c * (n_sub // bn) + j)),
-            pl.BlockSpec(memory_space=backend.ANY),  # segment schedule table
-            pl.BlockSpec(memory_space=backend.ANY),  # push-dst schedule table
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(memory_space=backend.ANY),
         out_shape=jax.ShapeDtypeStruct((m_loc, n), x.dtype),
-        scratch_shapes=[
-            backend.vmem_scratch((m_loc, k_loc), x.dtype),  # x segment
-            backend.vmem_scratch((m_loc, n), flow),  # stage accumulator
-            backend.vmem_scratch((m_loc, n_sub), flow),  # received partial
-            backend.vmem_scratch((m_loc, n_sub), x.dtype),  # final cast
-            backend.dma_semaphore(),  # local copies
-            backend.dma_semaphore((nch,)),  # per-channel sends (release order)
-            backend.dma_semaphore((world_size * nch,)),  # per-(stage,ch) recv
-            backend.vmem_scratch((world_size * nch, m_loc, n_sub), flow),  # rbuf
-        ],
+        scratch_shapes=scratch,
         dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         interpret=interpret,
-    )(x, w, seg_tbl, dst_tbl)
+    )(*operands)

@@ -6,7 +6,7 @@ paper's AG+GEMM), attention runs locally on the head shard with a
 memory-efficient chunked online-softmax (differentiable), and the output
 projection is the GEMM+RS consumer (paper Fig. 4).  Both collectives lower
 through ``compile_overlap`` as tile plans, so the tile order / channel count /
-flow dtype selected by ``pc.channel`` apply here uniformly.
+accum dtype / wire encoding selected by ``pc.channel`` apply here uniformly.
 
 Decode path (``apply_decode``): activations are replicated over the TP axis;
 projections are local column/row-parallel matmuls with a psum epilogue, and the
@@ -208,13 +208,15 @@ def _project_qkv(params, h, pc, lay, hd, qkv=None):
 
 def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
               rope_theta=None, attn_chunk=1024, return_kv=False, tune=False,
-              qkv=None, next_proj=None, ep=None):
+              quant=None, qkv=None, next_proj=None, ep=None):
     """Full-sequence attention block body (call inside pc.smap manual region).
 
     x: [B, s_loc, D] sequence-sharded. Returns [B, s_loc, D] (residual added);
     with ``return_kv``, also the per-shard KV in cache layout
     [B, kv_loc, S, hd] (prefill-into-cache).  ``tune=True`` lets the AG+GEMM
-    and GEMM+RS collectives resolve autotuned BlockChannels (repro.tune).
+    and GEMM+RS collectives resolve autotuned BlockChannels (repro.tune);
+    ``quant`` pins a QuantSpec wire encoding (or ``"auto"`` opens the int8
+    wire axis under ``tune=True``) — see ``ParallelContext.quant``.
 
     Inter-op seam fusion (``pc.fuse_seams``): ``qkv`` is this layer's fused
     qkv projection already produced by the upstream op's RS->AG ring pass
@@ -230,6 +232,8 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
             "the dispatch/combine a2a in moe.apply_seq only")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
+    if quant is not None and pc.quant != quant:
+        pc = dataclasses.replace(pc, quant=quant)
     lay = _lay(cfg, pc.tp)
     hd = cfg.hd
     b = x.shape[0]
@@ -262,7 +266,8 @@ def apply_seq(params, x, pc, cfg, *, causal=True, window=None,
 
 
 def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
-                   rope_theta=None, tune=False, next_proj=None, ep=None):
+                   rope_theta=None, tune=False, quant=None, next_proj=None,
+                   ep=None):
     """AG-Q + ring-KV attention block body (paper Fig. 6 layer form).
 
     Where :func:`apply_seq` gathers the WHOLE qkv projection through the
@@ -293,6 +298,8 @@ def apply_seq_ring(params, x, pc, cfg, *, causal=True, window=None,
             "selects the dispatch/combine a2a in moe.apply_seq only")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
+    if quant is not None and pc.quant != quant:
+        pc = dataclasses.replace(pc, quant=quant)
     lay = _lay(cfg, pc.tp)
     hd = cfg.hd
     b, s_loc, _ = x.shape

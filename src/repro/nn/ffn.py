@@ -4,7 +4,8 @@ Forward = AG+GEMM (gate/up fused, column-parallel) -> activation ->
 GEMM+RS (down, row-parallel): exactly the tensor-parallel MLP of paper Fig. 1.
 In overlap mode both collectives lower through ``compile_overlap`` as tile
 plans run by the generic schedule executor, so the layer inherits whatever
-tile order / channel count / flow dtype ``pc.channel`` selects — or, with
+tile order / channel count / accum dtype / wire encoding ``pc.channel``
+selects — or, with
 ``apply_seq(..., tune=True)``, whatever the ``repro.tune`` autotuner picks
 per (kind, shape) on this mesh.
 """
@@ -51,13 +52,16 @@ def seam_proj(params, cfg):
     return (lambda y: rms_norm(y, params["ln"], cfg.norm_eps)), params["w_gu"]
 
 
-def apply_seq(params, x, pc, cfg, *, tune=False, gu=None, next_proj=None,
-              ep=None):
+def apply_seq(params, x, pc, cfg, *, tune=False, quant=None, gu=None,
+              next_proj=None, ep=None):
     """x: [B, s_loc, D] -> [B, s_loc, D] (+residual). Inside manual region.
 
     Per-shard w_gu is [D, 2*f_loc] with gate|up halves interleaved per shard
     (column-parallel), so the activation is local.  ``tune=True`` lets each
     collective op resolve its own autotuned BlockChannel (repro.tune).
+    ``quant`` pins a :class:`~repro.core.quant.QuantSpec` wire encoding on
+    this block's collectives (or ``"auto"`` opens the int8 wire axis under
+    ``tune=True``) — see ``ParallelContext.quant``.
     ``ep`` is accepted for keyword-surface symmetry across the nn blocks but
     must be falsy: a dense MLP has no expert-parallel form.
 
@@ -75,6 +79,8 @@ def apply_seq(params, x, pc, cfg, *, tune=False, gu=None, next_proj=None,
             "dispatch/combine a2a in moe.apply_seq only")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
+    if quant is not None and pc.quant != quant:
+        pc = dataclasses.replace(pc, quant=quant)
     if gu is None:
         h = rms_norm(x, params["ln"], cfg.norm_eps)
         gu = pc.ag_matmul(h, params["w_gu"])  # AG + GEMM  [B, S, 2*f_loc]

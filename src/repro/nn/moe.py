@@ -72,14 +72,18 @@ def specs(cfg, tp: int, dp) -> dict:
     return s
 
 
-def apply_seq(params, x, pc, cfg, *, tune=False, ep=None, next_proj=None):
+def apply_seq(params, x, pc, cfg, *, tune=False, quant=None, ep=None,
+              next_proj=None):
     """x: [B, s_loc, D] -> ([B, s_loc, D], aux_loss). Inside manual region.
 
     Batch rows are routed/dispatched independently (vmap over B) so the
     DP-sharded batch dim partitions cleanly; capacity is per (batch row,
     sequence chunk).  ``tune=True`` lets the routed exchange (and the
     shared-expert MLP, which sees the same pc) resolve autotuned
-    BlockChannels (repro.tune).
+    BlockChannels (repro.tune).  ``quant`` pins a QuantSpec wire encoding
+    (or ``"auto"``, a no-op for the a2a exchange itself — the MoE kinds
+    carry int32 routing tables — but live for the shared-expert MLP) — see
+    ``ParallelContext.quant``.
 
     ``ep`` selects the expert-parallel path (``pc.a2a_moe``: overlapped
     dispatch/combine all-to-all with the routing tables riding the token
@@ -106,6 +110,8 @@ def apply_seq(params, x, pc, cfg, *, tune=False, ep=None, next_proj=None):
             "expert parallelism is opt-in")
     if tune and not pc.tune:
         pc = dataclasses.replace(pc, tune=True)
+    if quant is not None and pc.quant != quant:
+        pc = dataclasses.replace(pc, quant=quant)
     m = cfg.moe
     e_pad = params["w_gu"].shape[0] * pc.tp  # per-shard E_loc * tp
     h = rms_norm(x, params["ln"], cfg.norm_eps)

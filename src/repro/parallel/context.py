@@ -10,13 +10,17 @@ describing the communication/computation design point:
    FSDP/DP axes stay under XLA's automatic partitioner)
 
 Every per-shard collective op lowers through ``compile_overlap`` with
-``pc.channel``, so the whole ``CommSpec x CompSpec`` space (tile order,
-channel count, flow dtype) is selected once here and honored by every layer
-(`nn/attention.py`, `nn/ffn.py`, `nn/moe.py`, `nn/mamba.py`).
+``pc.channel``, so the whole ``CommSpec x CompSpec x QuantSpec`` space (tile
+order, channel count, accum dtype, wire encoding) is selected once here and
+honored by every layer (`nn/attention.py`, `nn/ffn.py`, `nn/moe.py`,
+`nn/mamba.py`).  ``quant=`` pins a :class:`QuantSpec` on every op (wire
+dtype split from the accum dtype), or ``quant="auto"`` opens the int8 wire
+axis to the tuner.
 
 With ``tune=True`` the design point is not fixed: each op resolves the best
 ``BlockChannel`` for its own operand shapes through the ``repro.tune``
-autotuner over the JOINT space — the comm half (order, C, flow dtype) and
+autotuner over the JOINT space — the comm half (order, C, accum dtype, and
+under ``quant="auto"`` the wire dtype) and
 the compute half (the (tm, tn, tk) consumer tile) together (persistent
 per-mesh cache; trace-safe cost-model ranking, or measured winners wherever
 the cache was pre-warmed with ``repro.tune.autotune(..., ranker="measure")``).
@@ -43,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.channels import BlockChannel
 from repro.core.compiler import compile_overlap
+from repro.core.quant import QuantSpec
 
 __all__ = ["ParallelContext", "manual_only"]
 
@@ -84,8 +89,19 @@ class ParallelContext:
     ep_axis: Optional[str] = None  # expert-parallel opt-in: mesh axis the
                                             # MoE dispatch/combine a2a runs
                                             # over (usually == axis)
+    quant: Any = None  # wire-dtype policy: None (inherit channel),
+                                            # a QuantSpec (pin every op's wire
+                                            # encoding), or "auto"/True (open
+                                            # the flow axis under tune=True)
 
     def __post_init__(self):
+        if self.quant is True:
+            object.__setattr__(self, "quant", "auto")
+        if not (self.quant is None or self.quant == "auto"
+                or isinstance(self.quant, QuantSpec)):
+            raise ValueError(
+                f"quant must be None, a QuantSpec, or 'auto'/True; "
+                f"got {self.quant!r}")
         if self.ep_axis is not None and self.ep_axis not in dict(self.mesh.shape):
             raise ValueError(
                 f"ep_axis {self.ep_axis!r} is not a mesh axis "
@@ -99,6 +115,11 @@ class ParallelContext:
             raise ValueError(
                 f"BlockChannel.axis {self.channel.axis!r} != "
                 f"ParallelContext.axis {self.axis!r}")
+        if isinstance(self.quant, QuantSpec) and self.channel.quant != self.quant:
+            # bake the pinned spec into the channel once: every op (tuned or
+            # not) inherits the wire encoding from pc.channel from here on
+            object.__setattr__(
+                self, "channel", self.channel.with_(quant=self.quant))
 
     # ---- static topology -----------------------------------------------------
     @property
@@ -149,17 +170,27 @@ class ParallelContext:
     # ---- per-shard collective ops (call inside smap) ---------------------------
     # every op lowers kind -> plan -> executor through the frontend; the plan
     # cache makes repeated layer calls reuse one schedule per design point
+    def _tune_space(self):
+        """The JOINT space, widened with the int8 wire axis under quant='auto'."""
+        from repro.tune import JOINT_SPACE
+
+        if self.quant == "auto":
+            return dataclasses.replace(JOINT_SPACE, flows=(None, "int8"))
+        return JOINT_SPACE
+
     def _op(self, kind: str, shapes: Tuple = ()) -> Callable:
         channel = self.channel
         if self.tune and self.mode == "overlap" and shapes:
-            from repro.tune import JOINT_SPACE, resolve_channel
+            from repro.tune import resolve_channel
 
             # host-side: tuning-cache lookup / cost-model ranking (trace-safe);
-            # the JOINT space searches both halves — comm (order, C, flow
-            # dtype) and compute ((tm, tn, tk) consumer tile) — per op shape
+            # the JOINT space searches both halves — comm (order, C, wire
+            # dtype under quant="auto") and compute ((tm, tn, tk) consumer
+            # tile) — per op shape
             channel = resolve_channel(
                 kind, shapes=shapes, mesh=self.mesh, axis=self.axis,
-                base=self.channel, ranker=self.tune_ranker, space=JOINT_SPACE)
+                base=self.channel, ranker=self.tune_ranker,
+                space=self._tune_space())
         return compile_overlap(kind, channel, backend="xla",
                                overlapped=(self.mode == "overlap"))
 
@@ -179,12 +210,10 @@ class ParallelContext:
         """
         ops = ["matmul_rs", "ag_matmul"]
         if self.tune and self.mode == "overlap":
-            from repro.tune import JOINT_SPACE
-
             fn = compile_overlap(
                 ops, channel="auto", axis=self.axis, mesh=self.mesh,
                 tune_ranker=self.tune_ranker, tune_base=self.channel,
-                tune_space=JOINT_SPACE)
+                tune_space=self._tune_space())
         else:
             fn = compile_overlap(
                 ops, channel=self.channel,
@@ -224,12 +253,13 @@ class ParallelContext:
             axis=self.ep_axis)
         ops = ["a2a_dispatch", "combine_rs"]
         if self.tune and self.mode == "overlap":
-            from repro.tune import JOINT_SPACE
-
+            # the a2a MoE kinds are not QUANT_WIRE_KINDS, so the widened
+            # space's flow axis is inert here (int32 routing tables dilute
+            # the win); _tune_space keeps the call sites uniform regardless
             fn = compile_overlap(
                 ops, channel="auto", axis=self.ep_axis, mesh=self.mesh,
                 tune_ranker=self.tune_ranker, tune_base=ch,
-                tune_space=JOINT_SPACE)
+                tune_space=self._tune_space())
         else:
             fn = compile_overlap(
                 ops, channel=ch, overlapped=(self.mode == "overlap"))

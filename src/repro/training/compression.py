@@ -10,26 +10,22 @@ already bandwidth-optimal per byte, so compression applies to the *replicated*
 (pure-DP) parameter mode — the train driver enables it with
 ``--grad-compression`` when ``--fsdp=off``; tests validate the error-feedback
 contract directly.
+
+The int8 codec itself lives in :mod:`repro.core.quant` (shared with the
+wire-dtype QuantSpec layer); ``quantize_int8``/``dequantize_int8`` are
+re-exported here for the existing training call sites with their semantics
+unchanged (per-tensor symmetric scale, 1e-12 floor, +/-127 clip — pinned by
+``tests/test_properties.py``'s error-feedback bound).
 """
 from __future__ import annotations
-
-from typing import Tuple
 
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.quant import dequantize_int8, quantize_int8
+
 __all__ = ["quantize_int8", "dequantize_int8", "compress_with_feedback",
            "psum_compressed"]
-
-
-def quantize_int8(g) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
 
 
 def compress_with_feedback(g, err):

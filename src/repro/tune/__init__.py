@@ -1,7 +1,8 @@
 """Design-space autotuner over the compiled frontend (ROADMAP "Next").
 
 The paper's core argument (§3.1) is that communication and computation tune
-*independently*: the best ``(tile order, channel count f_C, flow dtype)``
+*independently*: the best ``(tile order, channel count f_C, accum dtype —
+and, under a quant-widened space, the wire dtype)``
 on the comm half and the best ``(tm, tn, tk)`` consumer tile on the compute
 half both change per shape and per mesh.  PR 2 made that space uniformly
 sweepable through ``compile_overlap``; this package searches it:
@@ -18,7 +19,9 @@ or transparently:
 
 ``DEFAULT_SPACE`` sweeps the comm half only; ``JOINT_SPACE`` adds the
 pruned compute-tile lattice (``tune/candidates.py``) — shape-, VMEM- and
-MXU-alignment-constrained via the ``repro.backend`` hardware probes.
+MXU-alignment-constrained via the ``repro.backend`` hardware probes;
+``QUANT_SPACE`` additionally opens the wire-dtype (flow) axis for the
+``QUANT_WIRE_KINDS`` (``compile_overlap(..., quant="auto")``).
 
 Rankers
 -------
@@ -65,6 +68,8 @@ from repro.tune.candidates import (
     GEMM_TILE_KINDS,
     JOINT_SPACE,
     MOE_SIG_KINDS,
+    QUANT_SPACE,
+    QUANT_WIRE_KINDS,
     SEQ_KIND,
     Candidate,
     Space,
@@ -89,8 +94,10 @@ __all__ = [
     "Candidate",
     "DEFAULT_SPACE",
     "JOINT_SPACE",
+    "QUANT_SPACE",
     "COMP_TILE_LATTICE",
     "GEMM_TILE_KINDS",
+    "QUANT_WIRE_KINDS",
     "TUNABLE_KINDS",
     "SEQ_KIND",
     "A2A_SEQ_KIND",
@@ -112,10 +119,12 @@ _ENV_RANKER = "REPRO_TUNE_RANKER"
 
 # record-format version.  v1 (PR 3) records are comm-only (no ``comp_tile``);
 # v2 (PR 4) records predate the measured-sweep stats and the attention/MoE
-# compute-tile axes, so their winners were chosen from a *smaller* joint
-# space.  Loading any older (or malformed) record re-tunes — a cheap model
-# ranking — instead of guessing; it never crashes and never half-applies.
-CACHE_SCHEMA = 3
+# compute-tile axes; v3 records predate the wire-dtype (flow) axis, so their
+# winners were chosen from a space that could never trade wire bytes for
+# quantization error.  Loading any older (or malformed) record re-tunes — a
+# cheap model ranking — instead of guessing; it never crashes and never
+# half-applies.
+CACHE_SCHEMA = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,11 +191,13 @@ def _parse_record(rec: Any) -> Optional[Dict[str, Any]]:
     try:
         if int(rec.get("schema", 1)) != CACHE_SCHEMA:
             return None
+        flow = rec.get("flow")
         cand = Candidate(
             order=rec["order"],
             num_channels=int(rec["num_channels"]),
             accum_dtype=rec["accum_dtype"],
             comp_tile=tuple(int(t) for t in rec["comp_tile"]),
+            flow=None if flow is None else str(flow),
         )
         cand.channel("_probe")  # spec construction validates order/dtype/tile
         sweep = rec.get("sweep")
@@ -306,6 +317,7 @@ def autotune(
         "num_channels": best.num_channels,
         "accum_dtype": best.accum_dtype,
         "comp_tile": list(best.comp_tile),
+        "flow": best.flow,
         "ranker": use,
         "score": best_score,
         "score_unit": "us_measured" if use == "measure" else "s_predicted",

@@ -25,7 +25,10 @@ and feasibility-aware:
 ``DEFAULT_SPACE`` sweeps the comm half only (the compute tile stays the
 backend-chosen default) — the PR-3 contract.  ``JOINT_SPACE`` adds the
 pruned (tm, tn, tk) lattice; ``compile_overlap(..., comp="auto")`` and
-``ParallelContext(tune=True)`` search it.
+``ParallelContext(tune=True)`` search it.  ``QUANT_SPACE`` additionally
+opens the wire-dtype (flow) axis — ``QuantSpec`` per candidate, enumerated
+only for the ``QUANT_WIRE_KINDS`` — which ``compile_overlap(...,
+quant="auto")`` searches.
 """
 from __future__ import annotations
 
@@ -37,13 +40,16 @@ from typing import Optional, Sequence, Tuple
 from repro.core.channels import BlockChannel, ORDERS
 from repro.core.comp_tiles import DEFAULT_TILE, resolve_tile, tile_footprint_bytes
 from repro.core.mapping import effective_channels
+from repro.core.quant import WIRE_DTYPES
 
 __all__ = [
     "Space",
     "Candidate",
     "DEFAULT_SPACE",
     "JOINT_SPACE",
+    "QUANT_SPACE",
     "COMP_TILE_LATTICE",
+    "QUANT_WIRE_KINDS",
     "GEMM_TILE_KINDS",
     "SEQ_KIND",
     "A2A_SEQ_KIND",
@@ -79,6 +85,13 @@ MOE_SIG_KINDS = ("ag_moe", A2A_SEQ_KIND)
 # (block_q, block_kv), MoE onto the per-expert grouped GEMMs
 GEMM_TILE_KINDS = ("ag_matmul", "matmul_rs")
 
+# kinds whose wire dtype is tunable (Space.flows).  The MoE kinds are
+# excluded: their state carries int32 routing tables alongside the float
+# tiles, so a quantized wire buys proportionally less and the executor's
+# error story (re-encode per hop on the combine) is worse — the flow axis
+# collapses to the inherited wire there.
+QUANT_WIRE_KINDS = ("ag_matmul", "matmul_rs", "ag_attention")
+
 # requested (tm, tn, tk) lattice of the joint space, default tile FIRST so a
 # cost-model tie breaks toward the backend-chosen blocking.  Points are
 # pruned per shape signature before ranking (see comp_tile_candidates).
@@ -107,6 +120,12 @@ class Space:
     channel_counts: Tuple[int, ...] = (1, 2, 4)
     accum_dtypes: Tuple[str, ...] = ("float32", "bfloat16")
     comp_tiles: Tuple[Tuple[int, int, int], ...] = (DEFAULT_TILE,)
+    # wire-dtype (flow) axis: None = inherit the channel's QuantSpec (for a
+    # bare channel, the accum dtype — legacy pricing).  Kept (None,) by
+    # default so an existing sweep's identity does not change; widened by
+    # QUANT_SPACE / compile_overlap(..., quant="auto").  Only the
+    # QUANT_WIRE_KINDS enumerate it.
+    flows: Tuple[Optional[str], ...] = (None,)
 
     def __post_init__(self):
         for o in self.orders:
@@ -117,14 +136,22 @@ class Space:
         for t in self.comp_tiles:
             if len(t) != 3 or any(int(d) < 1 for d in t):
                 raise ValueError(f"comp tiles must be 3 positive ints, got {t}")
+        for f in self.flows:
+            if f is not None and f not in WIRE_DTYPES:
+                raise ValueError(f"unknown flow dtype {f!r}; one of {WIRE_DTYPES}")
 
     def digest(self) -> str:
-        blob = repr((self.orders, self.channel_counts, self.accum_dtypes, self.comp_tiles))
+        blob = repr(
+            (self.orders, self.channel_counts, self.accum_dtypes, self.comp_tiles, self.flows)
+        )
         return hashlib.sha256(blob.encode()).hexdigest()[:8]
 
 
 DEFAULT_SPACE = Space()
 JOINT_SPACE = Space(comp_tiles=COMP_TILE_LATTICE)
+# the joint space with the wire-dtype axis opened: None first so a cost-model
+# tie breaks toward the un-quantized wire (exactness wins ties)
+QUANT_SPACE = Space(comp_tiles=COMP_TILE_LATTICE, flows=(None, "int8"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,10 +163,15 @@ class Candidate:
     num_channels: int
     accum_dtype: str
     comp_tile: Tuple[int, int, int] = DEFAULT_TILE
+    # tuned wire dtype; None = keep the base channel's QuantSpec untouched
+    flow: Optional[str] = None
 
     def channel(self, axis: str, base: Optional[BlockChannel] = None) -> BlockChannel:
         """Realize as a BlockChannel, inheriting non-tuned fields of ``base``."""
         base = base or BlockChannel(axis=axis)
+        kw = {}
+        if self.flow is not None:
+            kw["quant"] = dataclasses.replace(base.quant, wire_dtype=self.flow)
         return base.with_(
             axis=axis,
             num_channels=self.num_channels,
@@ -147,6 +179,7 @@ class Candidate:
             comp=dataclasses.replace(
                 base.comp, accum_dtype=self.accum_dtype, tile=tuple(self.comp_tile)
             ),
+            **kw,
         )
 
     def label(self) -> str:
@@ -154,6 +187,8 @@ class Candidate:
         if tuple(self.comp_tile) != DEFAULT_TILE:
             tm, tn, tk = self.comp_tile
             tag += f"/tile={tm}x{tn}x{tk}"
+        if self.flow is not None:
+            tag += f"/wire={self.flow}"
         return tag
 
 
@@ -280,6 +315,7 @@ def enumerate_candidates(
 
     if kind not in TUNABLE_KINDS:
         raise ValueError(f"kind {kind!r} is not tunable; one of {TUNABLE_KINDS}")
+    flows = space.flows if kind in QUANT_WIRE_KINDS else (None,)
     out, seen = [], set()
     for order in space.orders:
         for req in space.channel_counts:
@@ -300,12 +336,14 @@ def enumerate_candidates(
                 else:
                     tiles = tuple(dict.fromkeys(tuple(int(d) for d in t) for t in space.comp_tiles))
                 for tile in tiles:
-                    cand = Candidate(
-                        order=order, num_channels=nch, accum_dtype=accum, comp_tile=tile
-                    )
-                    if cand not in seen:
-                        seen.add(cand)
-                        out.append(cand)
+                    for flow in flows:
+                        cand = Candidate(
+                            order=order, num_channels=nch, accum_dtype=accum,
+                            comp_tile=tile, flow=flow,
+                        )
+                        if cand not in seen:
+                            seen.add(cand)
+                            out.append(cand)
     return tuple(out)
 
 
@@ -435,12 +473,16 @@ def enumerate_seq_candidates(
                     "matmul_rs", sig_rs, world=world, nch=nch, accum_dtype=accum, space=space
                 )
                 for tile in tiles:
-                    cand = Candidate(
-                        order=order, num_channels=nch, accum_dtype=accum, comp_tile=tile
-                    )
-                    if cand not in seen:
-                        seen.add(cand)
-                        out.append(cand)
+                    # both halves of the seam are QUANT_WIRE_KINDS, so the
+                    # shared candidate enumerates the flow axis too
+                    for flow in space.flows:
+                        cand = Candidate(
+                            order=order, num_channels=nch, accum_dtype=accum,
+                            comp_tile=tile, flow=flow,
+                        )
+                        if cand not in seen:
+                            seen.add(cand)
+                            out.append(cand)
     return tuple(out)
 
 

@@ -17,11 +17,15 @@ Order effects: a bidirectional ring with >= 2 channels splits traffic across
 both ICI link directions (halving per-link bytes); all2all pays the mean ring
 distance per payload on a physical ring/torus — computed from the actual
 ``schedules.all2all_peer`` tables (``_order_hops``), never a closed-form
-guess, so cost and schedule agree for non-power-of-2 worlds too.  The flow dtype
-scales wire bytes only for flows whose *partials* travel (rs / ag_rs); for
+guess, so cost and schedule agree for non-power-of-2 worlds too.  Dtype on
+the wire: with no tuned wire (``Candidate.flow is None``) the accum dtype
+scales wire bytes only for flows whose *partials* travel (rs / ag_rs) — for
 pure AG flows the input tiles travel in their own dtype, so the model is
-flow-dtype-neutral there and the enumeration order (float32 first) breaks the
-tie deterministically.
+dtype-neutral there and the enumeration order (float32 first) breaks the tie
+deterministically.  A tuned wire dtype (``Candidate.flow``, the QuantSpec
+axis) reprices EVERY travelling payload at its itemsize — AG tiles included
+— plus a small per-payload scale-table overhead for the quantized wires;
+that is the term that lets an int8 flow win comm-bound shapes.
 
 Compute-tile terms (the CompSpec half): for the GEMM kinds ``t_comp`` is
 itself a per-tile roofline over the realized (tm, tn, tk) blocking —
@@ -43,7 +47,7 @@ score matrix that cannot stay VMEM-resident pays an fp32 HBM round-trip —
 exactly what a flash-style tile removes).  The MoE consumer prices the
 per-expert grouped GEMMs with a tile-occupancy term: expert groups are
 capacity-sized, so the last row tile of each expert pads to tm and wastes
-MXU cycles.  All compute terms are accum-dtype-free — the flow dtype only
+MXU cycles.  All compute terms are accum-dtype-free — the wire dtype only
 prices the wire — so AG flows keep the deterministic f32 tie-break.
 
 ``alpha`` and ``beta`` are the calibratable constants of the classic
@@ -114,6 +118,11 @@ _VPU_FRACTION = 1.0 / 16.0
 _ROUTE_BYTES = 8
 
 
+# per-payload overhead of a quantized wire: one f32 scale per tile plus the
+# descriptor bookkeeping of the side-channel table ride-along
+_SCALE_OVERHEAD_BYTES = 64
+
+
 def _flow_bytes(accum_dtype: str) -> int:
     return jnp.dtype(accum_dtype).itemsize
 
@@ -157,46 +166,59 @@ def _moe_rows(sig: Tuple[int, ...], world: int) -> float:
 
 
 def step_terms(
-    kind: str, sig: Tuple[int, ...], world: int, accum_dtype: str
+    kind: str, sig: Tuple[int, ...], world: int, accum_dtype: str,
+    wire_dtype: str = None,
 ) -> Tuple[float, float]:
     """(wire_bytes, flops) per schedule step per rank for one candidate.
 
     Bytes counts every flow the executor permutes each step (tiles and/or
     the travelling reduction); flops counts the tile compute consumed while
     those transfers are in flight (see core/overlap.run_plan).
+    ``wire_dtype=None`` keeps the legacy pricing (tiles at the activation
+    itemsize, travelling reductions at the accum itemsize); a tuned wire
+    dtype reprices everything on the wire at its own itemsize plus the
+    quantized-wire scale overhead.
     """
-    fb = _flow_bytes(accum_dtype)
+    if wire_dtype is None:
+        fb = _flow_bytes(accum_dtype)
+        tb, extra = _TILE_BYTES, 0.0
+    else:
+        from repro.core.quant import wire_itemsize
+
+        fb = tb = wire_itemsize(wire_dtype)
+        extra = float(_SCALE_OVERHEAD_BYTES) if wire_dtype not in (
+            "float32", "bfloat16", "float16") else 0.0
     if kind == "ag_matmul":
         lead, m_loc, k, n_loc = sig
         lead = abs(lead)  # decode signatures carry a negated lead marker
-        wire = lead * m_loc * k * _TILE_BYTES
+        wire = lead * m_loc * k * tb + extra
         flops = 2.0 * lead * m_loc * k * n_loc
     elif kind == "matmul_rs":
         lead, m_glob, k_loc, n = sig
         lead = abs(lead)
         m_loc = max(1, m_glob // world)
-        wire = lead * m_loc * n * fb  # the accumulator is the flow
+        wire = lead * m_loc * n * fb + extra  # the accumulator is the flow
         flops = 2.0 * lead * m_loc * k_loc * n
     elif kind == "ag_attention":
         b, h, hkv, s_loc, d = sig
-        wire = 2.0 * b * hkv * s_loc * d * _TILE_BYTES  # K and V tiles
+        wire = 2.0 * b * hkv * s_loc * d * tb + extra  # K and V tiles
         flops = 4.0 * b * h * s_loc * s_loc * d  # QK^T + PV
     elif kind == "ag_moe":
         m_loc, d_model, _top_k, _e_loc, d_exp = sig[:5]
         # double ring: token tiles flow forward AND the combined reduction
-        # rides the same permutes (in the flow dtype)
-        wire = m_loc * d_model * (_TILE_BYTES + fb)
+        # rides the same permutes (in the wire dtype)
+        wire = m_loc * d_model * (tb + fb) + extra
         flops = 6.0 * _moe_rows(sig, world) * d_model * d_exp
     elif kind == "a2a_dispatch":
         m_loc, d_model, top_k, _e_loc, d_exp = sig[:5]
         # pairwise exchange of original token tiles plus the routing tables
         # (expert ids + gate weights) that travel with them
-        wire = m_loc * d_model * _TILE_BYTES + m_loc * max(1, top_k) * _ROUTE_BYTES
+        wire = m_loc * d_model * tb + m_loc * max(1, top_k) * _ROUTE_BYTES
         # the expert FFN on landed tiles runs while the next exchange flies
         flops = 6.0 * _moe_rows(sig, world) * d_model * d_exp
     elif kind == "combine_rs":
         m_loc, d_model = sig[0], sig[1]
-        # weighted partials return straight home in the flow dtype; the only
+        # weighted partials return straight home in the wire dtype; the only
         # compute on this half is the per-token accumulate
         wire = m_loc * d_model * fb
         flops = 2.0 * m_loc * d_model
@@ -274,7 +296,7 @@ def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate)
         blocks_mn = (m // tm) * (n // tn) * nch * lead
         n_tiles = blocks_mn * (k // tk)
         # output tiles are written in the activation dtype — the MXU
-        # accumulates f32 natively, so the flow dtype must not bias the
+        # accumulates f32 natively, so the wire dtype must not bias the
         # compute term (it already prices the wire for travelling partials)
         bytes_touched = (n_tiles * (tm * tk + tk * tn) + blocks_mn * tm * tn) * _TILE_BYTES
         bytes_touched += blocks_mn * _spill_bytes(tm, tn, tk, 4)
@@ -292,7 +314,7 @@ def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate)
         eff = (min(tm, mxu) / mxu) * (min(tk, mxu) / mxu)  # QK^T -> (tm, tk)
         t_flops = flops / (HW["peak_flops"] * eff)
         # softmax is VPU work over every score element, fp32 regardless of
-        # the flow dtype (the compute term must stay accum-dtype-free)
+        # the wire dtype (the compute term must stay accum-dtype-free)
         scores = float(b) * h * m * k * nch
         t_soft = _SOFTMAX_OPS * scores / (HW["peak_flops"] * _VPU_FRACTION)
         # per block: Q tile + K and V tiles in, one accumulator update out;
@@ -327,7 +349,7 @@ def comp_step_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate)
 
 def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
     """Predicted makespan (seconds) of one candidate; lower is better."""
-    wire, _ = step_terms(kind, sig, world, cand.accum_dtype)
+    wire, _ = step_terms(kind, sig, world, cand.accum_dtype, cand.flow)
     steps = world
 
     # per-link effective bytes for this tile order
@@ -346,7 +368,7 @@ def predict_cost(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -
 def _fill_drain_time(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> float:
     """The pipeline fill/drain term of one op's makespan (same math as
     ``predict_cost``'s ``fill``)."""
-    wire, _ = step_terms(kind, sig, world, cand.accum_dtype)
+    wire, _ = step_terms(kind, sig, world, cand.accum_dtype, cand.flow)
     dirs = 2.0 if (cand.order == "bidir_ring" and cand.num_channels >= 2) else 1.0
     hops = _order_hops(cand.order, world)
     t_comm = wire * hops / (HW["link_bw"] * dirs)
@@ -424,7 +446,7 @@ def predict_a2a_cost(
 
 def explain(kind: str, sig: Tuple[int, ...], world: int, cand: Candidate) -> Dict[str, float]:
     """Itemized terms for reports/benchmarks (same math as predict_cost)."""
-    wire, flops = step_terms(kind, sig, world, cand.accum_dtype)
+    wire, flops = step_terms(kind, sig, world, cand.accum_dtype, cand.flow)
     ext = chunk_extent(kind, sig)
     out = {
         "wire_bytes_per_step": wire,

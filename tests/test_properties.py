@@ -180,3 +180,41 @@ def test_error_feedback_contract(scale, n):
                                rtol=1e-5, atol=1e-5 * float(scale))
     # bounded quantization error per element
     assert np.abs(np.asarray(err1)).max() <= float(s) * 0.5 + 1e-6
+
+
+# ---- quantized wires (QuantSpec layer) ---------------------------------------
+
+@SET
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3),
+       granularity=st.sampled_from(["per_tile", "per_channel"]))
+def test_wire_quant_roundtrip_bound(seed, scale, granularity):
+    """|x - deq(quant(x))| <= scale/2 elementwise: symmetric absmax maps the
+    extreme exactly onto the +/-127 endpoint, so clipping never truncates."""
+    from repro.core.quant import dequantize, quantize
+
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(16, 24) * scale, jnp.float32)
+    payload = quantize(x, "int8", granularity)
+    bound = 0.5 * np.asarray(payload.scale, np.float32)
+    err = np.abs(np.asarray(dequantize(payload, jnp.float32)) - np.asarray(x))
+    assert (err <= bound + 1e-6 * scale).all()
+
+
+@SET
+@given(seed=st.integers(0, 2**16), world=st.sampled_from([1, 2, 4, 8, 16]))
+def test_wire_quant_error_independent_of_world(seed, world):
+    """Per-tile scales are applied ONCE at each AG tile's origin (wire-edge
+    encode), so the end-to-end gather->dequant->GEMM error obeys a bound with
+    no world-size term: each shard's scale <= the global-absmax scale."""
+    from repro.core.quant import dequantize, quantize
+
+    rng = np.random.RandomState(seed)
+    m, k, n = 8, 16, 8
+    x = rng.randn(world * m, k).astype(np.float32)
+    w = rng.randn(k, n).astype(np.float32)
+    deq = np.concatenate([
+        np.asarray(dequantize(quantize(jnp.asarray(s), "int8"), jnp.float32))
+        for s in np.split(x, world, axis=0)])
+    err = np.abs(deq @ w - x @ w).max()
+    bound = k * (np.abs(x).max() / 254.0 + 1e-6) * np.abs(w).max()
+    assert err <= bound
